@@ -1,0 +1,43 @@
+"""Beyond-paper ablation: convergence TIME and compression composition.
+
+The paper's P1 objective is convergence time under wireless constraints; this
+ablation measures (a) wall-clock seconds-to-accuracy per strategy using the
+eq. 10 latency model (synchronous straggler semantics), and (b) how update
+compression (top-k / ternary, related work [4][16][17]) composes with EARA:
+rounds x bits-per-round.
+"""
+from __future__ import annotations
+
+from benchmarks.common import QUICK, emit
+from repro.core.compression import CompressionSpec
+from repro.core.hfl import HFLSchedule
+from repro.federated import build_scenario
+from repro.models.cnn1d import HEARTBEAT_CNN, cnn_init
+
+import jax
+
+
+def main() -> None:
+    sc = build_scenario("heartbeat", scale=0.03 if QUICK else 0.2, seed=0,
+                        n_test_per_class=60 if QUICK else 300)
+    sched = HFLSchedule(1, 4)
+    rounds = 3 if QUICK else 12
+    target = 0.95
+    for strat in ("dba", "eara-sca"):
+        a = sc.assign(strat)
+        res = sc.simulate(a.lam, cloud_rounds=rounds, schedule=sched,
+                          wall_clock=True, seed=0)
+        r = res.rounds_to_accuracy(target)
+        t = res.wall_seconds * (r / rounds if r else 1.0)
+        emit(f"time_to_acc_{strat}", 0.0,
+             f"rounds_to_{target}={r} wall_s~{t:.1f} (straggler-synchronous eq.10)")
+    # compression composition: bits per EU per edge round
+    params = cnn_init(jax.random.PRNGKey(0), HEARTBEAT_CNN)
+    for kind, kw in (("none", {}), ("topk", {"fraction": 0.01}), ("ternary", {})):
+        spec = CompressionSpec(kind, **kw)
+        emit(f"compression_bits_{kind}", 0.0,
+             f"{spec.bits(params)/8e3:.1f} KB/update (x EARA round reduction multiplies)")
+
+
+if __name__ == "__main__":
+    main()

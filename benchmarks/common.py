@@ -1,0 +1,34 @@
+"""Shared benchmark utilities: timing + CSV emission."""
+from __future__ import annotations
+
+import os
+import time
+from typing import Callable, List
+
+QUICK = os.environ.get("BENCH_FULL", "") == ""
+
+_rows: List[str] = []
+
+
+def emit(name: str, us_per_call: float, derived: str = "") -> None:
+    row = f"{name},{us_per_call:.1f},{derived}"
+    _rows.append(row)
+    print(row, flush=True)
+
+
+def rows() -> List[str]:
+    return list(_rows)
+
+
+def timeit(fn: Callable, *args, repeats: int = 3, **kw) -> float:
+    fn(*args, **kw)  # warmup / compile
+    t0 = time.perf_counter()
+    for _ in range(repeats):
+        out = fn(*args, **kw)
+    try:
+        import jax
+
+        jax.block_until_ready(out)
+    except Exception:
+        pass
+    return (time.perf_counter() - t0) / repeats * 1e6

@@ -1,0 +1,59 @@
+"""Paper Fig. 4: KLD of all edge nodes vs EU-edge distance, per strategy.
+
+Setups: (a) 3 edges / 13 EUs (Seizure), (b) 5 edges / 18 EUs (Heartbeat).
+Expected reproduction: EARA-DCA <= EARA-SCA < DBA at small distance; EARA
+converges to DBA as distance grows (energy constraint binds).  EARA-SCA+
+(beyond-paper local search) is included.
+"""
+from __future__ import annotations
+
+import time
+
+import numpy as np
+
+from benchmarks.common import QUICK, emit
+from repro.federated import build_scenario
+
+STRATEGIES = ["dba", "eara-sca", "eara-dca", "eara-sca+"]
+
+
+def run(dataset: str, distances, seeds) -> dict:
+    out = {s: [] for s in STRATEGIES}
+    for dist in distances:
+        accum = {s: [] for s in STRATEGIES}
+        for seed in seeds:
+            sc = build_scenario(dataset, scale=0.02, seed=seed, mean_dist=dist,
+                                n_test_per_class=10)
+            for s in STRATEGIES:
+                accum[s].append(sc.assign(s).kld_total)
+        for s in STRATEGIES:
+            out[s].append(float(np.mean(accum[s])))
+    return out
+
+
+def main() -> None:
+    distances = [100, 400, 1600] if QUICK else [50, 100, 200, 400, 800, 1600, 3200]
+    seeds = [0, 1] if QUICK else list(range(5))
+    for dataset in ("seizure", "heartbeat"):
+        t0 = time.perf_counter()
+        res = run(dataset, distances, seeds)
+        us = (time.perf_counter() - t0) * 1e6
+        for s in STRATEGIES:
+            emit(
+                f"fig4_kld_{dataset}_{s}",
+                us / (len(distances) * len(seeds) * len(STRATEGIES)),
+                "kld@" + ";".join(f"{d}m={v:.3f}" for d, v in zip(distances, res[s])),
+            )
+        # the paper's ordering claims at the shortest distance
+        ok = (res["eara-sca"][0] <= res["dba"][0] + 1e-6
+              and res["eara-dca"][0] <= res["eara-sca"][0] + 0.3)
+        assert ok  # core reproduction claim — intentionally strict
+        emit(
+            f"fig4_check_{dataset}", 0.0,
+            f"EARA<=DBA@near OK; dba={res['dba'][0]:.2f} sca={res['eara-sca'][0]:.2f} "
+            f"dca={res['eara-dca'][0]:.2f} sca+={res['eara-sca+'][0]:.2f}",
+        )
+
+
+if __name__ == "__main__":
+    main()

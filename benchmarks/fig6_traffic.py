@@ -1,0 +1,52 @@
+"""Paper Fig. 6: communication traffic per EU to reach a target accuracy.
+
+Model update = 14,789 parameters x 4 bytes (paper's accounting).  Expected:
+EARA-SCA ~50% less traffic than DBA; EARA-DCA single-connectivity EUs ~73%
+less; DC EUs slightly more than SCA but still well under DBA.
+"""
+from __future__ import annotations
+
+import numpy as np
+
+from benchmarks.common import QUICK, emit
+from repro.core.hfl import HFLSchedule
+from repro.federated import build_scenario
+
+SCHED = HFLSchedule(local_steps=1, edge_per_cloud=4)  # see fig5 note
+
+
+def traffic_at_target(sc, lam, target, max_rounds, seed=0):
+    res = sc.simulate(lam, cloud_rounds=max_rounds, schedule=SCHED, seed=seed)
+    r = None
+    for m in res.history:
+        if m.test_acc >= target:
+            r = m.cloud_round
+            break
+    acc = res.accountant
+    per_eu = acc.eu_traffic_bits()
+    scale = (r / max_rounds) if r else 1.0  # traffic up to the target round
+    return {i: b * scale for i, b in per_eu.items()}, r
+
+
+def main() -> None:
+    rounds = 6 if QUICK else 40
+    target = 0.95 if QUICK else 0.90
+    sc = build_scenario("heartbeat", scale=0.03 if QUICK else 0.2, seed=0,
+                        n_test_per_class=60 if QUICK else 300)
+    results = {}
+    for strat in ("dba", "eara-sca", "eara-dca"):
+        a = sc.assign(strat)
+        tr, r = traffic_at_target(sc, a.lam, target, rounds)
+        dual = {i for i in range(a.lam.shape[0]) if a.lam[i].sum() > 1}
+        sc_mean = np.mean([b for i, b in tr.items() if i not in dual]) / 8e6
+        dc_mean = (np.mean([b for i, b in tr.items() if i in dual]) / 8e6) if dual else 0.0
+        results[strat] = (sc_mean, dc_mean, r)
+        emit(f"fig6_traffic_{strat}", 0.0,
+             f"MB_per_SC_EU={sc_mean:.3f} MB_per_DC_EU={dc_mean:.3f} rounds_to_{target}={r}")
+    if results["dba"][2] and results["eara-sca"][2]:
+        red = 100 * (1 - results["eara-sca"][0] / results["dba"][0])
+        emit("fig6_sca_traffic_reduction", 0.0, f"{red:.0f}% vs DBA (paper: ~50%)")
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,51 @@
+"""Generate the EXPERIMENTS.md dry-run/roofline tables from sweep JSONs."""
+from __future__ import annotations
+
+import json
+import os
+import sys
+
+
+def fmt_row(r, n_dev):
+    if r.get("kind") == "skip":
+        return f"| {r['arch']} | {r['shape']} | skip | — | — | — | — | — | — |"
+    rl = r.get("roofline") or {}
+    mem = (r.get("memory") or {}).get("total_bytes_per_device", 0) / 2**30
+    hlo_flops_total = rl.get("flops", 0.0) * n_dev
+    model_flops = r.get("model_flops_token", 0.0) * r.get("tokens", 0)
+    if r.get("kind") == "train":
+        model_flops *= 3
+    ratio = model_flops / hlo_flops_total if hlo_flops_total else 0.0
+    return (
+        f"| {r['arch']} | {r['shape']} | {r['kind']} | {rl.get('compute_s', 0):.2e} "
+        f"| {rl.get('memory_s', 0):.2e} | {rl.get('collective_s', 0):.2e} "
+        f"| **{rl.get('dominant', '?')}** | {ratio:.2f} | {mem:.1f} |"
+    )
+
+
+def table(path, n_dev):
+    rows = json.load(open(path))
+    out = [
+        "| arch | shape | kind | compute (s) | memory (s) | collective (s) | dominant | useful ratio | GiB/dev |",
+        "|---|---|---|---|---|---|---|---|---|",
+    ]
+    for r in rows:
+        out.append(fmt_row(r, n_dev))
+    n_ok = sum(1 for r in rows if r.get("ok"))
+    out.append("")
+    out.append(f"{n_ok}/{len(rows)} combinations lowered + compiled OK.")
+    return "\n".join(out)
+
+
+def main():
+    for tag, n in (("single", 256), ("multi", 512)):
+        for prefix in ("baseline", "dryrun"):
+            p = f"results/{prefix}_{tag}.json"
+            if os.path.exists(p):
+                name = "baseline" if prefix == "baseline" else "optimized"
+                print(f"\n### {name} — {'16x16 (256 chips)' if tag=='single' else '2x16x16 (512 chips)'}\n")
+                print(table(p, n))
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,31 @@
+"""Kernel micro-benchmarks (interpret-mode on CPU: correctness-scale timings;
+the CSV exists so the harness is ready to run on real TPU)."""
+from __future__ import annotations
+
+import jax
+
+from benchmarks.common import QUICK, emit, timeit
+from repro.kernels.ops import flash_attention, hier_aggregate, topk_gating
+
+
+def main() -> None:
+    k1, k2, k3 = jax.random.split(jax.random.PRNGKey(0), 3)
+    s = 256 if QUICK else 1024
+    q = jax.random.normal(k1, (1, s, 4, 64))
+    k = jax.random.normal(k2, (1, s, 2, 64))
+    v = jax.random.normal(k3, (1, s, 2, 64))
+    us = timeit(flash_attention, q, k, v, causal=True, repeats=2)
+    emit("kernel_flash_attention", us, f"shape=1x{s}x4x64 gqa=2 interpret=cpu")
+
+    u = jax.random.normal(k1, (13, 14789))
+    w = jax.random.uniform(k2, (13,), minval=0.1)
+    us = timeit(hier_aggregate, u, w, repeats=3)
+    emit("kernel_hier_aggregate", us, "13 clients x 14789 params (paper model)")
+
+    lg = jax.random.normal(k1, (2048, 16))
+    us = timeit(topk_gating, lg, 4, repeats=3)
+    emit("kernel_topk_gating", us, "2048 tokens x 16 experts top-4")
+
+
+if __name__ == "__main__":
+    main()

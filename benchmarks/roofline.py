@@ -1,0 +1,49 @@
+"""Roofline table from the dry-run sweep (EXPERIMENTS.md §Roofline source).
+
+Reads results/dryrun_single.json (+ _multi.json if present) and emits, per
+(arch x shape): the three roofline terms in seconds, the dominant bottleneck,
+MODEL_FLOPS = 6 N_active D, and the usefulness ratio MODEL_FLOPS / HLO_FLOPS.
+"""
+from __future__ import annotations
+
+import json
+import os
+
+from benchmarks.common import emit
+
+RESULTS = [
+    ("single", os.path.join("results", "dryrun_single.json")),
+    ("multi", os.path.join("results", "dryrun_multi.json")),
+]
+
+
+def main() -> None:
+    for tag, path in RESULTS:
+        if not os.path.exists(path):
+            emit(f"roofline_{tag}", 0.0, "missing (run repro.launch.dryrun)")
+            continue
+        rows = json.load(open(path))
+        n_ok = 0
+        for r in rows:
+            if not r.get("ok") or r.get("kind") == "skip" or not r.get("roofline"):
+                continue
+            n_ok += 1
+            rl = r["roofline"]
+            n_dev = 512 if tag == "multi" else 256
+            hlo_flops_total = rl["flops"] * n_dev
+            model_flops = r["model_flops_token"] * r["tokens"]
+            if r["kind"] == "train":
+                model_flops *= 3  # fwd + bwd(2x)
+            ratio = model_flops / hlo_flops_total if hlo_flops_total else 0.0
+            emit(
+                f"roofline_{tag}_{r['arch']}_{r['shape']}",
+                r["seconds"] * 1e6,
+                f"compute={rl['compute_s']:.3e}s memory={rl['memory_s']:.3e}s "
+                f"collective={rl['collective_s']:.3e}s dominant={rl['dominant']} "
+                f"useful_ratio={ratio:.2f} mem_gib={r['memory']['total_bytes_per_device']/2**30:.1f}",
+            )
+        emit(f"roofline_{tag}_summary", 0.0, f"{n_ok} pairs analyzed")
+
+
+if __name__ == "__main__":
+    main()

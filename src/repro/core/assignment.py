@@ -1,0 +1,301 @@
+"""EU Assignment and Resource Allocation — the paper's Algorithm 1 (EARA).
+
+Pipeline (Sec. 5.2):
+  1. solve the LP relaxation P2 (repro.core.lp) for fractional lambda;
+  2. round — SCA (eq. 35, argmax -> one edge) or DCA (top-2 with threshold
+     nu, modeling 5G dual connectivity + multicast);
+  3. greedy per-edge bandwidth allocation: rank assigned EUs by *importance*
+     (marginal KLD contribution), give each the minimum bandwidth satisfying
+     the latency constraint (20), stop when B_j^m is exhausted.
+
+Baselines:
+  * ``dba_assignment``     — distance-based (nearest edge), the paper's
+    state-of-the-art comparison [18], [42];
+  * ``random_assignment``;
+  * ``optimal_ilp``        — brute-force exact optimum for small instances
+    (test oracle for the "near-optimal" claim).
+"""
+from __future__ import annotations
+
+import dataclasses
+import itertools
+from typing import Optional
+
+import numpy as np
+import jax.numpy as jnp
+
+from repro.core.kld import pairwise_l1_objective, total_kld_uniform
+from repro.core.lp import solve_lp_eg, solve_lp_scipy
+from repro.wireless.channel import CostMatrices, WirelessParams, tx_energy, uplink_latency
+
+
+@dataclasses.dataclass
+class AssignmentResult:
+    lam: np.ndarray  # (M, N) binary (rows sum to 1 for SCA; up to 2 for DCA)
+    lam_frac: Optional[np.ndarray]  # LP fractional solution (None for baselines)
+    bandwidth: Optional[np.ndarray]  # (M, N) Hz allocated (0 if unassigned/starved)
+    kld_total: float  # P1 objective at the rounded assignment
+    objective_l1: float  # eq. 29 objective at the rounded assignment
+    served: Optional[np.ndarray] = None  # (M,) EU received bandwidth
+
+    @property
+    def edges_of(self) -> list:
+        return [list(np.nonzero(self.lam[i])[0]) for i in range(self.lam.shape[0])]
+
+
+# --------------------------------------------------------------------------
+# rounding (Alg. 1 lines 4-15)
+# --------------------------------------------------------------------------
+def round_sca(lam_frac: np.ndarray, feasible: np.ndarray) -> np.ndarray:
+    """eq. 35: lambda*_ij = 1 at argmax_j, 0 elsewhere (within feasible set)."""
+    masked = np.where(feasible, lam_frac, -np.inf)
+    lam = np.zeros_like(lam_frac)
+    lam[np.arange(lam.shape[0]), masked.argmax(axis=1)] = 1.0
+    return lam
+
+
+def round_dca(lam_frac: np.ndarray, feasible: np.ndarray, nu: float = 0.3) -> np.ndarray:
+    """Top-1 always; top-2 additionally iff lambda^2_ij > nu (Alg. 1 l. 7-15)."""
+    masked = np.where(feasible, lam_frac, -np.inf)
+    order = np.argsort(-masked, axis=1)
+    lam = np.zeros_like(lam_frac)
+    rows = np.arange(lam.shape[0])
+    lam[rows, order[:, 0]] = 1.0
+    if lam_frac.shape[1] > 1:
+        second = order[:, 1]
+        val2 = masked[rows, second]
+        take = (val2 > nu) & np.isfinite(val2)
+        lam[rows[take], second[take]] = 1.0
+    return lam
+
+
+# --------------------------------------------------------------------------
+# importance + bandwidth allocation (Alg. 1 lines 18-26)
+# --------------------------------------------------------------------------
+def eu_importance(lam: np.ndarray, class_counts: np.ndarray) -> np.ndarray:
+    """Importance of each assigned EU = KLD increase if the EU were dropped.
+
+    "EUs with data classes that are different from the available ones at edge
+    node j will be weighted more than others" — the marginal-contribution
+    definition realizes exactly that.
+    """
+    base = float(total_kld_uniform(jnp.asarray(lam), jnp.asarray(class_counts)))
+    imp = np.zeros(lam.shape[0])
+    for i in range(lam.shape[0]):
+        if lam[i].sum() == 0:
+            continue
+        drop = lam.copy()
+        drop[i] = 0.0
+        imp[i] = (
+            float(total_kld_uniform(jnp.asarray(drop), jnp.asarray(class_counts)))
+            - base
+        )
+    return imp
+
+
+def min_bandwidth_for_latency(
+    bits: float,
+    gain: float,
+    p_tx: float,
+    compute_time: float,
+    p: WirelessParams,
+    tol: float = 1e-3,
+) -> float:
+    """Smallest B such that bits/rate(B) + xi + T_c <= T^m (bisection).
+
+    rate(B) = B log2(1 + P g/(N0 B)) is increasing in B, so latency is
+    decreasing in B and bisection is exact.
+    """
+    budget = p.max_latency - p.xi_access_delay - compute_time
+    if budget <= 0:
+        return float("inf")
+
+    def latency(b):
+        rate = b * np.log2(1.0 + p_tx * gain / (p.noise_density * b))
+        return bits / max(rate, 1e-9)
+
+    lo, hi = 1e3, p.bandwidth_total
+    if latency(hi) > budget:
+        return float("inf")
+    while hi / lo > 1 + tol:
+        mid = np.sqrt(lo * hi)
+        if latency(mid) <= budget:
+            hi = mid
+        else:
+            lo = mid
+    return hi
+
+
+def allocate_bandwidth(
+    lam: np.ndarray,
+    class_counts: np.ndarray,
+    cost: CostMatrices,
+    topo_tx_power: np.ndarray,
+    p: WirelessParams,
+    model_bits: float,
+) -> tuple:
+    """Greedy per-edge allocation (Alg. 1, at-the-edge phase).
+
+    Returns (bandwidth (M,N), served (M,) bool).
+    """
+    m, n = lam.shape
+    bw = np.zeros((m, n))
+    served = np.zeros(m, bool)
+    imp = eu_importance(lam, class_counts)
+    for j in range(n):
+        members = np.nonzero(lam[:, j])[0]
+        if len(members) == 0:
+            continue
+        order = members[np.argsort(-imp[members])]  # descending importance
+        budget = p.bandwidth_total
+        for i in order:
+            need = min_bandwidth_for_latency(
+                model_bits,
+                float(cost.gain[i, j]),
+                float(topo_tx_power[i]),
+                float(cost.compute_time[i]),
+                p,
+            )
+            if not np.isfinite(need) or need > budget:
+                continue  # starved: EU keeps assignment but no allocation
+            bw[i, j] = need
+            served[i] = True
+            budget -= need
+            if budget <= 0:
+                break
+    return bw, served
+
+
+def local_search_refine(
+    lam: np.ndarray,
+    class_counts: np.ndarray,
+    feasible: np.ndarray,
+    max_rounds: int = 20,
+) -> np.ndarray:
+    """BEYOND-PAPER: 1-move local search on the rounded assignment.
+
+    Repeatedly relocates the single EU whose move most reduces the exact P1
+    KLD objective (subject to feasibility) until a local optimum.  Runs in
+    O(rounds * M * N) KLD evaluations; closes most of the LP-rounding gap
+    (see EXPERIMENTS.md §Perf / benchmarks).  Not part of the paper's Alg. 1.
+    """
+    lam = lam.copy()
+    cc = jnp.asarray(class_counts)
+    m, n = lam.shape
+
+    def score(x):
+        return float(total_kld_uniform(jnp.asarray(x), cc))
+
+    best = score(lam)
+    for _ in range(max_rounds):
+        improved = False
+        for i in range(m):
+            cur = np.nonzero(lam[i])[0]
+            if len(cur) != 1:
+                continue  # only refine single-connectivity rows
+            for j in range(n):
+                if j == cur[0] or not feasible[i, j]:
+                    continue
+                trial = lam.copy()
+                trial[i, cur[0]] = 0.0
+                trial[i, j] = 1.0
+                s = score(trial)
+                if s < best - 1e-9:
+                    lam, best, improved = trial, s, True
+        if not improved:
+            break
+    return lam
+
+
+# --------------------------------------------------------------------------
+# full EARA (Alg. 1) + baselines
+# --------------------------------------------------------------------------
+def _finish(lam, lam_frac, class_counts, bw=None, served=None) -> AssignmentResult:
+    lam_j = jnp.asarray(lam)
+    cc_j = jnp.asarray(class_counts)
+    return AssignmentResult(
+        lam=np.asarray(lam),
+        lam_frac=None if lam_frac is None else np.asarray(lam_frac),
+        bandwidth=bw,
+        kld_total=float(total_kld_uniform(lam_j, cc_j)),
+        objective_l1=float(pairwise_l1_objective(lam_j, cc_j)),
+        served=served,
+    )
+
+
+def eara(
+    class_counts: np.ndarray,
+    cost: CostMatrices,
+    p: WirelessParams,
+    model_bits: float,
+    topo_tx_power: np.ndarray,
+    mode: str = "sca",
+    nu: float = 0.3,
+    solver: str = "eg",
+    allocate: bool = True,
+    refine: bool = False,
+) -> AssignmentResult:
+    """Algorithm 1 end-to-end.  ``refine=True`` adds the beyond-paper
+    local-search pass (EARA++) after rounding."""
+    feasible = cost.feasible
+    if solver == "scipy":
+        lam_frac = solve_lp_scipy(class_counts, feasible)
+    else:
+        lam_frac = np.asarray(
+            solve_lp_eg(jnp.asarray(class_counts, jnp.float32), jnp.asarray(feasible))
+        )
+    if mode == "sca":
+        lam = round_sca(lam_frac, feasible)
+    elif mode == "dca":
+        lam = round_dca(lam_frac, feasible, nu=nu)
+    else:
+        raise ValueError(f"unknown EARA mode {mode!r}")
+    if refine:
+        lam = local_search_refine(lam, class_counts, feasible)
+    bw = served = None
+    if allocate:
+        bw, served = allocate_bandwidth(
+            lam, class_counts, cost, topo_tx_power, p, model_bits
+        )
+    return _finish(lam, lam_frac, class_counts, bw, served)
+
+
+def dba_assignment(class_counts: np.ndarray, dist: np.ndarray) -> AssignmentResult:
+    """Distance-Based Allocation: every EU to its nearest edge node."""
+    m, n = dist.shape
+    lam = np.zeros((m, n))
+    lam[np.arange(m), dist.argmin(axis=1)] = 1.0
+    return _finish(lam, None, class_counts)
+
+
+def random_assignment(class_counts: np.ndarray, n_edges: int, seed: int = 0) -> AssignmentResult:
+    rng = np.random.default_rng(seed)
+    m = class_counts.shape[0]
+    lam = np.zeros((m, n_edges))
+    lam[np.arange(m), rng.integers(0, n_edges, m)] = 1.0
+    return _finish(lam, None, class_counts)
+
+
+def optimal_ilp(
+    class_counts: np.ndarray, feasible: np.ndarray, objective: str = "kld"
+) -> AssignmentResult:
+    """Brute-force exact optimum over all feasible integer assignments.
+
+    Exponential in M — only for test oracles (M <= ~10).
+    """
+    m, n = feasible.shape
+    if m > 12:
+        raise ValueError("optimal_ilp is a brute-force oracle; M too large")
+    choices = [np.nonzero(feasible[i])[0] for i in range(m)]
+    best, best_val = None, np.inf
+    cc = jnp.asarray(class_counts)
+    for combo in itertools.product(*choices):
+        lam = np.zeros((m, n))
+        lam[np.arange(m), list(combo)] = 1.0
+        if objective == "kld":
+            val = float(total_kld_uniform(jnp.asarray(lam), cc))
+        else:
+            val = float(pairwise_l1_objective(jnp.asarray(lam), cc))
+        if val < best_val - 1e-12:
+            best_val, best = val, lam
+    return _finish(best, None, class_counts)

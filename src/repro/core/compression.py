@@ -1,0 +1,100 @@
+"""Model-update compression baselines (the paper's related work [4],[16],[17]).
+
+The paper positions EARA against communication-efficient FL via
+sparsification/quantization; these are the standard reference schemes, usable
+ON TOP of the hierarchical assignment (they compose — EARA cuts rounds,
+compression cuts bits per round):
+
+  * top-k sparsification with error feedback (Aji & Heafield '17)
+  * ternary quantization / signSGD-style with per-tensor scale (STC, Sattler
+    et al. '20 — simplified: no Golomb coding, bits counted analytically)
+
+All operators are pure-jnp pytree transforms; ``CompressionSpec.bits(tree)``
+gives the on-the-wire payload for the CommAccountant.
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Tuple
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.utils.tree import tree_num_params
+
+
+def topk_sparsify(tree, fraction: float, error=None) -> Tuple[object, object]:
+    """Keep the largest-|value| ``fraction`` of entries per leaf; the rest
+    accumulate into the error-feedback state (returned for the next round).
+
+    Returns (sparse_tree, new_error).
+    """
+    if error is None:
+        error = jax.tree.map(jnp.zeros_like, tree)
+
+    def one(x, e):
+        xe = x + e
+        flat = jnp.abs(xe).ravel()
+        k = max(1, int(np.ceil(flat.size * fraction)))
+        thresh = jnp.sort(flat)[-k]
+        mask = jnp.abs(xe) >= thresh
+        kept = jnp.where(mask, xe, 0)
+        return kept, xe - kept
+
+    pairs = jax.tree.map(one, tree, error)
+    sparse = jax.tree.map(lambda p: p[0], pairs, is_leaf=lambda p: isinstance(p, tuple))
+    new_err = jax.tree.map(lambda p: p[1], pairs, is_leaf=lambda p: isinstance(p, tuple))
+    return sparse, new_err
+
+
+def ternarize(tree, error=None) -> Tuple[object, object]:
+    """STC-style ternarization: x -> mu * sign(x) on the top-magnitude half,
+    with per-leaf scale mu = mean |kept|; error feedback as above."""
+    if error is None:
+        error = jax.tree.map(jnp.zeros_like, tree)
+
+    def one(x, e):
+        xe = x + e
+        thresh = jnp.mean(jnp.abs(xe))
+        mask = jnp.abs(xe) >= thresh
+        mu = jnp.sum(jnp.abs(xe) * mask) / jnp.maximum(mask.sum(), 1)
+        q = jnp.where(mask, mu * jnp.sign(xe), 0.0).astype(x.dtype)
+        return q, xe - q
+
+    pairs = jax.tree.map(one, tree, error)
+    q = jax.tree.map(lambda p: p[0], pairs, is_leaf=lambda p: isinstance(p, tuple))
+    new_err = jax.tree.map(lambda p: p[1], pairs, is_leaf=lambda p: isinstance(p, tuple))
+    return q, new_err
+
+
+@dataclasses.dataclass(frozen=True)
+class CompressionSpec:
+    """Payload accounting for the CommAccountant."""
+
+    kind: str = "none"  # none | topk | ternary
+    fraction: float = 0.01  # top-k keep fraction
+    index_bits: int = 32
+    value_bits: int = 32
+
+    def bits(self, tree) -> float:
+        n = tree_num_params(tree)
+        if self.kind == "none":
+            return float(n * self.value_bits)
+        if self.kind == "topk":
+            k = n * self.fraction
+            return float(k * (self.index_bits + self.value_bits))
+        if self.kind == "ternary":
+            # ~half the entries nonzero; 2 bits/entry (dense ternary code)
+            # + one fp32 scale per leaf
+            return float(n * 2 + 32 * len(jax.tree.leaves(tree)))
+        raise ValueError(self.kind)
+
+    def apply(self, tree, error=None):
+        if self.kind == "none":
+            return tree, error
+        if self.kind == "topk":
+            return topk_sparsify(tree, self.fraction, error)
+        if self.kind == "ternary":
+            return ternarize(tree, error)
+        raise ValueError(self.kind)

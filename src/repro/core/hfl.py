@@ -1,0 +1,134 @@
+"""Hierarchical FL aggregation schedule and accounting (paper Sec. 4.1).
+
+* edge aggregation (eq. 6-7):  w_j^a   = sum_i sigma_ij w_i^{a T'}
+* cloud aggregation (eq. 8-9): w_f^b   = sum_j sigma_j  w_j^{b T}
+* divergence tracking (eq. 17 empirical counterpart): ||w_f - w_c||
+
+``HFLSchedule`` answers, for a global step t, whether an edge / cloud sync
+fires; ``CommAccountant`` converts sync events into per-EU and edge<->cloud
+traffic (the quantities in paper Fig. 5/6).
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Dict, List, Sequence
+
+import numpy as np
+
+from repro.utils.tree import tree_weighted_mean, tree_l2_norm, tree_sub
+
+
+@dataclasses.dataclass(frozen=True)
+class HFLSchedule:
+    """T' local steps per edge sync; T edge syncs per cloud sync."""
+
+    local_steps: int = 1  # T'
+    edge_per_cloud: int = 1  # T
+
+    @property
+    def cloud_period(self) -> int:
+        return self.local_steps * self.edge_per_cloud
+
+    def edge_sync_at(self, step: int) -> bool:
+        """1-indexed step count: sync after every T' local steps."""
+        return step % self.local_steps == 0
+
+    def cloud_sync_at(self, step: int) -> bool:
+        return step % self.cloud_period == 0
+
+
+def edge_aggregate(models: Sequence, data_sizes: Sequence[float]):
+    """eq. 6: weighted average by local dataset size sigma_ij (eq. 7)."""
+    return tree_weighted_mean(models, np.asarray(data_sizes, dtype=np.float64))
+
+
+def cloud_aggregate(edge_models: Sequence, edge_data_sizes: Sequence[float]):
+    """eq. 8: weighted average across edges by sigma_j (eq. 9)."""
+    return tree_weighted_mean(edge_models, np.asarray(edge_data_sizes, dtype=np.float64))
+
+
+def weight_divergence(w_f, w_c) -> float:
+    """Empirical ||w_f - w_c|| of eq. 17's left-hand side."""
+    return float(tree_l2_norm(tree_sub(w_f, w_c)))
+
+
+@dataclasses.dataclass
+class CommAccountant:
+    """Counts rounds and bytes exactly as the paper's Figs. 5-6 do.
+
+    * EU->edge traffic: every edge sync, each EU uploads |W| bits and
+      downloads |W| bits; an EU assigned to two edges (DCA) uploads once via
+      multicast on a shared resource share (paper: ~3% overhead) but the
+      edges each send a downlink copy.
+    * edge->cloud: every cloud sync, each edge exchanges |W| up + |W| down.
+    """
+
+    model_bits: float
+    dca_multicast_overhead: float = 0.03
+
+    edge_rounds: int = 0
+    cloud_rounds: int = 0
+    eu_bits_up: Dict[int, float] = dataclasses.field(default_factory=dict)
+    eu_bits_down: Dict[int, float] = dataclasses.field(default_factory=dict)
+    edge_cloud_bits: float = 0.0
+
+    def on_edge_sync(self, assignment: np.ndarray) -> None:
+        self.edge_rounds += 1
+        for i in range(assignment.shape[0]):
+            edges = np.nonzero(assignment[i])[0]
+            if len(edges) == 0:
+                continue
+            up = self.model_bits * (
+                1.0 + (self.dca_multicast_overhead if len(edges) > 1 else 0.0)
+            )
+            down = self.model_bits * len(edges)
+            self.eu_bits_up[i] = self.eu_bits_up.get(i, 0.0) + up
+            self.eu_bits_down[i] = self.eu_bits_down.get(i, 0.0) + down
+
+    def on_cloud_sync(self, n_edges: int) -> None:
+        self.cloud_rounds += 1
+        self.edge_cloud_bits += 2.0 * self.model_bits * n_edges
+
+    def eu_traffic_bits(self) -> Dict[int, float]:
+        keys = set(self.eu_bits_up) | set(self.eu_bits_down)
+        return {
+            i: self.eu_bits_up.get(i, 0.0) + self.eu_bits_down.get(i, 0.0)
+            for i in keys
+        }
+
+
+@dataclasses.dataclass
+class WallClock:
+    """Synchronous-round wall-clock model (paper Sec. 4.2 / eq. 10).
+
+    Every edge round costs max_i (T_i^c + L_ij) over the PARTICIPATING EUs
+    (synchronous FL waits for the slowest = the straggler effect the paper
+    discusses); edge->cloud sync adds a fixed backhaul latency.  Feed it the
+    CostMatrices used by the assignment so 'convergence time' (the paper's
+    actual objective) is measurable, not just rounds.
+    """
+
+    latency: "object"  # (M, N) total per-EU upload latency incl. compute
+    backhaul_s: float = 0.05
+    seconds: float = 0.0
+
+    def on_edge_sync(self, assignment, participating=None) -> float:
+        import numpy as _np
+
+        lam = _np.asarray(assignment)
+        m = lam.shape[0]
+        mask = _np.ones(m, bool) if participating is None else _np.asarray(participating)
+        worst = 0.0
+        for i in range(m):
+            if not mask[i]:
+                continue
+            edges = _np.nonzero(lam[i])[0]
+            if len(edges) == 0:
+                continue
+            worst = max(worst, float(_np.min(self.latency[i, edges])))
+        self.seconds += worst
+        return worst
+
+    def on_cloud_sync(self) -> float:
+        self.seconds += self.backhaul_s
+        return self.backhaul_s

@@ -1,0 +1,179 @@
+"""Solvers for the relaxed assignment problem P2 (eq. 30-34).
+
+Two interchangeable implementations:
+
+* ``solve_lp_scipy``  — exact LP via scipy.optimize.linprog after the standard
+  |x| <= t linearization of the pairwise-L1 objective.  Used as the oracle in
+  tests and for small/medium instances on the host.
+* ``solve_lp_eg``     — jax-native projected/exponentiated (mirror-descent)
+  subgradient solver over the row simplexes.  jit-compatible, runs on device,
+  scales to thousands of EUs, and handles the latency/energy constraints
+  (31)-(32) as per-pair feasibility masks (exact for the rounded integer
+  solution, see DESIGN.md Sec. 2).
+
+Both return a fractional lambda (M, N) with rows on the simplex, supported
+only on feasible (i, j) pairs.
+"""
+from __future__ import annotations
+
+from functools import partial
+from typing import Optional
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.core.kld import edge_pairs, pairwise_l1_objective
+
+
+# --------------------------------------------------------------------------
+# scipy oracle
+# --------------------------------------------------------------------------
+def solve_lp_scipy(
+    class_counts: np.ndarray,
+    feasible: Optional[np.ndarray] = None,
+    latency: Optional[np.ndarray] = None,
+    energy: Optional[np.ndarray] = None,
+    max_latency: Optional[float] = None,
+    max_energy: Optional[float] = None,
+) -> np.ndarray:
+    """Exact LP solution of P2.
+
+    Variables: lambda (M*N) and t (P*K) with
+        minimize    sum(t)
+        subject to  +A_pk . lambda - t_pk <= 0
+                    -A_pk . lambda - t_pk <= 0
+                    sum_j lambda_ij = 1                        (33)
+                    0 <= lambda_ij <= 1 (0 where infeasible)   (34) + masks
+                    sum_j lambda_ij L_ij <= T^m - T^c_i        (31)
+                    sum_j lambda_ij E_ij <= E^m                (32)
+    """
+    from scipy.optimize import linprog
+    from scipy import sparse
+
+    cc = np.asarray(class_counts, dtype=np.float64)
+    m, k = cc.shape
+    if feasible is None:
+        feasible = np.ones((m, latency.shape[1] if latency is not None else 0), bool)
+    n = feasible.shape[1]
+    pairs = edge_pairs(n)
+    p = len(pairs)
+    n_lam = m * n
+    n_t = p * k
+
+    def lam_idx(i, j):
+        return i * n + j
+
+    # objective: minimize sum of t
+    c = np.concatenate([np.zeros(n_lam), np.ones(n_t)])
+
+    rows, cols, vals = [], [], []
+    b_ub = []
+    r = 0
+    for pi, (j, jp) in enumerate(pairs):
+        for ki in range(k):
+            t_col = n_lam + pi * k + ki
+            # +(sum_i lam_ij c - sum_i lam_ijp c) - t <= 0
+            for i in range(m):
+                if cc[i, ki] == 0.0:
+                    continue
+                rows += [r, r + 1]
+                cols += [lam_idx(i, j), lam_idx(i, j)]
+                vals += [cc[i, ki], -cc[i, ki]]
+                rows += [r, r + 1]
+                cols += [lam_idx(i, jp), lam_idx(i, jp)]
+                vals += [-cc[i, ki], cc[i, ki]]
+            rows += [r, r + 1]
+            cols += [t_col, t_col]
+            vals += [-1.0, -1.0]
+            b_ub += [0.0, 0.0]
+            r += 2
+    # latency / energy linear constraints
+    if latency is not None and max_latency is not None:
+        for i in range(m):
+            for j in range(n):
+                rows.append(r)
+                cols.append(lam_idx(i, j))
+                vals.append(float(latency[i, j]))
+            b_ub.append(float(max_latency))
+            r += 1
+    if energy is not None and max_energy is not None:
+        for i in range(m):
+            for j in range(n):
+                rows.append(r)
+                cols.append(lam_idx(i, j))
+                vals.append(float(energy[i, j]))
+            b_ub.append(float(max_energy))
+            r += 1
+
+    a_ub = sparse.coo_matrix((vals, (rows, cols)), shape=(r, n_lam + n_t))
+
+    # equality: rows sum to 1
+    er, ec, ev = [], [], []
+    for i in range(m):
+        for j in range(n):
+            er.append(i)
+            ec.append(lam_idx(i, j))
+            ev.append(1.0)
+    a_eq = sparse.coo_matrix((ev, (er, ec)), shape=(m, n_lam + n_t))
+    b_eq = np.ones(m)
+
+    bounds = []
+    for i in range(m):
+        for j in range(n):
+            bounds.append((0.0, 1.0 if feasible[i, j] else 0.0))
+    bounds += [(0.0, None)] * n_t
+
+    res = linprog(c, A_ub=a_ub, b_ub=b_ub, A_eq=a_eq, b_eq=b_eq, bounds=bounds, method="highs")
+    if not res.success:
+        raise RuntimeError(f"LP failed: {res.message}")
+    return res.x[:n_lam].reshape(m, n)
+
+
+# --------------------------------------------------------------------------
+# jax-native exponentiated-gradient solver
+# --------------------------------------------------------------------------
+@partial(jax.jit, static_argnames=("n_steps",))
+def solve_lp_eg(
+    class_counts: jnp.ndarray,
+    feasible: jnp.ndarray,
+    n_steps: int = 2000,
+    lr: float = 0.05,
+) -> jnp.ndarray:
+    """Mirror descent on the product of row simplexes.
+
+    Parameterize lambda_i = softmax(logits_i + log feasible_i); minimize the
+    (convex, piecewise-linear) eq. 29 objective by subgradient steps on the
+    logits.  Polyak-style averaging of iterates gives the LP-optimal
+    fractional solution in the limit; 2000 steps is ample for M, N <= a few
+    hundred (validated against the scipy oracle in tests).
+    """
+    cc = jnp.asarray(class_counts, jnp.float32)
+    mask = jnp.asarray(feasible, bool)  # (M, N) — N edges, cc is (M, K)
+    m = cc.shape[0]
+    neg_inf = jnp.where(mask, 0.0, -1e9)
+
+    def lam_of(logits):
+        return jax.nn.softmax(logits + neg_inf, axis=1)
+
+    def obj(logits):
+        return pairwise_l1_objective(lam_of(logits), cc) / jnp.maximum(cc.sum(), 1.0)
+
+    grad_fn = jax.grad(obj)
+
+    def body(t, carry):
+        logits, acc = carry
+        g = grad_fn(logits)
+        step = lr / jnp.sqrt(1.0 + t.astype(jnp.float32))
+        logits = logits - step * g * m  # scale-free step on normalized obj
+        acc = acc + lam_of(logits)
+        return logits, acc
+
+    logits0 = jnp.zeros(mask.shape, jnp.float32)
+    logits, acc = jax.lax.fori_loop(0, n_steps, body, (logits0, jnp.zeros(mask.shape, jnp.float32)))
+    # Prefer the last iterate if better than the average (both feasible).
+    lam_avg = acc / n_steps
+    lam_last = lam_of(logits)
+    better_last = pairwise_l1_objective(lam_last, cc) < pairwise_l1_objective(lam_avg, cc)
+    lam = jnp.where(better_last, lam_last, lam_avg)
+    return lam * mask / jnp.maximum((lam * mask).sum(axis=1, keepdims=True), 1e-12)

@@ -1,0 +1,190 @@
+"""Roofline-term extraction from compiled dry-run artifacts.
+
+compute   = HLO_FLOPs / (chips * peak_flops)
+memory    = HLO_bytes / (chips * hbm_bw)
+collective= collective_bytes / (chips * link_bw)
+
+``collective_bytes`` is parsed from the (post-SPMD) HLO text: we sum operand
+byte-sizes of every all-gather / all-reduce / reduce-scatter / all-to-all /
+collective-permute instruction.  Hardware constants: TPU v5e.
+"""
+from __future__ import annotations
+
+import dataclasses
+import re
+from typing import Dict, Optional
+
+# TPU v5e per-chip constants
+PEAK_FLOPS_BF16 = 197e12  # FLOP/s
+HBM_BW = 819e9  # B/s
+ICI_BW = 50e9  # B/s per link
+
+_DTYPE_BYTES = {
+    "pred": 1, "s8": 1, "u8": 1, "s16": 2, "u16": 2, "bf16": 2, "f16": 2,
+    "s32": 4, "u32": 4, "f32": 4, "s64": 8, "u64": 8, "f64": 8,
+    "c64": 8, "c128": 16, "f8e4m3fn": 1, "f8e5m2": 1,
+}
+
+_COLL_RE = re.compile(
+    r"^\s*(?:ROOT\s+)?%?[\w.\-]+\s*=\s*(\([^)]*\)|[\w\[\],{} ]+?)\s*"
+    r"(all-gather|all-reduce|reduce-scatter|all-to-all|collective-permute)"
+    r"(?:-start|-done)?\(",
+    re.MULTILINE,
+)
+
+_SHAPE_RE = re.compile(r"(\w+)\[([\d,]*)\]")
+
+
+def _shape_bytes(shape_str: str) -> int:
+    total = 0
+    for dt, dims in _SHAPE_RE.findall(shape_str):
+        if dt not in _DTYPE_BYTES:
+            continue
+        n = 1
+        if dims:
+            for d in dims.split(","):
+                if d:
+                    n *= int(d)
+        total += n * _DTYPE_BYTES[dt]
+    return total
+
+
+def collective_bytes(hlo_text: str) -> Dict[str, int]:
+    """Sum output-shape bytes per collective kind.
+
+    '-done' ops are skipped (the '-start' already counted); synchronous ops
+    counted once.  Output shape ~= bytes moved per device for AG; for
+    all-reduce it's the reduced tensor size (we count it once — the
+    ring cost 2(n-1)/n x size is applied by the roofline model below).
+    """
+    out: Dict[str, int] = {}
+    for m in _COLL_RE.finditer(hlo_text):
+        shape_str, kind = m.group(1), m.group(2)
+        line = m.group(0)
+        if "-done(" in line:
+            continue
+        out[kind] = out.get(kind, 0) + _shape_bytes(shape_str)
+    return out
+
+
+@dataclasses.dataclass
+class Roofline:
+    flops: float
+    bytes_accessed: float
+    coll_bytes: Dict[str, int]
+    n_devices: int
+
+    @property
+    def total_coll_bytes(self) -> float:
+        return float(sum(self.coll_bytes.values()))
+
+    @property
+    def compute_s(self) -> float:
+        # cost_analysis flops are per-program (per-device post-SPMD)
+        return self.flops / PEAK_FLOPS_BF16
+
+    @property
+    def memory_s(self) -> float:
+        return self.bytes_accessed / HBM_BW
+
+    @property
+    def collective_s(self) -> float:
+        # ring-model byte multipliers: all-reduce = RS + AG = 2x payload;
+        # others move ~1x their payload per device over one ICI link.
+        weighted = 0.0
+        for kind, b in self.coll_bytes.items():
+            weighted += (2.0 if kind == "all-reduce" else 1.0) * b
+        return weighted / ICI_BW
+
+    @property
+    def dominant(self) -> str:
+        terms = {
+            "compute": self.compute_s,
+            "memory": self.memory_s,
+            "collective": self.collective_s,
+        }
+        return max(terms, key=terms.get)
+
+    def as_dict(self) -> dict:
+        return {
+            "flops": self.flops,
+            "bytes": self.bytes_accessed,
+            "coll_bytes": dict(self.coll_bytes),
+            "compute_s": self.compute_s,
+            "memory_s": self.memory_s,
+            "collective_s": self.collective_s,
+            "dominant": self.dominant,
+        }
+
+
+def roofline_from_compiled(compiled, n_devices: int) -> Roofline:
+    """Roofline terms from the compiled artifact.
+
+    cost_analysis() does not multiply while-loop bodies by trip count, so we
+    use the while-aware HLO parser (repro.distributed.hlo_stats) for flops,
+    bytes, and collective bytes; cost_analysis is kept as a fallback.
+    """
+    try:
+        text = compiled.as_text()
+    except Exception:
+        text = ""
+    if text:
+        from repro.distributed.hlo_stats import analyze
+
+        st = analyze(text)
+        if st.flops > 0 or st.total_coll() > 0:
+            return Roofline(st.flops, st.bytes_moved, dict(st.coll_bytes), n_devices)
+    cost = compiled.cost_analysis()
+    if isinstance(cost, list):
+        cost = cost[0]
+    flops = float(cost.get("flops", 0.0))
+    byts = float(cost.get("bytes accessed", cost.get("bytes_accessed", 0.0)))
+    return Roofline(flops, byts, collective_bytes(text), n_devices)
+
+
+def model_flops_per_token(cfg) -> float:
+    """6 * N_active per token (dense approximation incl. MoE top-k)."""
+    n = active_params(cfg)
+    return 6.0 * n
+
+
+def active_params(cfg) -> float:
+    """Parameter count with only top-k experts counted (active params)."""
+    d, f, v = cfg.d_model, cfg.d_ff, cfg.vocab_size
+    dh = cfg.d_head
+    att = d * (cfg.n_heads * dh) + 2 * d * (cfg.n_kv_heads * dh) + (cfg.n_heads * dh) * d
+    gate_mult = 3 if cfg.act == "swiglu" else 2
+    dense_mlp = gate_mult * d * f
+    total = 0.0
+    kinds = cfg.layer_kinds()
+    for i, kind in enumerate(kinds):
+        if kind == "attn":
+            total += att
+        elif kind == "mamba":
+            di = cfg.ssm.expand * d
+            dt_rank = cfg.ssm.dt_rank or max(1, -(-d // 16))
+            total += d * 2 * di + di * (dt_rank + 2 * cfg.ssm.d_state) + dt_rank * di + 2 * di * d
+        else:  # rwkv
+            total += 6 * d * d
+        if cfg.is_moe_layer(i):
+            total += cfg.moe.top_k * dense_mlp + d * cfg.moe.n_experts
+        else:
+            total += dense_mlp
+    total += 2 * v * d if not cfg.tie_embeddings else v * d
+    if cfg.family == "encdec":
+        total += cfg.n_encoder_layers * (att + dense_mlp) + cfg.n_layers * att  # cross
+    return float(total)
+
+
+def total_params(cfg) -> float:
+    """All parameters (every expert counted)."""
+    if cfg.moe is None:
+        return active_params(cfg)
+    d, f = cfg.d_model, cfg.d_ff
+    gate_mult = 3 if cfg.act == "swiglu" else 2
+    per_expert = gate_mult * d * f
+    extra = 0.0
+    for i in range(cfg.n_layers):
+        if cfg.is_moe_layer(i):
+            extra += (cfg.moe.n_experts - cfg.moe.top_k) * per_expert
+    return active_params(cfg) + extra

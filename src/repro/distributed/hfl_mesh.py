@@ -1,0 +1,123 @@
+"""Hierarchical federated learning ON the TPU mesh (the paper's technique as
+a first-class distribution strategy — DESIGN.md Sec. 3).
+
+Mapping:
+  EU cohort   -> one index of the ``eu`` mesh axis
+  edge node   -> one index of the ``edge`` (and ``pod``) axes; each edge keeps
+                 its OWN model replica that diverges between cloud syncs
+  edge sync   -> per-step gradient psum across ``eu`` only (FedSGD, T'=1) —
+                 XLA derives it from the batch sharding, no cross-edge traffic
+  cloud sync  -> every T steps, sigma-weighted average of the edge replicas
+                 (a collective across ``edge``/``pod``), eq. 8-9
+
+Params/optimizer states carry a leading E (=n_edges_total) axis sharded over
+(``pod``, ``edge``); the per-edge loss is vmapped over it.  The communication
+claim of the paper appears here structurally: the expensive cross-pod
+collective runs 1/T as often as plain data parallelism.
+
+``make_hfl_train_step(..., sync=True/False)`` builds the two step variants
+explicitly (local-only vs local+cloud-sync) so the dry-run can cost them
+separately; a scheduled run alternates them (T-1 local : 1 sync).
+"""
+from __future__ import annotations
+
+from typing import Optional
+
+import jax
+import jax.numpy as jnp
+from jax.sharding import NamedSharding, PartitionSpec as P
+
+from repro.models.config import ModelConfig
+from repro.training.optimizers import Optimizer, clip_by_global_norm
+from repro.training.train_step import TrainState, make_loss_fn
+
+
+def replicate_for_edges(params, n_edges: int):
+    """Stack E copies of the global model (edge replicas)."""
+    return jax.tree.map(lambda x: jnp.broadcast_to(x[None], (n_edges,) + x.shape), params)
+
+
+def init_hfl_state(params, optimizer: Optimizer, n_edges: int) -> TrainState:
+    ep = replicate_for_edges(params, n_edges)
+    return TrainState(ep, jax.vmap(optimizer.init)(ep) if _has_state(optimizer) else optimizer.init(ep),
+                      jnp.zeros((), jnp.int32))
+
+
+def _has_state(optimizer: Optimizer) -> bool:
+    probe = optimizer.init({"x": jnp.zeros((1,))})
+    return bool(jax.tree.leaves(probe))
+
+
+def make_hfl_train_step(
+    cfg: ModelConfig,
+    optimizer: Optimizer,
+    *,
+    sync: bool,
+    edge_weights: Optional[jnp.ndarray] = None,
+    grad_clip: float = 1.0,
+    sync_opt_state: bool = False,
+):
+    """(state, batch) -> (state, metrics) with per-edge replicas.
+
+    batch leaves: (E, B_e, ...) — the per-edge micro-population.  The edge
+    aggregation (gradient mean over each edge's EUs) is implicit in the vmap:
+    each edge's grad is averaged over its batch shard, which is sharded over
+    the ``eu`` axis.  With ``sync=True`` the step ends with the eq. 8
+    sigma-weighted cloud average across the edge axis.
+    """
+    loss_fn = make_loss_fn(cfg)
+
+    def per_edge_grad(params, batch):
+        (total, metrics), grads = jax.value_and_grad(loss_fn, has_aux=True)(params, batch)
+        # clip PER EDGE: a global norm would couple the replicas with a
+        # cross-edge all-reduce on every local step (found by collective-byte
+        # measurement — EXPERIMENTS.md §Perf iteration C1)
+        grads, gnorm = clip_by_global_norm(grads, grad_clip)
+        return grads, gnorm, total, metrics
+
+    def step(state: TrainState, batch):
+        grads, gnorms, totals, metrics = jax.vmap(per_edge_grad)(state.params, batch)
+        gnorm = gnorms.max()
+        params, opt_state = jax.vmap(
+            lambda p, g, o: optimizer.update(p, g, o, state.step)
+        )(state.params, grads, state.opt_state)
+        if sync:
+            w = edge_weights
+            if w is None:
+                e = jax.tree.leaves(params)[0].shape[0]
+                w = jnp.full((e,), 1.0 / e)
+            else:
+                w = w / jnp.maximum(w.sum(), 1e-30)
+
+            def cloud_avg(x):
+                avg = jnp.tensordot(w, x.astype(jnp.float32), axes=1)
+                return jnp.broadcast_to(avg[None].astype(x.dtype), x.shape)
+
+            params = jax.tree.map(cloud_avg, params)
+            if sync_opt_state:
+                # optional: server-side moment averaging (3x sync payload)
+                opt_state = jax.tree.map(cloud_avg, opt_state)
+        m = {
+            "total_loss": totals.mean(),
+            "grad_norm": gnorm,
+            "edge_loss_spread": totals.max() - totals.min(),
+        }
+        return TrainState(params, opt_state, state.step + 1), m
+
+    return step
+
+
+def hfl_param_specs(base_specs, edge_axes=("edge",)):
+    """Prepend the edge-replica axis sharding to every param PartitionSpec."""
+    ax = edge_axes if len(edge_axes) > 1 else edge_axes[0]
+
+    def one(spec):
+        return P(ax, *spec)
+
+    return jax.tree.map(one, base_specs, is_leaf=lambda x: isinstance(x, P))
+
+
+def hfl_batch_spec(edge_axes=("edge",), batch_axes=("eu",)):
+    ea = edge_axes if len(edge_axes) > 1 else edge_axes[0]
+    ba = batch_axes if len(batch_axes) > 1 else batch_axes[0]
+    return P(ea, ba, None)

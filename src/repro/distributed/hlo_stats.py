@@ -1,0 +1,245 @@
+"""While-loop-aware HLO statistics: FLOPs, bytes, collective bytes.
+
+``compiled.cost_analysis()`` does NOT multiply while-loop bodies by their
+trip counts, which makes it useless for scan-heavy programs (layer scans,
+microbatch accumulation, chunked attention).  This parser walks the
+post-optimization HLO text, resolves the call graph (fusions, whiles,
+conditionals), reads each while's trip count from its backend_config
+("known_trip_count") or condition constant, and aggregates:
+
+  * flops       — 2*prod(out)*prod(contracting) per dot, x multiplicity
+  * coll_bytes  — output bytes per collective kind, x multiplicity
+  * bytes_moved — output (+fusion operand) bytes of materializing ops —
+                  an HBM-traffic proxy (fusion internals stay on-chip)
+
+All numbers are per-DEVICE (post-SPMD shapes).
+"""
+from __future__ import annotations
+
+import dataclasses
+import re
+from typing import Dict, List, Optional, Tuple
+
+_DTYPE_BYTES = {
+    "pred": 1, "s4": 1, "u4": 1, "s8": 1, "u8": 1, "s16": 2, "u16": 2,
+    "bf16": 2, "f16": 2, "s32": 4, "u32": 4, "f32": 4, "s64": 8, "u64": 8,
+    "f64": 8, "c64": 8, "c128": 16, "f8e4m3fn": 1, "f8e5m2": 1,
+}
+
+_SHAPE_TOKEN = re.compile(r"(\w+)\[([\d,]*)\]")
+_OPCODE = re.compile(r"^\s*([a-z][a-z0-9\-]*)\(")
+_TRIP_CFG = re.compile(r"\"known_trip_count\":\{\"n\":\"(\d+)\"\}")
+_CALL_ATTR = re.compile(r"(?:calls|to_apply)=(%[\w\.\-]+)")
+_WHILE_ATTR = re.compile(r"condition=(%[\w\.\-]+), body=(%[\w\.\-]+)")
+_BRANCHES = re.compile(r"(?:branch_computations|called_computations)=\{([^}]*)\}")
+_CONST_S32 = re.compile(r"s32\[\]\s+constant\((\d+)\)")
+_CONTRACT = re.compile(r"lhs_contracting_dims=\{([\d,]*)\}")
+_OPERAND = re.compile(r"%[\w\.\-]+")
+
+COLLECTIVES = (
+    "all-gather", "all-reduce", "reduce-scatter", "all-to-all",
+    "collective-permute",
+)
+
+_MOVE_OPS = (
+    "copy", "dynamic-update-slice", "dynamic-slice", "transpose", "gather",
+    "scatter", "dot", "fusion", "convert", "reshape", "broadcast", "pad",
+)
+
+
+def _shape_bytes(shape_str: str) -> int:
+    total = 0
+    for dt, dims in _SHAPE_TOKEN.findall(shape_str):
+        if dt not in _DTYPE_BYTES:
+            continue
+        n = 1
+        for d in dims.split(","):
+            if d:
+                n *= int(d)
+        total += n * _DTYPE_BYTES[dt]
+    return total
+
+
+def _first_shape_dims(shape_str: str) -> List[int]:
+    m = _SHAPE_TOKEN.search(shape_str)
+    if not m:
+        return []
+    return [int(d) for d in m.group(2).split(",") if d]
+
+
+def _split_type_op(rhs: str) -> Tuple[str, str]:
+    """rhs after '=': returns (type_str, remainder starting at opcode)."""
+    rhs = rhs.lstrip()
+    if rhs.startswith("("):  # tuple type: match nesting
+        depth = 0
+        for i, ch in enumerate(rhs):
+            if ch == "(":
+                depth += 1
+            elif ch == ")":
+                depth -= 1
+                if depth == 0:
+                    return rhs[: i + 1], rhs[i + 1 :].lstrip()
+        return rhs, ""
+    # scalar/array type: TYPE[dims]{layout}? then space
+    m = re.match(r"^(\w+(?:\[[\d,]*\])?(?:\{[^}]*\})?)\s+(.*)$", rhs)
+    if m:
+        return m.group(1), m.group(2)
+    return "", rhs
+
+
+@dataclasses.dataclass
+class Op:
+    name: str
+    shape: str
+    opcode: str
+    rest: str
+
+
+@dataclasses.dataclass
+class Computation:
+    name: str
+    ops: List[Op] = dataclasses.field(default_factory=list)
+    shapes: Dict[str, str] = dataclasses.field(default_factory=dict)
+
+
+def parse_computations(text: str) -> Tuple[Dict[str, Computation], Optional[str]]:
+    comps: Dict[str, Computation] = {}
+    entry = None
+    cur: Optional[Computation] = None
+    for line in text.splitlines():
+        s = line.strip()
+        if not s:
+            continue
+        if not line.startswith(" ") and "(" in s and "->" in s:
+            is_entry = s.startswith("ENTRY")
+            name_m = re.match(r"^(?:ENTRY\s+)?(%?[\w\.\-]+)\s*\(", s)
+            if name_m:
+                cur = Computation(name_m.group(1).lstrip("%"))
+                comps[cur.name] = cur
+                if is_entry:
+                    entry = cur.name
+                continue
+        if cur is None:
+            continue
+        m = re.match(r"^\s*(?:ROOT\s+)?(%[\w\.\-]+)\s*=\s*(.*)$", line)
+        if not m:
+            continue
+        name, rhs = m.groups()
+        type_str, rem = _split_type_op(rhs)
+        oc = _OPCODE.match(rem)
+        opcode = oc.group(1) if oc else rem.split("(")[0].strip()
+        op = Op(name.lstrip("%"), type_str, opcode, rem)
+        cur.ops.append(op)
+        cur.shapes[op.name] = type_str
+    return comps, entry
+
+
+@dataclasses.dataclass
+class HloStats:
+    flops: float = 0.0
+    bytes_moved: float = 0.0
+    coll_bytes: Dict[str, float] = dataclasses.field(default_factory=dict)
+    whiles: List[Tuple[str, int]] = dataclasses.field(default_factory=list)
+    n_dots: int = 0
+    # top individual collective contributors: (kind, shape, mult, total_bytes)
+    coll_top: List[Tuple[str, str, float, float]] = dataclasses.field(default_factory=list)
+
+    def total_coll(self) -> float:
+        return float(sum(self.coll_bytes.values()))
+
+    def top_collectives(self, n: int = 10):
+        return sorted(self.coll_top, key=lambda x: -x[3])[:n]
+
+
+def _dot_flops(op: Op, shapes: Dict[str, str]) -> float:
+    out_dims = _first_shape_dims(op.shape)
+    m = _CONTRACT.search(op.rest)
+    operands = _OPERAND.findall(op.rest.split("metadata")[0])
+    k = 1
+    if m and operands:
+        lhs_dims = _first_shape_dims(shapes.get(operands[0].lstrip("%"), ""))
+        for idx in m.group(1).split(","):
+            if idx and int(idx) < len(lhs_dims):
+                k *= lhs_dims[int(idx)]
+    out_n = 1
+    for d in out_dims:
+        out_n *= d
+    return 2.0 * out_n * k
+
+
+def analyze(text: str) -> HloStats:
+    comps, entry = parse_computations(text)
+    stats = HloStats()
+    if entry is None:
+        if not comps:
+            return stats
+        entry = max(comps, key=lambda c: len(comps[c].ops))
+    active: set = set()
+
+    def walk(comp_name: str, mult: float):
+        comp = comps.get(comp_name)
+        if comp is None or comp_name in active:
+            return
+        active.add(comp_name)
+        for op in comp.ops:
+            oc = op.opcode
+            if oc == "dot":
+                stats.flops += mult * _dot_flops(op, comp.shapes)
+                stats.n_dots += 1
+                stats.bytes_moved += mult * _shape_bytes(op.shape)
+            elif any(oc == c or oc == c + "-start" for c in COLLECTIVES):
+                base = oc.replace("-start", "")
+                b = _shape_bytes(op.shape)
+                stats.coll_bytes[base] = stats.coll_bytes.get(base, 0.0) + mult * b
+                stats.bytes_moved += mult * b
+                rg = re.search(r"replica_groups=(\{[^=]*?\}\}|\[[\d,]+\]<=\[\d+\](?:T\([\d,]+\))?)", op.rest)
+                stats.coll_top.append(
+                    (base, op.shape[:90] + "|" + (rg.group(1) if rg else ""), mult, mult * b)
+                )
+            elif oc == "while":
+                mw = _WHILE_ATTR.search(op.rest)
+                trip_m = _TRIP_CFG.search(op.rest)
+                if mw:
+                    cond, body = (x.lstrip("%") for x in mw.groups())
+                    if trip_m:
+                        trip = int(trip_m.group(1))
+                    else:
+                        cc = comps.get(cond)
+                        consts = (
+                            [int(c) for o in cc.ops for c in _CONST_S32.findall(o.shape + " " + o.rest)]
+                            if cc
+                            else []
+                        )
+                        trip = max(consts) if consts else 1
+                    stats.whiles.append((body, trip))
+                    walk(body, mult * trip)
+            elif oc == "conditional":
+                mb = _BRANCHES.search(op.rest)
+                if mb:
+                    for br in mb.group(1).split(","):
+                        br = br.strip().lstrip("%")
+                        if br:
+                            walk(br, mult)  # upper bound: all branches
+            elif oc == "fusion":
+                b = _shape_bytes(op.shape)
+                for opr in _OPERAND.findall(op.rest.split("metadata")[0]):
+                    b += _shape_bytes(comp.shapes.get(opr.lstrip("%"), ""))
+                stats.bytes_moved += mult * b
+                mcall = _CALL_ATTR.search(op.rest)
+                if mcall:  # fused dots still do math
+                    walk(mcall.group(1).lstrip("%"), mult)
+            elif oc in ("call", "custom-call", "map", "sort", "scatter", "reduce", "reduce-window", "select-and-scatter"):
+                for attr in _CALL_ATTR.finditer(op.rest):
+                    walk(attr.group(1).lstrip("%"), mult)
+                mb = _BRANCHES.search(op.rest)
+                if mb:
+                    for br in mb.group(1).split(","):
+                        br = br.strip().lstrip("%")
+                        if br:
+                            walk(br, mult)
+            elif oc in ("copy", "copy-start", "dynamic-update-slice", "dynamic-slice", "transpose", "gather"):
+                stats.bytes_moved += mult * _shape_bytes(op.shape)
+        active.discard(comp_name)
+
+    walk(entry, 1.0)
+    return stats

@@ -1,0 +1,240 @@
+"""Sharding rules: map every parameter / batch / cache leaf to a PartitionSpec.
+
+Two modes:
+  * ``tp``   — tensor parallel only: weights sharded over the ``model`` axis
+               (Megatron column/row rules), replicated over data/pod.
+  * ``fsdp`` — tp + the complementary weight dim sharded over ``data`` (and
+               ``pod``) — ZeRO-3-style; XLA inserts the all-gathers.
+
+Rules are path-name based (wq/wk/wv/wi/wg -> column parallel; wo/out_proj/
+x_proj -> row parallel; emb -> vocab parallel; experts -> expert parallel
+when divisible).  Stacked-block leading axes are never sharded.
+"""
+from __future__ import annotations
+
+from typing import Any, Optional, Tuple
+
+import jax
+import numpy as np
+from jax.sharding import PartitionSpec as P
+
+from repro.models.config import InputShape, ModelConfig
+
+COLUMN_KEYS = ("wq", "wk", "wv", "wi", "wg", "in_proj", "dt_proj", "w_a", "wr")
+ROW_KEYS = ("wo", "out_proj", "x_proj", "w_b")
+
+
+def _path_names(path) -> Tuple[str, ...]:
+    names = []
+    for p in path:
+        n = getattr(p, "key", None)
+        if n is None:
+            n = getattr(p, "name", None)
+        if n is None:
+            n = getattr(p, "idx", None)
+        names.append(str(n))
+    return tuple(names)
+
+
+def _spec_for_leaf(
+    names: Tuple[str, ...],
+    shape: Tuple[int, ...],
+    mode: str,
+    *,
+    model_axis: str,
+    data_axes: Tuple[str, ...],
+    model_size: int,
+    data_size: int,
+) -> P:
+    nd = len(shape)
+    spec = [None] * nd
+    in_moe = any(n == "ffn" for n in names) and any(
+        n in ("router",) for n in names
+    ) is False and any(n in ("wi", "wg", "wo") for n in names)
+    is_stacked = nd >= 1  # blocks stack handled by never sharding dim 0 of big stacks
+
+    def divis(dim_idx, size):
+        return shape[dim_idx] % size == 0 and shape[dim_idx] >= size
+
+    leaf = names[-1] if names else ""
+    parent = names[-2] if len(names) >= 2 else ""
+
+    # MoE expert stacks: (n_blocks, E, d, f) or (E, d, f)
+    if leaf in ("wi", "wg", "wo") and nd >= 3 and "ffn" in names and parent == "ffn":
+        e_dim = nd - 3
+        if divis(e_dim, model_size):
+            spec[e_dim] = model_axis  # expert parallel
+            if mode == "fsdp":
+                # shard the biggest remaining dim over data
+                cand = nd - 1 if shape[nd - 1] >= shape[nd - 2] else nd - 2
+                if divis(cand, data_size):
+                    spec[cand] = data_axes if len(data_axes) > 1 else data_axes[0]
+            return P(*spec)
+        # fine-grained experts that don't divide: shard the ff dim instead
+        ff_dim = nd - 1 if leaf in ("wi", "wg") else nd - 2
+        if divis(ff_dim, model_size):
+            spec[ff_dim] = model_axis
+        if mode == "fsdp":
+            other = nd - 2 if ff_dim == nd - 1 else nd - 1
+            if divis(other, data_size):
+                spec[other] = data_axes if len(data_axes) > 1 else data_axes[0]
+        return P(*spec)
+
+    if leaf == "emb":
+        # vocab-parallel embedding: (V, d)
+        if divis(nd - 2, model_size):
+            spec[nd - 2] = model_axis
+        if mode == "fsdp" and divis(nd - 1, data_size):
+            spec[nd - 1] = data_axes if len(data_axes) > 1 else data_axes[0]
+        return P(*spec)
+
+    col = parent in COLUMN_KEYS or leaf in COLUMN_KEYS
+    row = parent in ROW_KEYS or leaf in ROW_KEYS
+    if leaf == "w" and len(names) >= 2:
+        col = names[-2] in COLUMN_KEYS
+        row = names[-2] in ROW_KEYS
+    if nd >= 2 and (col or row):
+        tgt = nd - 1 if col else nd - 2
+        if divis(tgt, model_size):
+            spec[tgt] = model_axis
+        if mode == "fsdp":
+            other = nd - 2 if tgt == nd - 1 else nd - 1
+            if divis(other, data_size):
+                spec[other] = data_axes if len(data_axes) > 1 else data_axes[0]
+        return P(*spec)
+
+    # conv / a_log / bonus / d_skip style (…, d_inner) or (heads, hs) leaves:
+    if nd >= 2 and leaf in ("conv_w", "a_log", "bonus"):
+        tgt = nd - 2 if leaf == "a_log" else nd - 1
+        if leaf == "bonus":
+            tgt = nd - 2
+        if leaf == "conv_w":
+            tgt = nd - 1
+        if divis(tgt, model_size):
+            spec[tgt] = model_axis
+        return P(*spec)
+
+    # biases over sharded output dims
+    if leaf == "b" and len(names) >= 2 and names[-2] in COLUMN_KEYS and nd >= 1:
+        if divis(nd - 1, model_size):
+            spec[nd - 1] = model_axis
+        return P(*spec)
+
+    return P(*spec)  # replicated (norms, small vectors)
+
+
+def param_specs(cfg: ModelConfig, params: Any, mode: str, mesh) -> Any:
+    """PartitionSpec pytree matching ``params`` (works on ShapeDtypeStructs)."""
+    model_axis = "model"
+    data_axes = tuple(a for a in ("pod", "data") if a in mesh.axis_names)
+    model_size = mesh.shape[model_axis]
+    data_size = int(np.prod([mesh.shape[a] for a in data_axes]))
+
+    def one(path, leaf):
+        return _spec_for_leaf(
+            _path_names(path),
+            tuple(leaf.shape),
+            mode,
+            model_axis=model_axis,
+            data_axes=data_axes,
+            model_size=model_size,
+            data_size=data_size,
+        )
+
+    return jax.tree_util.tree_map_with_path(one, params)
+
+
+def batch_spec(shape: InputShape, mesh, *, enc: bool = False) -> P:
+    """Token batch (B, S): shard batch over (pod, data) when divisible."""
+    data_axes = tuple(a for a in ("pod", "data") if a in mesh.axis_names)
+    bsz = shape.global_batch
+    d = int(np.prod([mesh.shape[a] for a in data_axes]))
+    if bsz % d == 0:
+        return P(data_axes if len(data_axes) > 1 else data_axes[0], None)
+    if bsz % mesh.shape["data"] == 0:
+        return P("data", None)
+    return P(None, None)
+
+
+def cache_specs(cfg: ModelConfig, cache: Any, shape: InputShape, mesh) -> Any:
+    """KV/state caches.
+
+    Attention k/v: (n_blocks, B, S, Hkv, Dh) — batch over (pod,data) when it
+    divides, else the *sequence* axis is sharded (context-parallel decode,
+    used by long_500k's batch=1).  SSM/RWKV states shard their channel/head
+    dims over ``model``.
+    """
+    data_axes = tuple(a for a in ("pod", "data") if a in mesh.axis_names)
+    d = int(np.prod([mesh.shape[a] for a in data_axes]))
+    m = mesh.shape["model"]
+    batch_ok = shape.global_batch % d == 0 and shape.global_batch >= d
+    data_sh = data_axes if len(data_axes) > 1 else data_axes[0]
+
+    def one(path, leaf):
+        names = _path_names(path)
+        nd = len(leaf.shape)
+        spec = [None] * nd
+        leafname = names[-1]
+        if leafname in ("k", "v", "cross_k", "cross_v"):
+            # (n_blocks, B, S, H, D)
+            if batch_ok:
+                spec[1] = data_sh
+                if leaf.shape[2] % m == 0:
+                    spec[2] = "model"  # seq over model: context parallel
+            else:
+                if leaf.shape[2] % (d * m) == 0:
+                    spec[2] = data_axes + ("model",)
+                elif leaf.shape[2] % m == 0:
+                    spec[2] = "model"
+            return P(*spec)
+        if leafname == "h" and nd == 3:  # mamba state (B?, no) (n_blocks,B,di,n)
+            pass
+        if leafname == "h" and nd == 4:  # (n_blocks, B, d_inner, n)
+            if batch_ok:
+                spec[1] = data_sh
+            if leaf.shape[2] % m == 0:
+                spec[2] = "model"
+            return P(*spec)
+        if leafname == "conv" and nd == 4:  # (n_blocks, B, k-1, d_inner)
+            if batch_ok:
+                spec[1] = data_sh
+            if leaf.shape[3] % m == 0:
+                spec[3] = "model"
+            return P(*spec)
+        if leafname == "s" and nd == 5:  # rwkv (n_blocks, B, nh, hs, hs)
+            if batch_ok:
+                spec[1] = data_sh
+            if leaf.shape[2] % m == 0:
+                spec[2] = "model"
+            return P(*spec)
+        if leafname == "x_prev" and nd == 3:  # (n_blocks, B, d)
+            if batch_ok:
+                spec[1] = data_sh
+            if leaf.shape[2] % m == 0:
+                spec[2] = "model"
+            return P(*spec)
+        # fallback: shard batch dim 1 if possible
+        if nd >= 2 and batch_ok:
+            spec[1] = data_sh
+        return P(*spec)
+
+    return jax.tree_util.tree_map_with_path(one, cache)
+
+
+def opt_state_specs(param_spec_tree, opt_state, params) -> Any:
+    """Adam (m, v) mirror the param specs; empty states replicated."""
+    flat_params, treedef_p = jax.tree_util.tree_flatten(params)
+    flat_specs = jax.tree_util.tree_flatten(param_spec_tree)[0]
+    spec_by_id = {id(p): s for p, s in zip(flat_params, flat_specs)}
+
+    # opt_state for adam is a tuple (m, v) each shaped like params
+    def mirror(tree):
+        return jax.tree_util.tree_unflatten(
+            treedef_p, [s for s in flat_specs]
+        )
+
+    if isinstance(opt_state, tuple) and len(opt_state) == 2:
+        return (mirror(opt_state[0]), mirror(opt_state[1]))
+    if isinstance(opt_state, tuple) and len(opt_state) == 0:
+        return ()
+    return jax.tree.map(lambda _: P(), opt_state)

@@ -1,0 +1,20 @@
+from repro.federated.client import FLClient
+from repro.federated.simulation import (
+    HFLSimulation,
+    RoundMetrics,
+    SimResult,
+    centralized_baseline,
+    evaluate,
+)
+from repro.federated.scenario import Scenario, build_scenario
+
+__all__ = [
+    "FLClient",
+    "HFLSimulation",
+    "RoundMetrics",
+    "Scenario",
+    "SimResult",
+    "build_scenario",
+    "centralized_baseline",
+    "evaluate",
+]

@@ -1,0 +1,92 @@
+"""Federated client: local training on a private shard (paper eq. 4-5).
+
+Clients are stateless across rounds (fresh Adam state per round, the common
+FedAvg convention and the paper's setup: 1 local epoch, batch 10, Adam 1e-3).
+Local updates are jit-compiled once per (steps-bucket) to avoid per-shard
+recompilation; shards are padded by resampling to fill the bucket.
+"""
+from __future__ import annotations
+
+import dataclasses
+from functools import partial
+from typing import Dict, Tuple
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.data.synthetic_health import Dataset
+from repro.models.cnn1d import CNNConfig, cnn_apply
+from repro.training.loss import softmax_xent
+from repro.training.optimizers import adam
+
+_BUCKETS = (1, 2, 4, 8, 16, 32, 64, 128)
+
+
+def _bucket(steps: int) -> int:
+    for b in _BUCKETS:
+        if steps <= b:
+            return b
+    return _BUCKETS[-1]
+
+
+@partial(jax.jit, static_argnames=("cfg", "n_steps", "lr"))
+def _local_epoch(params, xb, yb, cfg: CNNConfig, n_steps: int, lr: float):
+    """xb: (n_steps, B, L, C); yb: (n_steps, B). One pass of Adam."""
+    opt = adam(lr=lr)
+    opt_state = opt.init(params)
+
+    def body(carry, batch):
+        params, opt_state, step = carry
+        x, y = batch
+
+        def loss_fn(p):
+            return softmax_xent(cnn_apply(p, cfg, x), y)
+
+        loss, grads = jax.value_and_grad(loss_fn)(params)
+        params, opt_state = opt.update(params, grads, opt_state, step)
+        return (params, opt_state, step + 1), loss
+
+    (params, _, _), losses = jax.lax.scan(
+        body, (params, opt_state, jnp.zeros((), jnp.int32)), (xb, yb)
+    )
+    return params, losses.mean()
+
+
+@dataclasses.dataclass
+class FLClient:
+    """One EU with its local dataset shard."""
+
+    cid: int
+    shard: Dataset
+    cfg: CNNConfig
+    batch_size: int = 10
+    lr: float = 1e-3
+    max_steps: int = 128
+
+    @property
+    def data_size(self) -> int:
+        return len(self.shard)
+
+    def class_counts(self) -> np.ndarray:
+        return np.bincount(self.shard.y, minlength=self.shard.n_classes)
+
+    def local_update(self, params, rng: np.random.Generator, epochs: int = 1) -> Tuple[Dict, float]:
+        """Run `epochs` local epochs; returns (new_params, mean_loss)."""
+        n = len(self.shard)
+        if n == 0:
+            return params, 0.0
+        steps = max(1, min(self.max_steps, int(np.ceil(n / self.batch_size))))
+        steps = _bucket(steps)
+        loss = 0.0
+        for _ in range(epochs):
+            idx = rng.permutation(n)
+            need = steps * self.batch_size
+            if need > n:  # pad by resampling
+                idx = np.concatenate([idx, rng.integers(0, n, need - n)])
+            idx = idx[:need].reshape(steps, self.batch_size)
+            xb = jnp.asarray(self.shard.x[idx])
+            yb = jnp.asarray(self.shard.y[idx])
+            params, l = _local_epoch(params, xb, yb, self.cfg, steps, self.lr)
+            loss = float(l)
+        return params, loss

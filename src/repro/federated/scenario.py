@@ -1,0 +1,154 @@
+"""End-to-end experiment scenario builder: dataset -> EUs -> assignment -> sim.
+
+Encapsulates the paper's two setups:
+  * Heartbeat: 5 classes, 5 edges, 18 EUs (Table 3 edge distribution)
+  * Seizure:   3 classes, 3 edges, 13 EUs (Table 2 edge distribution)
+and exposes every assignment strategy for comparison.
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Dict, List, Optional
+
+import jax
+import numpy as np
+
+from repro.core.assignment import AssignmentResult, dba_assignment, eara, random_assignment
+from repro.core.hfl import HFLSchedule
+from repro.data.partition import (
+    TABLE2_SEIZURE,
+    TABLE3_HEARTBEAT,
+    eu_counts_from_edge_table,
+    split_dataset_by_counts,
+)
+from repro.data.synthetic_health import Dataset, heartbeat_like, seizure_like
+from repro.federated.client import FLClient
+from repro.federated.simulation import HFLSimulation, SimResult, centralized_baseline
+from repro.models.cnn1d import HEARTBEAT_CNN, SEIZURE_CNN, CNNConfig, cnn_init
+from repro.utils.tree import tree_size_bytes
+from repro.wireless.channel import WirelessParams, build_cost_matrices, sample_topology
+
+
+@dataclasses.dataclass
+class Scenario:
+    name: str
+    cfg: CNNConfig
+    clients: List[FLClient]
+    test: Dataset
+    class_counts: np.ndarray  # (M, K)
+    topo: object
+    cost: object
+    wp: WirelessParams
+    model_bits: float
+    init_edge: np.ndarray
+
+    @property
+    def n_edges(self) -> int:
+        return self.cost.latency.shape[1]
+
+    def assign(self, strategy: str, **kw) -> AssignmentResult:
+        if strategy == "dba":
+            return dba_assignment(self.class_counts, self.topo.dist)
+        if strategy == "random":
+            return random_assignment(self.class_counts, self.n_edges, **kw)
+        if strategy in ("eara-sca", "eara-dca", "eara-sca+", "eara-dca+"):
+            mode = "sca" if "sca" in strategy else "dca"
+            return eara(
+                self.class_counts,
+                self.cost,
+                self.wp,
+                self.model_bits,
+                self.topo.tx_power_max,
+                mode=mode,
+                refine=strategy.endswith("+"),
+                **kw,
+            )
+        raise ValueError(strategy)
+
+    def simulate(
+        self,
+        assignment: np.ndarray,
+        cloud_rounds: int,
+        schedule: HFLSchedule = HFLSchedule(1, 1),
+        seed: int = 0,
+        upp: float = 1.0,
+        track_divergence: bool = False,
+        eval_every: int = 1,
+        wall_clock: bool = False,
+    ) -> SimResult:
+        sim = HFLSimulation(
+            self.clients,
+            assignment,
+            self.cfg,
+            self.test,
+            schedule=schedule,
+            seed=seed,
+            upp=upp,
+            track_divergence=track_divergence,
+            cost_latency=self.cost.latency if wall_clock else None,
+        )
+        res = sim.run(cloud_rounds, eval_every=eval_every)
+        if wall_clock:
+            res.wall_seconds = sim.clock.seconds
+        return res
+
+    def centralized(self, rounds: int, seed: int = 0, eval_every: int = 1):
+        batch = 10 * self.n_edges  # paper: local batch x n_edges (50 / 30)
+        return centralized_baseline(
+            self.clients, self.cfg, self.test, rounds, batch=batch, seed=seed,
+            eval_every=eval_every,
+        )
+
+
+def _eus_per_edge(n_edges: int, n_eus: int) -> List[int]:
+    base = n_eus // n_edges
+    extra = n_eus - base * n_edges
+    return [base + (1 if j < extra else 0) for j in range(n_edges)]
+
+
+def build_scenario(
+    dataset: str = "heartbeat",
+    *,
+    seed: int = 0,
+    scale: float = 1.0,
+    mean_dist: float = 300.0,
+    n_test_per_class: int = 300,
+    wp: Optional[WirelessParams] = None,
+) -> Scenario:
+    """Construct the paper's experimental setup with synthetic data."""
+    rng = np.random.default_rng(seed)
+    if dataset == "heartbeat":
+        table, n_eus, cnn = TABLE3_HEARTBEAT, 18, HEARTBEAT_CNN
+        maker = heartbeat_like
+    elif dataset == "seizure":
+        table, n_eus, cnn = TABLE2_SEIZURE, 13, SEIZURE_CNN
+        maker = seizure_like
+    else:
+        raise ValueError(dataset)
+    n_edges, k = table.shape
+    counts, init_edge = eu_counts_from_edge_table(
+        rng, table, _eus_per_edge(n_edges, n_eus), scale=scale
+    )
+    train = maker(rng, counts.sum(axis=0))
+    shards = split_dataset_by_counts(rng, train, counts)
+    test = maker(rng, np.full(k, n_test_per_class))
+    clients = [FLClient(i, shards[i], cnn) for i in range(n_eus)]
+    wp = wp or WirelessParams()
+    topo = sample_topology(
+        jax.random.PRNGKey(seed), n_eus, n_edges, mean_dist=mean_dist,
+        dataset_sizes=counts.sum(axis=1),
+    )
+    model_bits = tree_size_bytes(cnn_init(jax.random.PRNGKey(0), cnn)) * 8
+    cost = build_cost_matrices(topo, model_bits, wp)
+    return Scenario(
+        name=dataset,
+        cfg=cnn,
+        clients=clients,
+        test=test,
+        class_counts=counts,
+        topo=topo,
+        cost=cost,
+        wp=wp,
+        model_bits=model_bits,
+        init_edge=init_edge,
+    )

@@ -1,0 +1,198 @@
+"""Synchronous hierarchical FL simulation (the paper's Sec. 6 experiments).
+
+Drives M clients, N edge nodes, and a central server through the two-level
+aggregation schedule; tracks accuracy vs cloud rounds, weight divergence to
+the virtual-centralized model (eq. 17), and communication traffic — the raw
+material of paper Figs. 3-6.
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Dict, List, Optional
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.core.hfl import CommAccountant, HFLSchedule, WallClock, cloud_aggregate, edge_aggregate, weight_divergence
+from repro.data.synthetic_health import Dataset
+from repro.federated.client import FLClient, _local_epoch
+from repro.models.cnn1d import CNNConfig, cnn_apply, cnn_init
+from repro.training.loss import accuracy
+from repro.utils.tree import tree_size_bytes
+
+
+@dataclasses.dataclass
+class RoundMetrics:
+    cloud_round: int
+    test_acc: float
+    divergence: float
+    mean_local_loss: float
+
+
+@dataclasses.dataclass
+class SimResult:
+    history: List[RoundMetrics]
+    accountant: CommAccountant
+    final_params: dict
+    wall_seconds: float = 0.0
+
+    def rounds_to_accuracy(self, target: float) -> Optional[int]:
+        for m in self.history:
+            if m.test_acc >= target:
+                return m.cloud_round
+        return None
+
+    def final_accuracy(self) -> float:
+        return self.history[-1].test_acc if self.history else 0.0
+
+
+def evaluate(params, cfg: CNNConfig, test: Dataset, batch: int = 512) -> float:
+    accs, ns = [], []
+    for i in range(0, len(test), batch):
+        x = jnp.asarray(test.x[i : i + batch])
+        y = jnp.asarray(test.y[i : i + batch])
+        accs.append(float(accuracy(cnn_apply(params, cfg, x), y)) * len(y))
+        ns.append(len(y))
+    return float(np.sum(accs) / np.sum(ns))
+
+
+class HFLSimulation:
+    """assignment: (M, N) binary matrix (possibly dual-connectivity rows)."""
+
+    def __init__(
+        self,
+        clients: List[FLClient],
+        assignment: np.ndarray,
+        cfg: CNNConfig,
+        test: Dataset,
+        schedule: HFLSchedule = HFLSchedule(1, 1),
+        seed: int = 0,
+        upp: float = 1.0,
+        track_divergence: bool = False,
+        central_batch: int = 50,
+        cost_latency=None,
+    ):
+        self.clients = clients
+        self.assignment = assignment
+        self.cfg = cfg
+        self.test = test
+        self.schedule = schedule
+        self.rng = np.random.default_rng(seed)
+        self.upp = upp
+        self.params = cnn_init(jax.random.PRNGKey(seed), cfg)
+        self.track_divergence = track_divergence
+        if track_divergence:
+            self.central_params = jax.tree.map(lambda x: x, self.params)
+            self.central_data = Dataset(
+                np.concatenate([c.shard.x for c in clients], 0),
+                np.concatenate([c.shard.y for c in clients], 0),
+                cfg.n_classes,
+            )
+            self.central_batch = central_batch
+        model_bits = tree_size_bytes(self.params) * 8
+        self.accountant = CommAccountant(model_bits=model_bits)
+        self.clock = WallClock(cost_latency) if cost_latency is not None else None
+
+    # -- one edge round: every client trains locally, edges aggregate --------
+    def _edge_round(self, edge_params: List[dict]) -> List[float]:
+        m, n = self.assignment.shape
+        losses = []
+        # sample participating clients (UPP)
+        participating = self.rng.random(m) < self.upp
+        if not participating.any():
+            participating[self.rng.integers(0, m)] = True
+        new_models: List[List[dict]] = [[] for _ in range(n)]
+        new_sizes: List[List[float]] = [[] for _ in range(n)]
+        for i, cl in enumerate(self.clients):
+            edges = np.nonzero(self.assignment[i])[0]
+            if len(edges) == 0 or not participating[i]:
+                continue
+            # a DCA client starts from the average of its edges' models
+            start = edge_params[edges[0]] if len(edges) == 1 else edge_aggregate(
+                [edge_params[j] for j in edges], [1.0] * len(edges)
+            )
+            upd, loss = cl.local_update(start, self.rng, epochs=self.schedule.local_steps)
+            losses.append(loss)
+            for j in edges:
+                new_models[j].append(upd)
+                new_sizes[j].append(cl.data_size)
+        for j in range(n):
+            if new_models[j]:
+                edge_params[j] = edge_aggregate(new_models[j], new_sizes[j])
+        self.accountant.on_edge_sync(self.assignment * participating[:, None])
+        if self.clock is not None:
+            self.clock.on_edge_sync(self.assignment, participating)
+        return losses
+
+    def _central_step(self):
+        """One mini-epoch of the virtual centralized model (divergence ref)."""
+        n = len(self.central_data)
+        steps = max(1, min(128, n // self.central_batch))
+        idx = self.rng.permutation(n)[: steps * self.central_batch].reshape(
+            steps, self.central_batch
+        )
+        xb = jnp.asarray(self.central_data.x[idx])
+        yb = jnp.asarray(self.central_data.y[idx])
+        self.central_params, _ = _local_epoch(
+            self.central_params, xb, yb, self.cfg, steps, 1e-3
+        )
+
+    def run(self, cloud_rounds: int, eval_every: int = 1) -> SimResult:
+        n = self.assignment.shape[1]
+        history: List[RoundMetrics] = []
+        global_params = self.params
+        edge_sizes = [
+            sum(c.data_size for i, c in enumerate(self.clients) if self.assignment[i, j])
+            for j in range(n)
+        ]
+        for b in range(1, cloud_rounds + 1):
+            edge_params = [global_params] * n
+            losses: List[float] = []
+            for _ in range(self.schedule.edge_per_cloud):
+                losses += self._edge_round(edge_params)
+            global_params = cloud_aggregate(edge_params, [max(s, 1) for s in edge_sizes])
+            self.accountant.on_cloud_sync(n)
+            if self.clock is not None:
+                self.clock.on_cloud_sync()
+            div = 0.0
+            if self.track_divergence:
+                for _ in range(self.schedule.cloud_period):
+                    self._central_step()
+                div = weight_divergence(global_params, self.central_params)
+            if b % eval_every == 0 or b == cloud_rounds:
+                acc = evaluate(global_params, self.cfg, self.test)
+                history.append(
+                    RoundMetrics(b, acc, div, float(np.mean(losses)) if losses else 0.0)
+                )
+        self.params = global_params
+        return SimResult(history, self.accountant, global_params)
+
+
+def centralized_baseline(
+    clients: List[FLClient],
+    cfg: CNNConfig,
+    test: Dataset,
+    rounds: int,
+    batch: int = 50,
+    seed: int = 0,
+    eval_every: int = 1,
+) -> List[RoundMetrics]:
+    """The paper's benchmark: all data pooled at one server (batch 50/30)."""
+    rng = np.random.default_rng(seed)
+    data = Dataset(
+        np.concatenate([c.shard.x for c in clients], 0),
+        np.concatenate([c.shard.y for c in clients], 0),
+        cfg.n_classes,
+    )
+    params = cnn_init(jax.random.PRNGKey(seed), cfg)
+    history = []
+    n = len(data)
+    for r in range(1, rounds + 1):
+        steps = max(1, min(128, n // batch))
+        idx = rng.permutation(n)[: steps * batch].reshape(steps, batch)
+        xb, yb = jnp.asarray(data.x[idx]), jnp.asarray(data.y[idx])
+        params, loss = _local_epoch(params, xb, yb, cfg, steps, 1e-3)
+        if r % eval_every == 0 or r == rounds:
+            history.append(RoundMetrics(r, evaluate(params, cfg, test), 0.0, float(loss)))
+    return history

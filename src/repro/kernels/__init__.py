@@ -1,0 +1,3 @@
+from repro.kernels.ops import flash_attention, hier_aggregate, topk_gating
+
+__all__ = ["flash_attention", "hier_aggregate", "topk_gating"]

@@ -1,0 +1,149 @@
+"""Flash attention Pallas TPU kernel (causal + sliding-window + GQA).
+
+Grid: (batch*q_heads, n_q_blocks, n_kv_blocks); the kv axis is the innermost
+("arbitrary") dimension and accumulates into VMEM scratch with the online-
+softmax recurrence.  BlockSpecs keep one (block_q, d) query tile, one
+(block_k, d) key/value tile, and fp32 scratch (acc, m, l) resident in VMEM;
+MXU dims are multiples of 128 by construction (d_head and block sizes).
+
+GQA is handled in the kv index_map: query-head h reads kv-head h // q_per_kv
+— no materialized head repetition.
+
+On this CPU container the kernel is validated with ``interpret=True``
+(Python-evaluated, bit-identical semantics); on TPU the same pallas_call
+lowers to Mosaic.  A TPU deployment would additionally skip fully-masked kv
+blocks via a sparse grid map — noted in EXPERIMENTS.md §Perf.
+"""
+from __future__ import annotations
+
+import functools
+from typing import Optional
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+from jax.experimental import pallas as pl
+from jax.experimental.pallas import tpu as pltpu
+
+NEG_INF = -1e30
+
+
+def _flash_kernel(
+    q_ref, k_ref, v_ref, o_ref, acc_ref, m_ref, l_ref,
+    *, scale: float, causal: bool, window: Optional[int],
+    block_q: int, block_k: int, n_kv_blocks: int,
+):
+    ki = pl.program_id(2)
+
+    @pl.when(ki == 0)
+    def _init():
+        acc_ref[...] = jnp.zeros_like(acc_ref)
+        m_ref[...] = jnp.full_like(m_ref, NEG_INF)
+        l_ref[...] = jnp.zeros_like(l_ref)
+
+    q = q_ref[0].astype(jnp.float32)  # (block_q, d)
+    k = k_ref[0].astype(jnp.float32)  # (block_k, d)
+    v = v_ref[0].astype(jnp.float32)
+
+    logits = jax.lax.dot_general(
+        q, k, (((1,), (1,)), ((), ())), preferred_element_type=jnp.float32
+    ) * scale  # (block_q, block_k)
+
+    qi = pl.program_id(1)
+    q_pos = qi * block_q + jax.lax.broadcasted_iota(jnp.int32, (block_q, block_k), 0)
+    k_pos = ki * block_k + jax.lax.broadcasted_iota(jnp.int32, (block_q, block_k), 1)
+    mask = jnp.ones((block_q, block_k), jnp.bool_)
+    if causal:
+        mask = k_pos <= q_pos
+    if window is not None:
+        mask = mask & (k_pos > q_pos - window)
+    logits = jnp.where(mask, logits, NEG_INF)
+
+    m_prev = m_ref[...]
+    l_prev = l_ref[...]
+    m_new = jnp.maximum(m_prev, logits.max(axis=1))
+    p = jnp.exp(logits - m_new[:, None])
+    alpha = jnp.exp(m_prev - m_new)
+    l_new = l_prev * alpha + p.sum(axis=1)
+    acc_ref[...] = acc_ref[...] * alpha[:, None] + jax.lax.dot_general(
+        p.astype(v.dtype), v, (((1,), (0,)), ((), ())),
+        preferred_element_type=jnp.float32,
+    )
+    m_ref[...] = m_new
+    l_ref[...] = l_new
+
+    @pl.when(ki == n_kv_blocks - 1)
+    def _finalize():
+        o_ref[0] = (acc_ref[...] / jnp.maximum(l_ref[...], 1e-30)[:, None]).astype(
+            o_ref.dtype
+        )
+
+
+def flash_attention(
+    q: jnp.ndarray,
+    k: jnp.ndarray,
+    v: jnp.ndarray,
+    *,
+    causal: bool = True,
+    window: Optional[int] = None,
+    block_q: int = 128,
+    block_k: int = 128,
+    interpret: Optional[bool] = None,
+) -> jnp.ndarray:
+    """q: (B, S, Hq, D); k, v: (B, S, Hkv, D) with Hq % Hkv == 0.
+
+    Returns (B, S, Hq, D).
+    """
+    b, s, hq, d = q.shape
+    hkv = k.shape[2]
+    assert hq % hkv == 0
+    qpk = hq // hkv
+    sk = k.shape[1]
+    block_q = min(block_q, s)
+    block_k = min(block_k, sk)
+    assert s % block_q == 0 and sk % block_k == 0
+    nq, nk = s // block_q, sk // block_k
+    if interpret is None:
+        interpret = jax.default_backend() != "tpu"
+
+    # (B, H, S, D) layout for clean tiling
+    qt = q.transpose(0, 2, 1, 3).reshape(b * hq, s, d)
+    kt = k.transpose(0, 2, 1, 3).reshape(b * hkv, sk, d)
+    vt = v.transpose(0, 2, 1, 3).reshape(b * hkv, sk, d)
+
+    def q_map(bh, qi, ki):
+        return (bh, qi, 0)
+
+    def kv_map(bh, qi, ki):
+        bidx = bh // hq
+        h = bh % hq
+        return (bidx * hkv + h // qpk, ki, 0)
+
+    kernel = functools.partial(
+        _flash_kernel,
+        scale=1.0 / np.sqrt(d),
+        causal=causal,
+        window=window,
+        block_q=block_q,
+        block_k=block_k,
+        n_kv_blocks=nk,
+    )
+    out = pl.pallas_call(
+        kernel,
+        grid=(b * hq, nq, nk),
+        in_specs=[
+            pl.BlockSpec((1, block_q, d), q_map),
+            pl.BlockSpec((1, block_k, d), kv_map),
+            pl.BlockSpec((1, block_k, d), kv_map),
+        ],
+        out_specs=pl.BlockSpec((1, block_q, d), q_map),
+        out_shape=jax.ShapeDtypeStruct((b * hq, s, d), q.dtype),
+        scratch_shapes=[
+            # fp32 accumulators resident in VMEM across the kv grid dimension
+            pltpu.VMEM((block_q, d), jnp.float32),
+            pltpu.VMEM((block_q,), jnp.float32),
+            pltpu.VMEM((block_q,), jnp.float32),
+        ],
+        interpret=interpret,
+    )(qt, kt, vt)
+    return out.reshape(b, hq, s, d).transpose(0, 2, 1, 3)

@@ -1,0 +1,30 @@
+"""jit'd public wrappers for the Pallas kernels.
+
+``interpret`` defaults to True off-TPU (CPU container) and False on TPU,
+where the same pallas_call lowers to Mosaic.
+"""
+from __future__ import annotations
+
+from functools import partial
+from typing import Optional
+
+import jax
+
+from repro.kernels.flash_attention import flash_attention as _flash
+from repro.kernels.hier_aggregate import hier_aggregate as _agg
+from repro.kernels.topk_gating import topk_gating as _gate
+
+
+@partial(jax.jit, static_argnames=("causal", "window", "block_q", "block_k"))
+def flash_attention(q, k, v, *, causal=True, window=None, block_q=128, block_k=128):
+    return _flash(q, k, v, causal=causal, window=window, block_q=block_q, block_k=block_k)
+
+
+@partial(jax.jit, static_argnames=("block",))
+def hier_aggregate(updates, weights, *, block=4096):
+    return _agg(updates, weights, block=block)
+
+
+@partial(jax.jit, static_argnames=("k", "block_t"))
+def topk_gating(logits, k, *, block_t=1024):
+    return _gate(logits, k, block_t=block_t)

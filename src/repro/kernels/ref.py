@@ -1,0 +1,51 @@
+"""Pure-jnp oracles for every Pallas kernel (the allclose references)."""
+from __future__ import annotations
+
+from typing import Optional
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+
+def flash_attention_ref(q, k, v, *, causal=True, window: Optional[int] = None):
+    """Naive full-softmax attention with GQA head repetition.
+
+    q: (B, S, Hq, D); k, v: (B, Sk, Hkv, D)."""
+    hq, hkv = q.shape[2], k.shape[2]
+    if hq != hkv:
+        k = jnp.repeat(k, hq // hkv, axis=2)
+        v = jnp.repeat(v, hq // hkv, axis=2)
+    scale = 1.0 / np.sqrt(q.shape[-1])
+    logits = jnp.einsum("bqhd,bkhd->bhqk", q.astype(jnp.float32), k.astype(jnp.float32)) * scale
+    sq, sk = q.shape[1], k.shape[1]
+    qi = jnp.arange(sq)[:, None] + (sk - sq)
+    ki = jnp.arange(sk)[None, :]
+    mask = jnp.ones((sq, sk), bool)
+    if causal:
+        mask = ki <= qi
+    if window is not None:
+        mask = mask & (ki > qi - window)
+    logits = jnp.where(mask[None, None], logits, -1e30)
+    probs = jax.nn.softmax(logits, axis=-1)
+    out = jnp.einsum("bhqk,bkhd->bqhd", probs, v.astype(jnp.float32))
+    return out.astype(q.dtype)
+
+
+def hier_aggregate_ref(updates, weights):
+    """updates: (N, D); weights: (N,) -> weighted average (D,)."""
+    w = weights.astype(jnp.float32)
+    w = w / jnp.maximum(w.sum(), 1e-30)
+    return jnp.einsum("n,nd->d", w, updates.astype(jnp.float32)).astype(updates.dtype)
+
+
+def topk_gating_ref(logits, k: int):
+    """logits: (T, E) -> (combine (T, E) fp32, top_idx (T, k)).
+
+    Softmax -> top-k -> renormalized combine weights (zero off the top-k)."""
+    probs = jax.nn.softmax(logits.astype(jnp.float32), axis=-1)
+    top_vals, top_idx = jax.lax.top_k(probs, k)
+    top_vals = top_vals / jnp.maximum(top_vals.sum(-1, keepdims=True), 1e-9)
+    one_hot = jax.nn.one_hot(top_idx, probs.shape[-1], dtype=jnp.float32)
+    combine = jnp.einsum("tk,tke->te", top_vals, one_hot)
+    return combine, top_idx

@@ -1,0 +1,61 @@
+"""Top-k MoE router gating Pallas kernel.
+
+Fuses softmax + iterative top-k selection + renormalized combine-weight
+construction over a (block_t, E) token tile in VMEM.  k is small (2-8) so
+top-k is k sequential argmax sweeps on the VPU — no sort.  Produces the
+dense (T, E) combine matrix consumed by the expert dispatch einsum.
+"""
+from __future__ import annotations
+
+import functools
+from typing import Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+NEG_INF = -1e30
+
+
+def _gate_kernel(logits_ref, combine_ref, *, k: int):
+    logits = logits_ref[...].astype(jnp.float32)  # (bt, E)
+    probs = jax.nn.softmax(logits, axis=-1)
+    remaining = probs
+    picked = jnp.zeros_like(probs)
+    total = jnp.zeros((probs.shape[0], 1), jnp.float32)
+    for _ in range(k):
+        top = remaining.max(axis=-1, keepdims=True)  # (bt, 1)
+        is_top = (remaining == top) & (remaining > 0)
+        # break ties: keep only the first max per row
+        first = jnp.cumsum(is_top.astype(jnp.int32), axis=-1) == 1
+        sel = is_top & first
+        picked = picked + jnp.where(sel, probs, 0.0)
+        total = total + top
+        remaining = jnp.where(sel, 0.0, remaining)
+    combine_ref[...] = picked / jnp.maximum(total, 1e-9)
+
+
+def topk_gating(
+    logits: jnp.ndarray,
+    k: int,
+    *,
+    block_t: int = 1024,
+    interpret: Optional[bool] = None,
+) -> jnp.ndarray:
+    """logits: (T, E) -> combine weights (T, E) fp32 (zero off the top-k)."""
+    t, e = logits.shape
+    if interpret is None:
+        interpret = jax.default_backend() != "tpu"
+    block_t = min(block_t, t)
+    pad = (-t) % block_t
+    x = jnp.pad(logits, ((0, pad), (0, 0))) if pad else logits
+    tp = t + pad
+    out = pl.pallas_call(
+        functools.partial(_gate_kernel, k=k),
+        grid=(tp // block_t,),
+        in_specs=[pl.BlockSpec((block_t, e), lambda i: (i, 0))],
+        out_specs=pl.BlockSpec((block_t, e), lambda i: (i, 0)),
+        out_shape=jax.ShapeDtypeStruct((tp, e), jnp.float32),
+        interpret=interpret,
+    )(x)
+    return out[:t]

@@ -1,0 +1,81 @@
+import os
+os.environ["XLA_FLAGS"] = "--xla_force_host_platform_device_count=512 " + os.environ.get("XLA_FLAGS", "")
+
+"""Multi-pod dry-run launcher.
+
+Lowers + compiles the hierarchical-FL train/serve step for every
+(architecture x input shape) on the production meshes:
+
+  single pod : (16, 16)    axes (data, model)          = 256 chips
+  multi-pod  : (2, 16, 16) axes (pod, data, model)     = 512 chips
+
+and prints memory_analysis / cost_analysis per pair.  Results stream to
+``results/dryrun_<mesh>.json``.
+
+Usage:
+  PYTHONPATH=src python -m repro.launch.dryrun --arch qwen3-14b --shape train_4k
+  PYTHONPATH=src python -m repro.launch.dryrun --all [--multi-pod] [--mode fsdp]
+"""
+import argparse
+import json
+import sys
+
+from repro.configs import list_archs
+from repro.launch.dryrun_lib import lower_pair
+from repro.launch.mesh import make_production_mesh
+from repro.models.config import INPUT_SHAPES
+
+
+def run(args) -> int:
+    mesh = make_production_mesh(multi_pod=args.multi_pod)
+    archs = list_archs() if args.arch == "all" else [args.arch]
+    shapes = list(INPUT_SHAPES) if args.shape == "all" else [args.shape]
+    results = []
+    failed = 0
+    for arch in archs:
+        for shape in shapes:
+            res, lowered, compiled = lower_pair(
+                arch,
+                shape,
+                mesh,
+                sharding_mode=args.mode,
+                optimizer=args.optimizer,
+                remat=not args.no_remat,
+            )
+            results.append(res.as_dict())
+            tag = "OK  " if res.ok else "FAIL"
+            if res.kind == "skip":
+                tag = "SKIP"
+            print(f"[{tag}] {arch:24s} {shape:12s} mesh={res.mesh} {res.seconds:6.1f}s {res.note}")
+            if res.ok and res.memory:
+                gb = res.memory.get("total_bytes_per_device", 0) / 2**30
+                rl = res.roofline or {}
+                print(
+                    f"       mem/dev={gb:.2f} GiB  flops={rl.get('flops', 0):.3e}"
+                    f"  coll={sum(rl.get('coll_bytes', {}).values()):.3e}B"
+                    f"  dominant={rl.get('dominant')}"
+                )
+            if not res.ok:
+                failed += 1
+                print("       " + res.error.splitlines()[0])
+            if args.out:
+                with open(args.out, "w") as f:
+                    json.dump(results, f, indent=1)
+    print(f"\n{len(results) - failed}/{len(results)} lowered+compiled OK")
+    return 1 if failed else 0
+
+
+def main() -> None:
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--arch", default="all", help="architecture id or 'all'")
+    ap.add_argument("--shape", default="all", help="input shape name or 'all'")
+    ap.add_argument("--multi-pod", action="store_true")
+    ap.add_argument("--mode", default="fsdp", choices=["tp", "fsdp"])
+    ap.add_argument("--optimizer", default="adam", choices=["adam", "sgd"])
+    ap.add_argument("--no-remat", action="store_true")
+    ap.add_argument("--out", default="")
+    sys.exit(run(ap.parse_args()))
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,245 @@
+"""Dry-run core: lower + compile every (arch x shape x mesh) combination.
+
+No arrays are ever allocated: params/optimizer/cache/batch all enter as
+ShapeDtypeStruct.  Produces memory_analysis + cost_analysis + roofline terms
+per pair, serialized to JSON for EXPERIMENTS.md and benchmarks/roofline.
+"""
+from __future__ import annotations
+
+import dataclasses
+import json
+import time
+import traceback
+from functools import partial
+from typing import Any, Dict, Optional
+
+import jax
+import numpy as np
+from jax.sharding import NamedSharding, PartitionSpec as P
+
+from repro.distributed.analysis import (
+    Roofline,
+    model_flops_per_token,
+    roofline_from_compiled,
+    total_params,
+)
+from repro.distributed.axes import sharding_hints
+from repro.distributed.sharding import batch_spec, cache_specs, param_specs
+from repro.launch.specs import plan as make_plan
+from repro.launch.specs import (
+    cache_shapes,
+    decode_input_specs,
+    param_shapes,
+    train_batch_specs,
+)
+from repro.models import decode_step
+from repro.models.config import INPUT_SHAPES, ModelConfig
+from repro.models.transformer import prefill
+from repro.training.optimizers import adam, sgd
+from repro.training.train_step import TrainState, make_train_step
+
+
+def _named(mesh, spec_tree):
+    return jax.tree.map(
+        lambda s: NamedSharding(mesh, s),
+        spec_tree,
+        is_leaf=lambda x: isinstance(x, P),
+    )
+
+
+@dataclasses.dataclass
+class DryRunResult:
+    arch: str
+    shape: str
+    mesh: str
+    ok: bool
+    kind: str = ""
+    note: str = ""
+    error: str = ""
+    seconds: float = 0.0
+    memory: Optional[Dict[str, float]] = None
+    roofline: Optional[dict] = None
+    model_flops_token: float = 0.0
+    tokens: int = 0
+
+    def as_dict(self):
+        return dataclasses.asdict(self)
+
+
+def _memory_dict(compiled) -> Dict[str, float]:
+    ma = compiled.memory_analysis()
+    out = {}
+    for k in (
+        "argument_size_in_bytes",
+        "output_size_in_bytes",
+        "temp_size_in_bytes",
+        "generated_code_size_in_bytes",
+    ):
+        v = getattr(ma, k, None)
+        if v is not None:
+            out[k] = float(v)
+    out["total_bytes_per_device"] = (
+        out.get("argument_size_in_bytes", 0.0) + out.get("temp_size_in_bytes", 0.0)
+    )
+    return out
+
+
+def optimizer_for(cfg: ModelConfig, name: str = "adam"):
+    return adam(1e-4) if name == "adam" else sgd(0.01, momentum=0.9)
+
+
+def default_grad_accum(cfg, shape) -> int:
+    """Microbatch count so activations fit HBM: big models accumulate."""
+    n = total_params(cfg)
+    if n > 5e10:
+        return 8
+    if n > 1e10:
+        return 4
+    if n > 3e9:
+        return 2
+    return 1
+
+
+def lower_pair(
+    arch: str,
+    shape_name: str,
+    mesh,
+    *,
+    sharding_mode: str = "fsdp",
+    optimizer: str = "adam",
+    remat: bool = True,
+    donate: bool = True,
+    compile_: bool = True,
+    grad_accum: int = 0,
+):
+    """Lower (and optionally compile) one (arch, shape) on ``mesh``.
+
+    Returns (DryRunResult, lowered, compiled).
+    """
+    mesh_name = "x".join(str(s) for s in mesh.devices.shape)
+    t0 = time.time()
+    p = make_plan(arch, shape_name)
+    if p is None:
+        return (
+            DryRunResult(arch, shape_name, mesh_name, ok=True, kind="skip",
+                         note="skipped per DESIGN.md §Arch-applicability"),
+            None,
+            None,
+        )
+    cfg = p.cfg
+    if remat and p.kind == "train":
+        cfg = dataclasses.replace(cfg, remat=True)
+    shape = p.shape
+    n_dev = mesh.devices.size
+    try:
+        params_sds = param_shapes(cfg)
+        pspec = param_specs(cfg, params_sds, sharding_mode, mesh)
+        if p.kind == "train":
+            opt = optimizer_for(cfg, optimizer)
+            state_sds = jax.eval_shape(
+                lambda ps: TrainState(ps, opt.init(ps), jax.numpy.zeros((), jax.numpy.int32)),
+                params_sds,
+            )
+            ospec = jax.eval_shape(lambda ps: opt.init(ps), params_sds)
+            ospec = jax.tree.map(lambda _: None, ospec)  # placeholder, rebuilt below
+            from repro.distributed.sharding import opt_state_specs
+
+            opt_spec = opt_state_specs(pspec, jax.eval_shape(opt.init, params_sds), params_sds)
+            state_spec = TrainState(pspec, opt_spec, P())
+            batch_sds = train_batch_specs(cfg, shape)
+            bspec = {k: batch_spec(shape, mesh) if k in ("tokens", "labels") else P(
+                batch_spec(shape, mesh)[0], None, None
+            ) for k in batch_sds}
+            accum = grad_accum or default_grad_accum(cfg, shape)
+            step_fn = make_train_step(
+                cfg, opt, remat=remat, grad_accum=accum, param_pspec=pspec
+            )
+            jitted = jax.jit(
+                step_fn,
+                in_shardings=(_named(mesh, state_spec), _named(mesh, bspec)),
+                out_shardings=(_named(mesh, state_spec), None),
+                donate_argnums=(0,) if donate else (),
+            )
+            with mesh, sharding_hints(mesh):
+                lowered = jitted.lower(state_sds, batch_sds)
+            tokens = shape.global_batch * shape.seq_len
+        elif p.kind == "prefill":
+            batch_sds = train_batch_specs(cfg, shape)
+            bspec = {k: batch_spec(shape, mesh) if k in ("tokens", "labels") else P(
+                batch_spec(shape, mesh)[0], None, None
+            ) for k in batch_sds}
+            csds = cache_shapes(cfg, shape, params_sds)
+            cspec = cache_specs(cfg, csds, shape, mesh)
+
+            def prefill_step(params, tokens, enc_embeds=None):
+                return prefill(params, cfg, tokens, max_seq=shape.seq_len, enc_embeds=enc_embeds)
+
+            in_sh = [ _named(mesh, pspec), NamedSharding(mesh, bspec["tokens"]) ]
+            args = [params_sds, batch_sds["tokens"]]
+            if cfg.family == "encdec":
+                in_sh.append(NamedSharding(mesh, bspec["enc_embeds"]))
+                args.append(batch_sds["enc_embeds"])
+            jitted = jax.jit(
+                prefill_step,
+                in_shardings=tuple(in_sh),
+                out_shardings=(None, _named(mesh, cspec)),
+            )
+            with mesh, sharding_hints(mesh):
+                lowered = jitted.lower(*args)
+            tokens = shape.global_batch * shape.seq_len
+        else:  # decode
+            csds = cache_shapes(cfg, shape, params_sds)
+            cspec = cache_specs(cfg, csds, shape, mesh)
+            dec = decode_input_specs(cfg, shape)
+            bsz_spec = batch_spec(shape, mesh)
+
+            def serve_step(params, token, cache, position):
+                return decode_step(params, cfg, token, cache, position)
+
+            jitted = jax.jit(
+                serve_step,
+                in_shardings=(
+                    _named(mesh, pspec),
+                    NamedSharding(mesh, bsz_spec),
+                    _named(mesh, cspec),
+                    NamedSharding(mesh, P(bsz_spec[0])),
+                ),
+                out_shardings=(None, _named(mesh, cspec)),
+                donate_argnums=(2,) if donate else (),
+            )
+            with mesh, sharding_hints(mesh):
+                lowered = jitted.lower(params_sds, dec["token"], csds, dec["position"])
+            tokens = shape.global_batch
+        if not compile_:
+            return (
+                DryRunResult(arch, shape_name, mesh_name, ok=True, kind=p.kind,
+                             note=p.note, seconds=time.time() - t0, tokens=tokens),
+                lowered,
+                None,
+            )
+        compiled = lowered.compile()
+        rl = roofline_from_compiled(compiled, n_dev)
+        res = DryRunResult(
+            arch,
+            shape_name,
+            mesh_name,
+            ok=True,
+            kind=p.kind,
+            note=p.note,
+            seconds=time.time() - t0,
+            memory=_memory_dict(compiled),
+            roofline=rl.as_dict(),
+            model_flops_token=model_flops_per_token(cfg),
+            tokens=tokens,
+        )
+        return res, lowered, compiled
+    except Exception as e:  # noqa: BLE001 — report, don't crash the sweep
+        return (
+            DryRunResult(
+                arch, shape_name, mesh_name, ok=False, kind=p.kind,
+                error=f"{type(e).__name__}: {e}\n{traceback.format_exc()[-2000:]}",
+                seconds=time.time() - t0,
+            ),
+            None,
+            None,
+        )

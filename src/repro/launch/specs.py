@@ -1,0 +1,114 @@
+"""Input/plan specs for the dry-run: ShapeDtypeStruct stand-ins, no allocation.
+
+``plan(arch, shape)`` decides whether a pair runs and what config tweaks it
+needs (sliding-window variant for dense long-context decode, cache capacity,
+skip rules per DESIGN.md §Arch-applicability).
+"""
+from __future__ import annotations
+
+import dataclasses
+from functools import partial
+from typing import Any, Dict, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs import get_config
+from repro.models import init_cache, init_params
+from repro.models.config import INPUT_SHAPES, InputShape, ModelConfig
+
+SKIPS: Dict[Tuple[str, str], str] = {
+    (
+        "whisper-tiny",
+        "long_500k",
+    ): "enc-dec full-attention decoder; 524k-token decode unrepresentable for this family",
+}
+
+# dense/vlm archs get a sliding-window VARIANT for long_500k (DESIGN.md):
+SW_VARIANT_FAMILIES = ("dense", "vlm")
+SW_WINDOW = 4096
+
+
+@dataclasses.dataclass
+class Plan:
+    arch: str
+    shape: InputShape
+    cfg: ModelConfig
+    kind: str  # train | prefill | decode
+    note: str = ""
+
+
+def plan(arch: str, shape_name: str) -> Optional[Plan]:
+    shape = INPUT_SHAPES[shape_name]
+    if (arch, shape_name) in SKIPS:
+        return None
+    cfg = get_config(arch)
+    note = ""
+    if shape.kind == "decode":
+        cfg = dataclasses.replace(cfg, max_seq=shape.seq_len)
+        if (
+            shape_name == "long_500k"
+            and cfg.family in SW_VARIANT_FAMILIES
+            and cfg.sliding_window is None
+        ):
+            cfg = dataclasses.replace(cfg, sliding_window=SW_WINDOW)
+            note = f"sliding-window variant (w={SW_WINDOW})"
+    elif shape.kind in ("train", "prefill"):
+        cfg = dataclasses.replace(cfg, max_seq=max(cfg.max_seq, shape.seq_len))
+    return Plan(arch, shape, cfg, shape.kind, note)
+
+
+def _sds(shape, dtype):
+    return jax.ShapeDtypeStruct(shape, dtype)
+
+
+def train_batch_specs(cfg: ModelConfig, shape: InputShape) -> Dict[str, Any]:
+    b, s = shape.global_batch, shape.seq_len
+    batch = {
+        "tokens": _sds((b, s), jnp.int32),
+        "labels": _sds((b, s), jnp.int32),
+    }
+    if cfg.family == "encdec":
+        batch["enc_embeds"] = _sds((b, cfg.n_audio_frames, cfg.d_model), cfg.param_dtype)
+    return batch
+
+
+def param_shapes(cfg: ModelConfig):
+    return jax.eval_shape(partial(init_params, cfg=cfg), jax.random.PRNGKey(0))
+
+
+def cache_shapes(cfg: ModelConfig, shape: InputShape, params_sds=None):
+    kw = {}
+    if cfg.family == "encdec":
+        kw["params"] = params_sds if params_sds is not None else param_shapes(cfg)
+        kw["enc_embeds"] = _sds(
+            (shape.global_batch, cfg.n_audio_frames, cfg.d_model), cfg.param_dtype
+        )
+        return jax.eval_shape(
+            lambda p, e: init_cache(cfg, shape.global_batch, shape.seq_len, params=p, enc_embeds=e),
+            kw["params"],
+            kw["enc_embeds"],
+        )
+    return jax.eval_shape(lambda: init_cache(cfg, shape.global_batch, shape.seq_len))
+
+
+def decode_input_specs(cfg: ModelConfig, shape: InputShape):
+    b = shape.global_batch
+    return {
+        "token": _sds((b, 1), jnp.int32),
+        "position": _sds((b,), jnp.int32),
+    }
+
+
+def input_specs(arch: str, shape_name: str) -> Optional[Dict[str, Any]]:
+    """All ShapeDtypeStruct inputs for a pair (weak-type-correct, shardable)."""
+    p = plan(arch, shape_name)
+    if p is None:
+        return None
+    out: Dict[str, Any] = {"plan": p, "params": param_shapes(p.cfg)}
+    if p.kind in ("train", "prefill"):
+        out["batch"] = train_batch_specs(p.cfg, p.shape)
+    else:
+        out["cache"] = cache_shapes(p.cfg, p.shape, out["params"])
+        out.update(decode_input_specs(p.cfg, p.shape))
+    return out

@@ -1,0 +1,89 @@
+"""Training launcher.
+
+Two modes:
+  * --paper      : the paper's hierarchical-FL healthcare experiment (CPU-runnable)
+  * --arch <id>  : LM training of an assigned architecture on synthetic token
+                   streams (smoke variant on CPU; full config on a TPU mesh —
+                   pass --mesh production there)
+
+  PYTHONPATH=src python -m repro.launch.train --paper --rounds 4
+  PYTHONPATH=src python -m repro.launch.train --arch qwen3-14b --steps 20
+"""
+from __future__ import annotations
+
+import argparse
+import time
+
+
+def run_paper(args) -> None:
+    from repro.core.hfl import HFLSchedule
+    from repro.federated import build_scenario
+
+    sc = build_scenario(args.dataset, scale=args.scale, seed=args.seed)
+    a = sc.assign(args.strategy)
+    print(f"strategy={args.strategy} KLD={a.kld_total:.3f}")
+    res = sc.simulate(
+        a.lam,
+        cloud_rounds=args.rounds,
+        schedule=HFLSchedule(args.local_steps, args.edge_per_cloud),
+        seed=args.seed,
+    )
+    for m in res.history:
+        print(f"round {m.cloud_round}: acc={m.test_acc:.3f}")
+
+
+def run_lm(args) -> None:
+    import jax
+    import jax.numpy as jnp
+
+    from repro.configs import get_config, get_smoke_config
+    from repro.data import TokenStream
+    from repro.models import init_params
+    from repro.training import adam, init_train_state, make_train_step
+    from repro.training.checkpoint import save_checkpoint
+
+    cfg = get_config(args.arch) if args.full_config else get_smoke_config(args.arch)
+    params = init_params(jax.random.PRNGKey(args.seed), cfg)
+    opt = adam(args.lr)
+    state = init_train_state(params, opt)
+    step = jax.jit(make_train_step(cfg, opt, grad_accum=args.grad_accum))
+    stream = TokenStream(cfg.vocab_size, seed=args.seed)
+    t0 = time.time()
+    for i in range(1, args.steps + 1):
+        b = stream.train_batch(args.batch, args.seq)
+        state, m = step(state, {k: jnp.asarray(v) for k, v in b.items()})
+        if i % max(1, args.steps // 10) == 0:
+            print(f"step {i:4d} loss={float(m['total_loss']):.4f} "
+                  f"({(time.time()-t0)/i:.2f}s/step)")
+    if args.checkpoint:
+        save_checkpoint(args.checkpoint, state.params, step=args.steps)
+        print("saved", args.checkpoint)
+
+
+def main() -> None:
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--paper", action="store_true")
+    ap.add_argument("--dataset", default="heartbeat")
+    ap.add_argument("--strategy", default="eara-sca")
+    ap.add_argument("--rounds", type=int, default=4)
+    ap.add_argument("--local-steps", type=int, default=1)
+    ap.add_argument("--edge-per-cloud", type=int, default=1)
+    ap.add_argument("--scale", type=float, default=0.05)
+    ap.add_argument("--arch", default="")
+    ap.add_argument("--full-config", action="store_true")
+    ap.add_argument("--steps", type=int, default=20)
+    ap.add_argument("--batch", type=int, default=4)
+    ap.add_argument("--seq", type=int, default=64)
+    ap.add_argument("--lr", type=float, default=1e-3)
+    ap.add_argument("--grad-accum", type=int, default=1)
+    ap.add_argument("--checkpoint", default="")
+    ap.add_argument("--seed", type=int, default=0)
+    args = ap.parse_args()
+    if args.paper or not args.arch:
+        run_paper(args)
+    else:
+        run_lm(args)
+
+
+if __name__ == "__main__":
+    main()

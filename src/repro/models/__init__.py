@@ -1,0 +1,24 @@
+from repro.models.config import INPUT_SHAPES, InputShape, ModelConfig, MoEConfig, RWKVConfig, SSMConfig
+from repro.models.transformer import (
+    block_spec,
+    decode_step,
+    encode,
+    forward,
+    init_cache,
+    init_params,
+)
+
+__all__ = [
+    "INPUT_SHAPES",
+    "InputShape",
+    "ModelConfig",
+    "MoEConfig",
+    "RWKVConfig",
+    "SSMConfig",
+    "block_spec",
+    "decode_step",
+    "encode",
+    "forward",
+    "init_cache",
+    "init_params",
+]

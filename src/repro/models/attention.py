@@ -1,0 +1,240 @@
+"""Grouped-query attention with RoPE, qk-norm, QKV-bias, sliding window.
+
+Three execution modes:
+  * full-sequence (train / prefill): causal (+ optional sliding window) mask;
+  * decode: one new token attending to a (possibly sharded) KV cache;
+  * cross: encoder-decoder cross-attention (whisper).
+
+The jnp path below is the XLA-fused reference; ``cfg.use_flash`` swaps the
+full-sequence path for the Pallas flash kernel (repro.kernels.flash_attention)
+on TPU.
+"""
+from __future__ import annotations
+
+from typing import Optional
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.distributed.axes import constrain
+from repro.models.config import ModelConfig
+from repro.models.modules import apply_norm, apply_rope, dense, dense_init, norm_init
+
+NEG_INF = -1e30
+
+
+def attn_init(key, cfg: ModelConfig, *, cross: bool = False):
+    dt = cfg.param_dtype
+    dh = cfg.d_head
+    ks = jax.random.split(key, 6)
+    p = {
+        "wq": dense_init(ks[0], cfg.d_model, cfg.n_heads * dh, dt, bias=cfg.qkv_bias),
+        "wk": dense_init(ks[1], cfg.d_model, cfg.n_kv_heads * dh, dt, bias=cfg.qkv_bias),
+        "wv": dense_init(ks[2], cfg.d_model, cfg.n_kv_heads * dh, dt, bias=cfg.qkv_bias),
+        "wo": dense_init(ks[3], cfg.n_heads * dh, cfg.d_model, dt),
+    }
+    if cfg.qk_norm and not cross:
+        p["q_norm"] = norm_init(dh, dt)
+        p["k_norm"] = norm_init(dh, dt)
+    return p
+
+
+def _split_heads(x, n_heads, d_head):
+    return x.reshape(x.shape[:-1] + (n_heads, d_head))
+
+
+def _merge_heads(x):
+    return x.reshape(x.shape[:-2] + (x.shape[-2] * x.shape[-1],))
+
+
+def _repeat_kv(k, q_per_kv):
+    """(B, S, Hkv, D) -> (B, S, Hq, D) by repeating each kv head."""
+    if q_per_kv == 1:
+        return k
+    return jnp.repeat(k, q_per_kv, axis=2)
+
+
+def qkv_project(p, cfg: ModelConfig, x, positions=None, *, rope: bool = True):
+    """Project and prepare q, k, v (with qk-norm + RoPE where configured)."""
+    q = _split_heads(dense(p["wq"], x), cfg.n_heads, cfg.d_head)
+    k = _split_heads(dense(p["wk"], x), cfg.n_kv_heads, cfg.d_head)
+    v = _split_heads(dense(p["wv"], x), cfg.n_kv_heads, cfg.d_head)
+    if "q_norm" in p:
+        q = apply_norm(p["q_norm"], q, cfg.norm_eps)
+        k = apply_norm(p["k_norm"], k, cfg.norm_eps)
+    if rope and positions is not None:
+        q = apply_rope(q, positions, cfg.rope_theta)
+        k = apply_rope(k, positions, cfg.rope_theta)
+    return constrain(q, "heads"), constrain(k, "heads"), constrain(v, "heads")
+
+
+def sdpa(q, k, v, mask=None):
+    """Reference scaled-dot-product attention.
+
+    q: (B, Sq, H, D); k, v: (B, Sk, H, D); mask broadcastable (B,H,Sq,Sk)."""
+    scale = 1.0 / np.sqrt(q.shape[-1])
+    logits = jnp.einsum(
+        "bqhd,bkhd->bhqk", q, k, preferred_element_type=jnp.float32
+    ) * scale
+    if mask is not None:
+        logits = jnp.where(mask, logits, NEG_INF)
+    probs = jax.nn.softmax(logits, axis=-1)
+    out = jnp.einsum(
+        "bhqk,bkhd->bqhd", probs.astype(v.dtype), v, preferred_element_type=jnp.float32
+    )
+    return out.astype(v.dtype)
+
+
+def blockwise_attention(q, k, v, *, causal=True, window=None, q_block=512, kv_block=512):
+    """Flash-style online-softmax attention in pure jnp (memory O(block^2)).
+
+    Never materializes the (B, H, Sq, Sk) score matrix — this is the
+    production full-sequence path (the Pallas kernel implements the same
+    algorithm with explicit VMEM tiles; repro.kernels.flash_attention.ref
+    delegates here).
+
+    q: (B, S, H, D); k, v: (B, S, H, D) (kv already head-repeated).
+    """
+    b, s, h, d = q.shape
+    sk = k.shape[1]
+    q_block = min(q_block, s)
+    kv_block = min(kv_block, sk)
+    assert s % q_block == 0 and sk % kv_block == 0
+    nq, nk = s // q_block, sk // kv_block
+    scale = 1.0 / np.sqrt(d)
+    qb = q.reshape(b, nq, q_block, h, d).transpose(1, 0, 3, 2, 4)  # (nq,b,h,qb,d)
+    kb = k.reshape(b, nk, kv_block, h, d).transpose(1, 0, 3, 2, 4)
+    vb = v.reshape(b, nk, kv_block, h, d).transpose(1, 0, 3, 2, 4)
+
+    def q_step(qi, q_tile):
+        q_pos = qi * q_block + jnp.arange(q_block)
+
+        def kv_step(carry, inputs):
+            acc, m, l = carry
+            ki, k_tile, v_tile = inputs
+            logits = (
+                jnp.einsum("bhqd,bhkd->bhqk", q_tile, k_tile,
+                           preferred_element_type=jnp.float32) * scale
+            )
+            logits = constrain(logits, "probs")
+            k_pos = ki * kv_block + jnp.arange(kv_block)
+            mask = jnp.ones((q_block, kv_block), bool)
+            if causal:
+                mask = k_pos[None, :] <= q_pos[:, None]
+            if window is not None:
+                mask = mask & (k_pos[None, :] > q_pos[:, None] - window)
+            logits = jnp.where(mask[None, None], logits, NEG_INF)
+            m_new = jnp.maximum(m, logits.max(-1))
+            p = jnp.exp(logits - m_new[..., None])
+            alpha = jnp.exp(m - m_new)
+            l = l * alpha + p.sum(-1)
+            acc = acc * alpha[..., None] + jnp.einsum(
+                "bhqk,bhkd->bhqd", p.astype(v_tile.dtype), v_tile,
+                preferred_element_type=jnp.float32,
+            )
+            return (acc, m_new, l), None
+
+        acc0 = jnp.zeros((b, h, q_block, d), jnp.float32)
+        m0 = jnp.full((b, h, q_block), NEG_INF, jnp.float32)
+        l0 = jnp.zeros((b, h, q_block), jnp.float32)
+        # remat per kv tile: backward recomputes p instead of saving the
+        # (nq, nk, b, h, qb, kb) probability stack (flash-backward semantics)
+        (acc, m, l), _ = jax.lax.scan(
+            jax.checkpoint(kv_step), (acc0, m0, l0), (jnp.arange(nk), kb, vb)
+        )
+        return acc / jnp.maximum(l[..., None], 1e-30)
+
+    out = jax.vmap(q_step)(jnp.arange(nq), qb)  # (nq, b, h, qb, d)
+    out = out.transpose(1, 0, 3, 2, 4).reshape(b, s, h, d)
+    return out.astype(v.dtype)
+
+
+def causal_mask(sq: int, sk: int, window: Optional[int] = None):
+    """(1, 1, sq, sk) causal (+sliding window) mask; sk >= sq, aligned right."""
+    qi = jnp.arange(sq)[:, None] + (sk - sq)
+    ki = jnp.arange(sk)[None, :]
+    m = ki <= qi
+    if window is not None:
+        m = m & (ki > qi - window)
+    return m[None, None]
+
+
+def full_attention(p, cfg: ModelConfig, x, positions, *, window=None, return_kv=False):
+    """Train / prefill self-attention over a full sequence."""
+    q, k, v = qkv_project(p, cfg, x, positions)
+    if cfg.use_flash:
+        from repro.kernels.ops import flash_attention as _flash
+
+        out = _flash(q, k, v, causal=True, window=window)
+    else:
+        kr = _repeat_kv(k, cfg.q_per_kv)
+        vr = _repeat_kv(v, cfg.q_per_kv)
+        if x.shape[1] > 1024:  # production path: O(block^2) memory
+            out = blockwise_attention(q, kr, vr, causal=True, window=window)
+        else:
+            mask = causal_mask(x.shape[1], x.shape[1], window)
+            out = sdpa(q, kr, vr, mask)
+    out = dense(p["wo"], _merge_heads(out))
+    if return_kv:
+        return out, k, v
+    return out
+
+
+def cross_attention(p, cfg: ModelConfig, x, enc_kv):
+    """Decoder->encoder attention; enc_kv = (k, v) precomputed from encoder."""
+    q = _split_heads(dense(p["wq"], x), cfg.n_heads, cfg.d_head)
+    k, v = enc_kv
+    k = _repeat_kv(k, cfg.q_per_kv)
+    v = _repeat_kv(v, cfg.q_per_kv)
+    out = sdpa(q, k, v, mask=None)
+    return dense(p["wo"], _merge_heads(out))
+
+
+def encoder_kv(p, cfg: ModelConfig, enc_out):
+    """Precompute cross-attention K, V once per sequence (whisper serving)."""
+    k = _split_heads(dense(p["wk"], enc_out), cfg.n_kv_heads, cfg.d_head)
+    v = _split_heads(dense(p["wv"], enc_out), cfg.n_kv_heads, cfg.d_head)
+    return k, v
+
+
+def project_decode_kv(p, cfg: ModelConfig, x, position):
+    """Project this token's k, v (with rope/qk-norm) for cache insertion."""
+    _, k_new, v_new = qkv_project(p, cfg, x, positions=position[..., None])
+    return k_new, v_new
+
+
+def decode_attention(p, cfg: ModelConfig, x, cache_k, cache_v, position, *, window=None):
+    """Single-token decode: x (B, 1, d); cache_k/v (B, S, Hkv, D) — the cache
+    ALREADY contains this token's k/v at slot ``position`` (caller scatters
+    first).  Attends over the valid prefix [0, position], optionally limited
+    to the last ``window`` positions.
+    """
+    q, _, _ = qkv_project(p, cfg, x, positions=position[..., None])
+    s = cache_k.shape[1]
+    kv_pos = jnp.arange(s)[None, :]  # (1, S)
+    valid = kv_pos <= position[:, None]
+    if window is not None:
+        valid = valid & (kv_pos > position[:, None] - window)
+    k = _repeat_kv(cache_k, cfg.q_per_kv)
+    v = _repeat_kv(cache_v, cfg.q_per_kv)
+    mask = valid[:, None, None, :]  # (B, 1, 1, S)
+    if cfg.q_per_kv > 1:
+        # context-parallel decode for GQA: pin the (B,H,1,S) scores to the
+        # cache's seq sharding so XLA reduces softmax stats instead of
+        # all-gathering the multi-GB cache per layer (§Perf iteration B3).
+        # For MHA (q_per_kv == 1) XLA already picks the gather-free plan and
+        # the constraint regresses it — measured, see §Perf.
+        scale = 1.0 / np.sqrt(q.shape[-1])
+        logits = jnp.einsum(
+            "bqhd,bkhd->bhqk", q, k, preferred_element_type=jnp.float32
+        ) * scale
+        logits = constrain(jnp.where(mask, logits, NEG_INF), "kvlogits")
+        probs = jax.nn.softmax(logits, axis=-1)
+        out = jnp.einsum(
+            "bhqk,bkhd->bqhd", probs.astype(v.dtype), v,
+            preferred_element_type=jnp.float32,
+        ).astype(v.dtype)
+    else:
+        out = sdpa(q, k, v, mask)
+    return dense(p["wo"], _merge_heads(out))

@@ -1,0 +1,166 @@
+"""Selective state-space mixer (Mamba / S6) for the Jamba hybrid architecture.
+
+TPU adaptation (DESIGN.md Sec. 3): the CUDA selective-scan kernel is replaced
+by a *chunked associative scan* — within a chunk the recurrence is evaluated
+with `jax.lax.associative_scan` over the sequence axis (log-depth, MXU/VPU
+friendly), and the per-chunk carries compose linearly.  Decode is the O(1)
+single-step recurrence on a (B, d_inner, d_state) carry.
+
+State update (diagonal A):
+    h_t = exp(dt_t * A) * h_{t-1} + dt_t * B_t * x_t
+    y_t = C_t . h_t + D * x_t
+"""
+from __future__ import annotations
+
+from typing import Tuple
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.models.config import ModelConfig
+from repro.models.modules import dense, dense_init
+
+
+def mamba_init(key, cfg: ModelConfig):
+    s = cfg.ssm
+    dt = cfg.param_dtype
+    d_inner = s.expand * cfg.d_model
+    dt_rank = s.dt_rank or max(1, int(np.ceil(cfg.d_model / 16)))
+    ks = jax.random.split(key, 8)
+    # S4D-real initialization for A (negative reals)
+    a = jnp.tile(jnp.arange(1, s.d_state + 1, dtype=jnp.float32), (d_inner, 1))
+    return {
+        "in_proj": dense_init(ks[0], cfg.d_model, 2 * d_inner, dt),
+        "conv_w": (jax.random.normal(ks[1], (s.d_conv, d_inner), jnp.float32) * 0.1).astype(dt),
+        "conv_b": jnp.zeros((d_inner,), dt),
+        "x_proj": dense_init(ks[2], d_inner, dt_rank + 2 * s.d_state, dt),
+        "dt_proj": dense_init(ks[3], dt_rank, d_inner, dt, bias=True),
+        "a_log": jnp.log(a),  # (d_inner, d_state) fp32
+        "d_skip": jnp.ones((d_inner,), jnp.float32),
+        "out_proj": dense_init(ks[4], d_inner, cfg.d_model, dt),
+    }
+
+
+def _causal_conv(p, cfg: ModelConfig, x):
+    """Depthwise causal conv over seq: x (B, S, d_inner)."""
+    k = p["conv_w"].shape[0]
+    pad = jnp.pad(x, ((0, 0), (k - 1, 0), (0, 0)))
+    # depthwise: sum_j w[j, c] * x[t - (k-1) + j, c]
+    out = sum(
+        pad[:, j : j + x.shape[1], :] * p["conv_w"][j].astype(x.dtype)
+        for j in range(k)
+    )
+    return out + p["conv_b"].astype(x.dtype)
+
+
+def mamba_mixer(p, cfg: ModelConfig, u, *, return_state: bool = False, chunk: int = 128):
+    """Full-sequence mixer. u: (B, S, d_model) -> (B, S, d_model).
+
+    The recurrence is evaluated CHUNK-WISE: a lax.scan over sequence chunks
+    carries the (B, di, n) state; within a chunk a log-depth associative scan
+    runs in fp32.  Peak memory is O(B * chunk * di * n) instead of the
+    O(B * S * di * n) of a whole-sequence scan (the CUDA kernel's fusion,
+    reproduced structurally — see DESIGN.md Sec. 3).
+
+    With ``return_state``, also returns the final recurrent state dict
+    (for prefill -> decode handoff)."""
+    from repro.distributed.axes import constrain
+
+    bsz, seq, _ = u.shape
+    xz = dense(p["in_proj"], u)
+    x_raw, z = jnp.split(xz, 2, axis=-1)
+    x_raw = constrain(x_raw, "inner")
+    x = jax.nn.silu(_causal_conv(p, cfg, x_raw).astype(jnp.float32)).astype(u.dtype)
+    x = constrain(x, "inner")
+    # dt/B/C are computed on the conv'd activation (mamba ordering)
+    proj = dense(p["x_proj"], x)
+    s = cfg.ssm
+    dt_rank = s.dt_rank or max(1, int(np.ceil(cfg.d_model / 16)))
+    dt_in, b, c = jnp.split(proj, [dt_rank, dt_rank + s.d_state], axis=-1)
+    dt_full = jax.nn.softplus(dense(p["dt_proj"], dt_in).astype(jnp.float32))  # (B,S,di)
+    dt_full = constrain(dt_full, "inner")
+    a = -jnp.exp(p["a_log"])  # (di, n)
+    di = x.shape[-1]
+
+    chunk = min(chunk, seq)
+    pad = (-seq) % chunk
+    if pad:
+        zpad = lambda t: jnp.pad(t, ((0, 0), (0, pad)) + ((0, 0),) * (t.ndim - 2))
+        x_c, dt_c, b_c, c_c = zpad(x), zpad(dt_full), zpad(b), zpad(c)
+    else:
+        x_c, dt_c, b_c, c_c = x, dt_full, b, c
+    nc = (seq + pad) // chunk
+
+    def to_chunks(t):
+        return t.reshape(bsz, nc, chunk, *t.shape[2:]).swapaxes(0, 1)
+
+    xs = (to_chunks(x_c), to_chunks(dt_c), to_chunks(b_c), to_chunks(c_c))
+
+    def chunk_step(h_in, inputs):
+        xc, dtc, bc, cc = inputs  # (B, C, ...)
+        decay = jnp.exp(dtc[..., None] * a)  # (B, C, di, n)
+        decay = constrain(decay, "ssm")
+        drive = dtc[..., None] * bc[:, :, None, :].astype(jnp.float32) * xc.astype(jnp.float32)[..., None]
+        drive = constrain(drive, "ssm")
+
+        def combine(l, r):
+            dl, hl = l
+            dr, hr = r
+            return dl * dr, hr + dr * hl
+
+        dcum, hloc = jax.lax.associative_scan(combine, (decay, drive), axis=1)
+        h = hloc + dcum * h_in[:, None]  # (B, C, di, n)
+        y = jnp.einsum("bsdn,bsn->bsd", h, cc.astype(jnp.float32))
+        return h[:, -1], y
+
+    h0 = jnp.zeros((bsz, di, s.d_state), jnp.float32)
+    h_last, ys = jax.lax.scan(jax.checkpoint(chunk_step), h0, xs)
+    y = ys.swapaxes(0, 1).reshape(bsz, nc * chunk, di)[:, :seq]
+    y = y + p["d_skip"] * x.astype(jnp.float32)
+    y = y * jax.nn.silu(z.astype(jnp.float32))
+    out = dense(p["out_proj"], y.astype(u.dtype))
+    if return_state:
+        assert pad == 0, "return_state requires seq % chunk == 0"
+        k = p["conv_w"].shape[0]
+        tail = x_raw[:, -(k - 1):, :].astype(jnp.float32)
+        tpad = (k - 1) - tail.shape[1]
+        if tpad > 0:
+            tail = jnp.pad(tail, ((0, 0), (tpad, 0), (0, 0)))
+        return out, {"h": h_last, "conv": tail}
+    return out
+
+
+def mamba_init_state(cfg: ModelConfig, batch: int, dtype=jnp.float32):
+    s = cfg.ssm
+    d_inner = s.expand * cfg.d_model
+    return {
+        "h": jnp.zeros((batch, d_inner, s.d_state), dtype),
+        "conv": jnp.zeros((batch, s.d_conv - 1, d_inner), dtype),
+    }
+
+
+def mamba_decode_step(p, cfg: ModelConfig, u, state) -> Tuple[jnp.ndarray, dict]:
+    """Single-token step. u: (B, 1, d_model); state carries h and conv tail."""
+    xz = dense(p["in_proj"], u)
+    x_raw, z = jnp.split(xz, 2, axis=-1)  # (B,1,di)
+    # causal conv using the stored tail
+    window = jnp.concatenate([state["conv"].astype(x_raw.dtype), x_raw], axis=1)  # (B,k,di)
+    k = p["conv_w"].shape[0]
+    x = sum(window[:, j, :] * p["conv_w"][j].astype(x_raw.dtype) for j in range(k))
+    x = jax.nn.silu((x + p["conv_b"].astype(x.dtype)).astype(jnp.float32)).astype(u.dtype)  # (B,di)
+    s = cfg.ssm
+    dt_rank = s.dt_rank or max(1, int(np.ceil(cfg.d_model / 16)))
+    proj = dense(p["x_proj"], x)
+    dt_in, b, c = jnp.split(proj, [dt_rank, dt_rank + s.d_state], axis=-1)
+    dt_full = jax.nn.softplus(dense(p["dt_proj"], dt_in).astype(jnp.float32))  # (B,di)
+    a = -jnp.exp(p["a_log"])
+    decay = jnp.exp(dt_full[..., None] * a)  # (B,di,n)
+    drive = dt_full[..., None] * b[:, None, :].astype(jnp.float32) * x.astype(jnp.float32)[..., None]
+    h = decay * state["h"] + drive
+    y = jnp.einsum("bdn,bn->bd", h, c.astype(jnp.float32))
+    y = y + p["d_skip"] * x.astype(jnp.float32)
+    y = y * jax.nn.silu(z[:, 0].astype(jnp.float32))
+    out = dense(p["out_proj"], y.astype(u.dtype))[:, None, :]
+    new_state = {"h": h, "conv": window[:, 1:, :].astype(state["conv"].dtype)}
+    return out, new_state

@@ -1,0 +1,33 @@
+"""Feed-forward blocks: GeLU MLP and SwiGLU (gated) MLP."""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from repro.models.config import ModelConfig
+from repro.models.modules import dense, dense_init
+
+
+def mlp_init(key, cfg: ModelConfig, d_ff: int | None = None):
+    dt = cfg.param_dtype
+    d_ff = d_ff or cfg.d_ff
+    ks = jax.random.split(key, 3)
+    if cfg.act == "swiglu":
+        return {
+            "wi": dense_init(ks[0], cfg.d_model, d_ff, dt),
+            "wg": dense_init(ks[1], cfg.d_model, d_ff, dt),
+            "wo": dense_init(ks[2], d_ff, cfg.d_model, dt),
+        }
+    return {
+        "wi": dense_init(ks[0], cfg.d_model, d_ff, dt),
+        "wo": dense_init(ks[2], d_ff, cfg.d_model, dt),
+    }
+
+
+def mlp(p, cfg: ModelConfig, x):
+    if "wg" in p:
+        h = jax.nn.silu(dense(p["wi"], x).astype(jnp.float32)).astype(x.dtype)
+        h = h * dense(p["wg"], x)
+    else:
+        h = jax.nn.gelu(dense(p["wi"], x).astype(jnp.float32)).astype(x.dtype)
+    return dense(p["wo"], h)

@@ -1,0 +1,111 @@
+"""Minimal functional module primitives (init + apply pairs).
+
+Parameters are plain dict pytrees; every ``init_*`` returns a dict and the
+matching ``apply`` is a pure function.  Matmuls accumulate in fp32 via
+``preferred_element_type`` — the MXU-native pattern.
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+
+def dense_init(key, d_in: int, d_out: int, dtype, *, bias: bool = False, scale=None):
+    scale = scale if scale is not None else 1.0 / np.sqrt(d_in)
+    w = (jax.random.normal(key, (d_in, d_out), jnp.float32) * scale).astype(dtype)
+    p = {"w": w}
+    if bias:
+        p["b"] = jnp.zeros((d_out,), dtype)
+    return p
+
+
+@jax.custom_vjp
+def _matmul(x, w):
+    y = jnp.einsum("...i,io->...o", x, w, preferred_element_type=jnp.float32)
+    return y.astype(x.dtype)
+
+
+def _matmul_fwd(x, w):
+    return _matmul(x, w), (x, w)
+
+
+def _matmul_bwd(res, g):
+    """Weight cotangent emitted directly in the WEIGHT dtype: the default
+    fp32 (from preferred_element_type) dw temporaries dominate per-device
+    memory for multi-GB weights (EXPERIMENTS.md §Perf iteration A5)."""
+    x, w = res
+    dx = jnp.einsum("...o,io->...i", g, w, preferred_element_type=jnp.float32).astype(x.dtype)
+    xf = x.reshape(-1, x.shape[-1])
+    gf = g.reshape(-1, g.shape[-1])
+    dw = jnp.einsum("ti,to->io", xf, gf, preferred_element_type=jnp.float32).astype(w.dtype)
+    return dx, dw
+
+
+_matmul.defvjp(_matmul_fwd, _matmul_bwd)
+
+
+def dense(p, x):
+    y = _matmul(x, p["w"])
+    if "b" in p:
+        y = (y.astype(jnp.float32) + p["b"].astype(jnp.float32)).astype(x.dtype)
+    return y
+
+
+def embedding_init(key, vocab: int, d: int, dtype):
+    return {"emb": (jax.random.normal(key, (vocab, d), jnp.float32) * 0.02).astype(dtype)}
+
+
+def embed(p, ids):
+    return jnp.take(p["emb"], ids, axis=0)
+
+
+def unembed(p, x):
+    """Tied or untied output projection to vocab logits (fp32)."""
+    return jnp.einsum(
+        "...d,vd->...v", x, p["emb"], preferred_element_type=jnp.float32
+    )
+
+
+def norm_init(d: int, dtype, kind: str = "rmsnorm"):
+    p = {"scale": jnp.ones((d,), dtype)}
+    if kind == "layernorm":
+        p["bias"] = jnp.zeros((d,), dtype)
+    return p
+
+
+def apply_norm(p, x, eps: float = 1e-5):
+    from repro.distributed.axes import constrain, grad_cast
+
+    # pin the fp32 upcast's layout (forward AND cotangent): GSPMD otherwise
+    # loses the sharding of the in-replay cotangent and all-gathers fp32
+    x = grad_cast(x)
+    xf = x.astype(jnp.float32)
+    if x.ndim == 3:
+        xf = constrain(xf, "tokens")
+    if "bias" in p:  # layernorm
+        mu = jnp.mean(xf, axis=-1, keepdims=True)
+        var = jnp.var(xf, axis=-1, keepdims=True)
+        y = (xf - mu) * jax.lax.rsqrt(var + eps)
+        y = y * p["scale"].astype(jnp.float32) + p["bias"].astype(jnp.float32)
+    else:  # rmsnorm
+        ms = jnp.mean(jnp.square(xf), axis=-1, keepdims=True)
+        y = xf * jax.lax.rsqrt(ms + eps) * p["scale"].astype(jnp.float32)
+    return y.astype(x.dtype)
+
+
+# rotary position embeddings -------------------------------------------------
+def rope_frequencies(d_head: int, theta: float):
+    return 1.0 / (theta ** (np.arange(0, d_head, 2, dtype=np.float32) / d_head))
+
+
+def apply_rope(x: jnp.ndarray, positions: jnp.ndarray, theta: float):
+    """x: (..., seq, heads, d_head); positions: broadcastable to (..., seq)."""
+    d = x.shape[-1]
+    freqs = jnp.asarray(rope_frequencies(d, theta))  # (d/2,)
+    angles = positions[..., :, None].astype(jnp.float32) * freqs  # (..., seq, d/2)
+    cos = jnp.cos(angles)[..., :, None, :]  # (..., seq, 1, d/2)
+    sin = jnp.sin(angles)[..., :, None, :]
+    x1, x2 = jnp.split(x.astype(jnp.float32), 2, axis=-1)
+    out = jnp.concatenate([x1 * cos - x2 * sin, x2 * cos + x1 * sin], axis=-1)
+    return out.astype(x.dtype)

@@ -1,0 +1,178 @@
+"""Mixture-of-Experts layer: top-k softmax router + SwiGLU experts.
+
+Dense (einsum) dispatch: every token's hidden state is combined against all
+experts with a (tokens, experts) combine matrix that is zero outside the
+top-k.  This is the standard expert-parallel-friendly formulation — the
+expert dimension shards over the mesh "model"/"expert" axis and XLA lowers
+the dispatch/combine einsums to all-to-alls when tokens and experts live on
+different axes.
+
+Router auxiliary losses: load-balance loss (Switch-style) + router z-loss —
+both returned so the training loop can add them; in hierarchical FL these
+router statistics travel with the model updates, which the paper's
+communication accounting must include (DESIGN.md Sec. 4).
+"""
+from __future__ import annotations
+
+from typing import Tuple
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.distributed.axes import constrain
+from repro.models.config import ModelConfig
+from repro.models.modules import dense, dense_init
+
+
+def moe_init(key, cfg: ModelConfig):
+    assert cfg.moe is not None
+    dt = cfg.param_dtype
+    e = cfg.moe.n_experts
+    d_ff = cfg.d_ff
+    ks = jax.random.split(key, 4)
+
+    def expert_stack(k, d_in, d_out):
+        sub = jax.random.split(k, e)
+        return jnp.stack(
+            [dense_init(s, d_in, d_out, dt)["w"] for s in sub], axis=0
+        )  # (E, d_in, d_out)
+
+    return {
+        "router": dense_init(ks[0], cfg.d_model, e, jnp.float32),
+        "wi": expert_stack(ks[1], cfg.d_model, d_ff),
+        "wg": expert_stack(ks[2], cfg.d_model, d_ff),
+        "wo": expert_stack(ks[3], d_ff, cfg.d_model),
+    }
+
+
+def router_topk(logits: jnp.ndarray, top_k: int) -> Tuple[jnp.ndarray, jnp.ndarray, jnp.ndarray]:
+    """Return (combine_weights (T, E), aux_loss, z_loss) for router logits (T, E)."""
+    probs = jax.nn.softmax(logits.astype(jnp.float32), axis=-1)
+    top_vals, top_idx = jax.lax.top_k(probs, top_k)
+    # renormalize the selected experts' probabilities (DBRX/Mixtral convention)
+    top_vals = top_vals / jnp.maximum(top_vals.sum(-1, keepdims=True), 1e-9)
+    one_hot = jax.nn.one_hot(top_idx, probs.shape[-1], dtype=probs.dtype)  # (T,K,E)
+    combine = jnp.einsum("tk,tke->te", top_vals, one_hot)
+    # Switch load-balance loss: E * sum_e (fraction_tokens_e * mean_prob_e)
+    frac = one_hot.sum(axis=1).mean(axis=0)  # (E,) fraction routed (incl. multi-k)
+    mean_prob = probs.mean(axis=0)
+    aux = probs.shape[-1] * jnp.sum(frac * mean_prob)
+    z = jnp.mean(jnp.square(jax.nn.logsumexp(logits.astype(jnp.float32), axis=-1)))
+    return combine, aux, z
+
+
+def moe_mlp(p, cfg: ModelConfig, x) -> Tuple[jnp.ndarray, jnp.ndarray, jnp.ndarray]:
+    """x: (B, S, d) -> (out, aux_loss, z_loss)."""
+    b, s, d = x.shape
+    xt = x.reshape(b * s, d)
+    logits = dense(p["router"], xt.astype(jnp.float32))
+    combine, aux, z = router_topk(logits, cfg.moe.top_k)  # (T, E)
+    # dispatch: h_e = x @ wi_e ; gated; combine back weighted by router probs.
+    hi = jnp.einsum("td,edf->tef", xt, p["wi"], preferred_element_type=jnp.float32)
+    hg = jnp.einsum("td,edf->tef", xt, p["wg"], preferred_element_type=jnp.float32)
+    h = (jax.nn.silu(hi) * hg).astype(x.dtype)  # (T, E, F)
+    out_e = jnp.einsum("tef,efd->ted", h, p["wo"], preferred_element_type=jnp.float32)
+    out = jnp.einsum("ted,te->td", out_e, combine.astype(jnp.float32))
+    return out.astype(x.dtype).reshape(b, s, d), aux, z
+
+
+def moe_mlp_grouped(
+    p,
+    cfg: ModelConfig,
+    x,
+    *,
+    capacity_factor: float = 1.25,
+    group_size: int = 8192,
+):
+    """GShard-style grouped capacity dispatch — the production training path.
+
+    Tokens are split into groups of <= ``group_size``; within each group every
+    expert accepts at most C = ceil(group * top_k * capacity_factor / E)
+    tokens (overflow dropped, standard practice).  Dispatch/combine are
+    (T_g, E, C) einsums — expert-parallel friendly (the E axis shards over
+    the mesh 'model' axis and XLA lowers group->expert movement to
+    all-to-all), with peak memory O(T_g * E * C) per group instead of the
+    O(T * E * F) of the dense path.
+
+    Returns (out, aux_loss, z_loss).
+    """
+    b, s, d = x.shape
+    e = cfg.moe.n_experts
+    k = cfg.moe.top_k
+    if s <= 2 * group_size:
+        # group == batch row: NO reshape across the (sharded) batch/seq dims —
+        # a (B,S)->(g,tg) flatten forces an all-gather at the reshape
+        # (EXPERIMENTS.md §Perf iteration A3)
+        g, tg = b, s
+        xg = constrain(x, "tokens")
+    else:
+        t = b * s
+        xt = x.reshape(t, d)
+        g = max(1, -(-t // group_size))  # ceil
+        while t % g:
+            g += 1
+        tg = t // g
+        xg = constrain(xt.reshape(g, tg, d), "tokens")
+    cap = int(np.ceil(tg * k * capacity_factor / e))
+    cap = min(cap, tg)
+
+    logits = dense(p["router"], xg.astype(jnp.float32))  # (g, tg, E)
+    probs = jax.nn.softmax(logits, axis=-1)
+    top_vals, top_idx = jax.lax.top_k(probs, k)  # (g, tg, k)
+    top_vals = top_vals / jnp.maximum(top_vals.sum(-1, keepdims=True), 1e-9)
+
+    one_hot = constrain(
+        jax.nn.one_hot(top_idx, e, dtype=jnp.float32), "probs"
+    )  # (g, tg, k, E) — tg sharded over 'model' (sequence parallel)
+    # position of each (token, rank) within its expert queue (token-major,
+    # then rank order): earlier tokens' picks + same token's earlier ranks
+    rank_off = jnp.cumsum(one_hot.sum(axis=2), axis=1) - one_hot.sum(axis=2)  # (g,tg,E)
+    intra = jnp.cumsum(one_hot, axis=2) - one_hot  # (g, tg, k, E)
+    pos_full = rank_off[:, :, None, :] + intra  # position if assigned there
+    pos_sel = jnp.einsum("gtke,gtke->gtk", pos_full, one_hot)  # (g, tg, k)
+    keep = pos_sel < cap  # overflow tokens dropped (standard)
+    pos_oh = jax.nn.one_hot(pos_sel.astype(jnp.int32), cap, dtype=jnp.float32)
+    pos_oh = constrain(pos_oh * keep[..., None], "probs")  # (g, tg, k, C)
+    # dispatch tensor (g, tg, E, C): 1 where token goes to (expert, slot)
+    disp = constrain(jnp.einsum("gtke,gtkc->gtec", one_hot, pos_oh).astype(x.dtype), "dispatch")
+    combine = constrain(
+        jnp.einsum("gtk,gtke,gtkc->gtec", top_vals, one_hot, pos_oh), "dispatch"
+    )
+
+    xe = constrain(jnp.einsum("gtec,gtd->gecd", disp, xg), "experts")  # (g, E, C, d)
+    hi = jnp.einsum("gecd,edf->gecf", xe, p["wi"], preferred_element_type=jnp.float32)
+    hg = jnp.einsum("gecd,edf->gecf", xe, p["wg"], preferred_element_type=jnp.float32)
+    h = constrain((jax.nn.silu(hi) * hg).astype(x.dtype), "experts")
+    ye = constrain(
+        jnp.einsum("gecf,efd->gecd", h, p["wo"], preferred_element_type=jnp.float32).astype(x.dtype),
+        "experts",
+    )
+    out = jnp.einsum("gtec,gecd->gtd", combine.astype(jnp.float32), ye.astype(jnp.float32))
+
+    frac = one_hot.sum(axis=2).mean(axis=1)  # (g, E)
+    mean_prob = probs.mean(axis=1)
+    aux = e * jnp.mean(jnp.sum(frac * mean_prob, axis=-1))
+    z = jnp.mean(jnp.square(jax.nn.logsumexp(logits, axis=-1)))
+    return out.astype(x.dtype).reshape(b, s, d), aux, z
+
+
+def moe_mlp_sparse(p, cfg: ModelConfig, x):
+    """Capacity-free *sparse* evaluation used for small batches (decode):
+    gathers only the selected experts' weights per token.  O(T * k * d * f)
+    instead of O(T * E * d * f)."""
+    b, s, d = x.shape
+    xt = x.reshape(b * s, d)
+    logits = dense(p["router"], xt.astype(jnp.float32))
+    probs = jax.nn.softmax(logits, axis=-1)
+    top_vals, top_idx = jax.lax.top_k(probs, cfg.moe.top_k)
+    top_vals = top_vals / jnp.maximum(top_vals.sum(-1, keepdims=True), 1e-9)
+    wi = p["wi"][top_idx]  # (T, K, d, f)
+    wg = p["wg"][top_idx]
+    wo = p["wo"][top_idx]  # (T, K, f, d)
+    hi = jnp.einsum("td,tkdf->tkf", xt, wi, preferred_element_type=jnp.float32)
+    hg = jnp.einsum("td,tkdf->tkf", xt, wg, preferred_element_type=jnp.float32)
+    h = (jax.nn.silu(hi) * hg).astype(x.dtype)
+    out_k = jnp.einsum("tkf,tkfd->tkd", h, wo, preferred_element_type=jnp.float32)
+    out = jnp.einsum("tkd,tk->td", out_k, top_vals)
+    return out.astype(x.dtype).reshape(b, s, d)

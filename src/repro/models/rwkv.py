@@ -1,0 +1,182 @@
+"""RWKV-6 "Finch" mixer: linear attention with data-dependent decay.
+
+State:  S_t = diag(w_t) S_{t-1} + k_t^T v_t        (per head, D x D matrix)
+Output: y_t = (r_t (S_{t-1} + u k_t^T v_t))        (bonus u on current token)
+
+Training evaluates the recurrence chunk-wise: each chunk (length C) is
+processed with matmul-form intra-chunk attention and a carried inter-chunk
+state — the standard TPU-friendly linearization (the CUDA "wkv" kernel has no
+TPU analogue; chunked matmuls feed the MXU instead, see DESIGN.md Sec. 3).
+
+Decode is O(1): one rank-1 state update per token.
+
+Token-shift: RWKV interpolates each token with its predecessor using learned
+per-channel mixes (simplified LoRA-free variant of the Finch data-dependent
+token shift; decay w_t remains fully data-dependent as in the paper).
+"""
+from __future__ import annotations
+
+from typing import Tuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.distributed.axes import constrain
+from repro.models.config import ModelConfig
+from repro.models.modules import dense, dense_init, norm_init, apply_norm
+
+
+def _n_heads(cfg: ModelConfig) -> int:
+    return cfg.d_model // cfg.rwkv.head_size
+
+
+def rwkv_init(key, cfg: ModelConfig):
+    dt = cfg.param_dtype
+    d = cfg.d_model
+    hs = cfg.rwkv.head_size
+    nh = _n_heads(cfg)
+    ks = jax.random.split(key, 10)
+    return {
+        # token-shift mixing coefficients per channel for r/k/v/w/g
+        "mix": (jax.random.uniform(ks[0], (5, d), jnp.float32)).astype(dt),
+        "wr": dense_init(ks[1], d, d, dt),
+        "wk": dense_init(ks[2], d, d, dt),
+        "wv": dense_init(ks[3], d, d, dt),
+        "wg": dense_init(ks[4], d, d, dt),
+        # data-dependent decay: low-rank path w_t = exp(-exp(base + tanh(x A) B))
+        "w_base": jnp.zeros((d,), jnp.float32) - 0.5,
+        "w_a": dense_init(ks[5], d, 64, dt),
+        "w_b": dense_init(ks[6], 64, d, dt),
+        "bonus": (jax.random.normal(ks[7], (nh, hs), jnp.float32) * 0.05),
+        "ln_x": norm_init(d, dt, "layernorm"),
+        "wo": dense_init(ks[8], d, d, dt),
+    }
+
+
+def _token_shift(x, x_prev_last):
+    """shift right by one: x_prev[t] = x[t-1]; first slot from carry."""
+    return jnp.concatenate([x_prev_last[:, None, :], x[:, :-1, :]], axis=1)
+
+
+def _projections(p, cfg, x, shifted):
+    mix = p["mix"].astype(jnp.float32)
+    xf = x.astype(jnp.float32)
+    sf = shifted.astype(jnp.float32)
+
+    def mixed(i):
+        return (xf * mix[i] + sf * (1.0 - mix[i])).astype(x.dtype)
+
+    r = dense(p["wr"], mixed(0))
+    k = dense(p["wk"], mixed(1))
+    v = dense(p["wv"], mixed(2))
+    xw = mixed(3)
+    g = jax.nn.silu(dense(p["wg"], mixed(4)).astype(jnp.float32))
+    # data-dependent decay in (0, 1):
+    w_raw = p["w_base"] + dense(p["w_b"], jnp.tanh(dense(p["w_a"], xw).astype(jnp.float32)).astype(x.dtype)).astype(jnp.float32)
+    w = jnp.exp(-jnp.exp(w_raw))  # (B, S, d)
+    return r, k, v, w, g
+
+
+def _heads(x, nh, hs):
+    return x.reshape(x.shape[0], x.shape[1], nh, hs)
+
+
+def rwkv_mixer(p, cfg: ModelConfig, x, chunk: int = 64, *, return_state: bool = False):
+    """Full-sequence mixer via chunked recurrence. x: (B, S, d).
+
+    NOTE on padding + state: trailing pad positions contribute zero k/v only
+    if we mask them; for ``return_state`` we therefore require S % chunk == 0
+    (prefill lengths are powers of two in this framework)."""
+    b, s, d = x.shape
+    chunk = min(chunk, s)
+    if return_state and s % chunk:
+        import math
+
+        chunk = math.gcd(chunk, s) or s
+    nh, hs = _n_heads(cfg), cfg.rwkv.head_size
+    shifted = _token_shift(x, jnp.zeros((b, d), x.dtype))
+    r, k, v, w, g = _projections(p, cfg, x, shifted)
+    r, k, v, w = (_heads(t.astype(jnp.float32), nh, hs) for t in (r, k, v, w))
+    u = p["bonus"]  # (nh, hs)
+
+    pad = (-s) % chunk
+    if pad:
+        z = lambda t: jnp.pad(t, ((0, 0), (0, pad), (0, 0), (0, 0)))
+        r, k, v, w = z(r), z(k), z(v), z(w)
+    nc = (s + pad) // chunk
+    rc = r.reshape(b, nc, chunk, nh, hs).transpose(1, 0, 3, 2, 4)  # (nc,b,nh,C,hs)
+    kc = k.reshape(b, nc, chunk, nh, hs).transpose(1, 0, 3, 2, 4)
+    vc = v.reshape(b, nc, chunk, nh, hs).transpose(1, 0, 3, 2, 4)
+    wc = w.reshape(b, nc, chunk, nh, hs).transpose(1, 0, 3, 2, 4)
+
+    def chunk_step(state, inputs):
+        rch, kch, vch, wch = inputs  # (b, nh, C, hs)
+        rch, kch, vch, wch = (constrain(t, "state") for t in (rch, kch, vch, wch))
+        logw = jnp.log(jnp.maximum(wch, 1e-12))
+        cum = jnp.cumsum(logw, axis=2)  # sum_{i<=t} log w_i
+        cumx = cum - logw  # sum_{i<=t-1} log w_i
+        total = cum[:, :, -1:, :]
+        # Convention (matches rwkv_decode_step):
+        #   S_t = diag(w_t) S_{t-1} + k_t v_t ;  y_t = r_t (S_{t-1} + u k_t v_t)
+        # intra-chunk: y_t += sum_{j<t} r_t . (prod_{i=j+1}^{t-1} w_i) k_j v_j
+        #   D[t,j] = exp(cumx[t] - cum[j])  for j < t  (per key channel).
+        # The exponent is computed PAIRWISE so it is always <= 0 inside the
+        # causal mask (numerically safe; exp(-cum) alone overflows).
+        c_len = rch.shape[2]
+        diff = cumx[:, :, :, None, :] - cum[:, :, None, :, :]  # (b,nh,C,C,hs)
+        tri = jnp.tril(jnp.ones((c_len, c_len), bool), k=-1)
+        diff = jnp.where(tri[None, None, :, :, None], diff, -jnp.inf)
+        diff = constrain(diff, "rwkv5")
+        att = jnp.einsum("bhtd,bhsd,bhtsd->bhts", rch, kch, jnp.exp(diff))
+        diag = jnp.einsum("bhts,bhts->bht", rch * u[None, :, None, :], kch)
+        y = jnp.einsum("bhts,bhsd->bhtd", att, vch)
+        y = y + diag[..., None] * vch
+        # contribution from the carried state: r_t decayed-from-start to t-1
+        rs = rch * jnp.exp(cumx)
+        y = y + jnp.einsum("bhtd,bhde->bhte", rs, state)
+        # state at chunk end: S' = diag(exp total) S + sum_j exp(total-cum[j]) k_j v_j
+        ktil = kch * jnp.exp(total - cum)
+        s_new = jnp.exp(total)[:, :, 0, :][:, :, :, None] * state
+        s_new = s_new + jnp.einsum("bhtd,bhte->bhde", ktil, vch)
+        return s_new, y
+
+    state0 = jnp.zeros((b, nh, hs, hs), jnp.float32)
+    s_final, ys = jax.lax.scan(jax.checkpoint(chunk_step), state0, (rc, kc, vc, wc))
+    y = ys.transpose(1, 0, 3, 2, 4).reshape(b, nc * chunk, nh, hs)[:, :s]
+    y = y.reshape(b, s, d)
+    y = apply_norm(p["ln_x"], y.astype(x.dtype), cfg.norm_eps)
+    y = (y.astype(jnp.float32) * g).astype(x.dtype)
+    out = dense(p["wo"], y)
+    if return_state:
+        assert pad == 0, "return_state requires seq % chunk == 0"
+        return out, {"s": s_final, "x_prev": x[:, -1].astype(jnp.float32)}
+    return out
+
+
+def rwkv_init_state(cfg: ModelConfig, batch: int, dtype=jnp.float32):
+    nh, hs = _n_heads(cfg), cfg.rwkv.head_size
+    return {
+        "s": jnp.zeros((batch, nh, hs, hs), dtype),
+        "x_prev": jnp.zeros((batch, cfg.d_model), dtype),
+    }
+
+
+def rwkv_decode_step(p, cfg: ModelConfig, x, state) -> Tuple[jnp.ndarray, dict]:
+    """x: (B, 1, d)."""
+    b, _, d = x.shape
+    nh, hs = _n_heads(cfg), cfg.rwkv.head_size
+    shifted = state["x_prev"][:, None, :].astype(x.dtype)
+    r, k, v, w, g = _projections(p, cfg, x, shifted)
+    r, k, v, w = (
+        t.astype(jnp.float32).reshape(b, nh, hs) for t in (r[:, 0], k[:, 0], v[:, 0], w[:, 0])
+    )
+    u = p["bonus"]
+    s = state["s"].astype(jnp.float32)
+    kv = k[..., :, None] * v[..., None, :]  # (b,nh,hs,hs)
+    y = jnp.einsum("bhd,bhde->bhe", r, s + u[None, :, :, None] * kv)
+    s_new = w[..., :, None] * s + kv
+    y = y.reshape(b, 1, d)
+    y = apply_norm(p["ln_x"], y.astype(x.dtype), cfg.norm_eps)
+    y = (y.astype(jnp.float32) * g).astype(x.dtype)
+    out = dense(p["wo"], y)
+    return out, {"s": s_new.astype(state["s"].dtype), "x_prev": x[:, 0].astype(state["x_prev"].dtype)}

@@ -1,0 +1,453 @@
+"""Model assembly for all supported families.
+
+Compile-scale strategy: layers are grouped into the smallest repeating
+*block* (1 layer for homogeneous stacks; 8 layers for jamba's 1-attn:7-mamba
+interleave).  Parameters are stacked over blocks and the forward pass is a
+``jax.lax.scan`` over the block axis, keeping HLO size O(block) instead of
+O(depth) — essential for lowering 40-72 layer models with 512-way SPMD.
+
+Params layout::
+
+    {
+      "embed":      {"emb": (V, d)},
+      "blocks":     tuple over block positions; each element is a pytree whose
+                    leaves have leading dim n_blocks,
+      "final_norm": {...},
+      "lm_head":    {"emb": (V, d)} (absent if tied),
+      # encdec only:
+      "enc_blocks": ..., "enc_final_norm": ...,
+    }
+
+Caches mirror the same structure (leading n_blocks axis per position).
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Any, Dict, List, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.distributed.axes import constrain, grad_cast
+from repro.models import attention as attn
+from repro.models import mamba as mam
+from repro.models import mlp as mlpm
+from repro.models import moe as moem
+from repro.models import rwkv as rwk
+from repro.models.config import ModelConfig
+from repro.models.modules import apply_norm, embed, embedding_init, norm_init, unembed
+
+
+# ---------------------------------------------------------------------------
+# block structure
+# ---------------------------------------------------------------------------
+@dataclasses.dataclass(frozen=True)
+class LayerSpec:
+    kind: str  # attn | mamba | rwkv
+    is_moe: bool
+    cross: bool = False  # add cross-attention (whisper decoder)
+
+
+def block_spec(cfg: ModelConfig) -> Tuple[List[LayerSpec], int]:
+    """Return (per-position layer specs within one block, n_blocks)."""
+    kinds = cfg.layer_kinds()
+    block = cfg.hybrid_block if cfg.family == "hybrid" else 1
+    n_blocks = cfg.n_layers // block
+    specs = []
+    for pos in range(block):
+        specs.append(
+            LayerSpec(
+                kind=kinds[pos],
+                is_moe=cfg.is_moe_layer(pos),
+                cross=(cfg.family == "encdec"),
+            )
+        )
+    return specs, n_blocks
+
+
+# ---------------------------------------------------------------------------
+# single layer init/apply
+# ---------------------------------------------------------------------------
+def _mixer_init(key, cfg: ModelConfig, kind: str):
+    if kind == "attn":
+        return attn.attn_init(key, cfg)
+    if kind == "mamba":
+        return mam.mamba_init(key, cfg)
+    if kind == "rwkv":
+        return rwk.rwkv_init(key, cfg)
+    raise ValueError(kind)
+
+
+def layer_init(key, cfg: ModelConfig, spec: LayerSpec, *, causal: bool = True):
+    ks = jax.random.split(key, 5)
+    p = {
+        "norm1": norm_init(cfg.d_model, cfg.param_dtype, cfg.norm),
+        "mixer": _mixer_init(ks[0], cfg, spec.kind),
+        "norm2": norm_init(cfg.d_model, cfg.param_dtype, cfg.norm),
+        "ffn": moem.moe_init(ks[1], cfg) if spec.is_moe else mlpm.mlp_init(ks[1], cfg),
+    }
+    if spec.cross and causal:  # decoder layers of encdec get cross-attn
+        p["norm_x"] = norm_init(cfg.d_model, cfg.param_dtype, cfg.norm)
+        p["cross"] = attn.attn_init(ks[2], cfg, cross=True)
+    return p
+
+
+def layer_apply_full(
+    p,
+    cfg: ModelConfig,
+    spec: LayerSpec,
+    x,
+    positions,
+    *,
+    enc_kv=None,
+    window=None,
+    causal=True,
+):
+    """Full-sequence layer (train / prefill). Returns (x, aux, z)."""
+    h = apply_norm(p["norm1"], x, cfg.norm_eps)
+    if spec.kind == "attn":
+        if causal:
+            h = attn.full_attention(p["mixer"], cfg, h, positions, window=window)
+        else:  # bidirectional encoder
+            q, k, v = attn.qkv_project(p["mixer"], cfg, h, positions)
+            k = attn._repeat_kv(k, cfg.q_per_kv)
+            v = attn._repeat_kv(v, cfg.q_per_kv)
+            o = attn.sdpa(q, k, v, mask=None)
+            h = attn.dense(p["mixer"]["wo"], attn._merge_heads(o))
+    elif spec.kind == "mamba":
+        h = mam.mamba_mixer(p["mixer"], cfg, h)
+    else:
+        h = rwk.rwkv_mixer(p["mixer"], cfg, h)
+    # pin the residual-stream layout (and bf16 cotangents) at every add:
+    # backward otherwise re-gathers replicated fp32 cotangents (see
+    # EXPERIMENTS.md §Perf iteration A).
+    x = grad_cast(constrain(x + h, "tokens"))
+    if "cross" in p and enc_kv is not None:
+        h = apply_norm(p["norm_x"], x, cfg.norm_eps)
+        x = grad_cast(constrain(x + attn.cross_attention(p["cross"], cfg, h, enc_kv), "tokens"))
+    h = apply_norm(p["norm2"], x, cfg.norm_eps)
+    aux = z = jnp.zeros((), jnp.float32)
+    if spec.is_moe:
+        if h.shape[0] * h.shape[1] >= 4096:  # production grouped dispatch
+            h, aux, z = moem.moe_mlp_grouped(p["ffn"], cfg, h)
+        else:
+            h, aux, z = moem.moe_mlp(p["ffn"], cfg, h)
+    else:
+        h = mlpm.mlp(p["ffn"], cfg, h)
+    return grad_cast(constrain(x + h, "tokens")), aux, z
+
+
+def layer_apply_decode(p, cfg: ModelConfig, spec: LayerSpec, x, cache, position, *, window=None):
+    """One-token decode. cache is this layer's cache dict; returns (x, cache)."""
+    h = apply_norm(p["norm1"], x, cfg.norm_eps)
+    if spec.kind == "attn":
+        k_new, v_new = attn.project_decode_kv(p["mixer"], cfg, h, position)
+        # scatter this token's kv at slot `position` (same position per batch row)
+        ck = jax.lax.dynamic_update_slice(
+            cache["k"], k_new.astype(cache["k"].dtype), (0, position[0], 0, 0)
+        )
+        cv = jax.lax.dynamic_update_slice(
+            cache["v"], v_new.astype(cache["v"].dtype), (0, position[0], 0, 0)
+        )
+        h = attn.decode_attention(p["mixer"], cfg, h, ck, cv, position, window=window)
+        cache = dict(cache, k=ck, v=cv)
+    elif spec.kind == "mamba":
+        h, new_state = mam.mamba_decode_step(p["mixer"], cfg, h, cache)
+        cache = new_state
+    else:
+        h, new_state = rwk.rwkv_decode_step(p["mixer"], cfg, h, cache)
+        cache = new_state
+    x = x + h
+    if "cross" in p and "cross_k" in cache:
+        hq = apply_norm(p["norm_x"], x, cfg.norm_eps)
+        x = x + attn.cross_attention(
+            p["cross"], cfg, hq, (cache["cross_k"], cache["cross_v"])
+        )
+    h = apply_norm(p["norm2"], x, cfg.norm_eps)
+    if spec.is_moe:
+        # dense einsum dispatch: moves (tiny) activations to the sharded
+        # expert weights; the per-token weight-gather path (moe_mlp_sparse)
+        # all-reduces multi-GB expert slabs per layer per token
+        # (EXPERIMENTS.md §Perf iteration B1)
+        h, _, _ = moem.moe_mlp(p["ffn"], cfg, h)
+    else:
+        h = mlpm.mlp(p["ffn"], cfg, h)
+    return x + h, cache
+
+
+# ---------------------------------------------------------------------------
+# model init
+# ---------------------------------------------------------------------------
+def init_params(key, cfg: ModelConfig) -> Dict[str, Any]:
+    cfg.validate()
+    specs, n_blocks = block_spec(cfg)
+    k_embed, k_blocks, k_head, k_enc = jax.random.split(key, 4)
+
+    def stacked_layers(base_key, spec: LayerSpec, n: int, causal=True):
+        keys = jax.random.split(base_key, n)
+        init_one = lambda k: layer_init(k, cfg, spec, causal=causal)
+        return jax.vmap(init_one)(keys) if n > 1 else jax.tree.map(
+            lambda x: x[None], init_one(keys[0])
+        )
+
+    block_keys = jax.random.split(k_blocks, len(specs))
+    params: Dict[str, Any] = {
+        "embed": embedding_init(k_embed, cfg.vocab_size, cfg.d_model, cfg.param_dtype),
+        "blocks": tuple(
+            stacked_layers(block_keys[i], specs[i], n_blocks) for i in range(len(specs))
+        ),
+        "final_norm": norm_init(cfg.d_model, cfg.param_dtype, cfg.norm),
+    }
+    if not cfg.tie_embeddings:
+        params["lm_head"] = embedding_init(k_head, cfg.vocab_size, cfg.d_model, cfg.param_dtype)
+    if cfg.family == "encdec":
+        enc_spec = LayerSpec(kind="attn", is_moe=False, cross=False)
+        params["enc_blocks"] = (
+            stacked_layers(k_enc, enc_spec, cfg.n_encoder_layers, causal=False),
+        )
+        params["enc_final_norm"] = norm_init(cfg.d_model, cfg.param_dtype, cfg.norm)
+    return params
+
+
+# ---------------------------------------------------------------------------
+# forward (train / prefill)
+# ---------------------------------------------------------------------------
+def _scan_blocks(params, cfg, specs, x, positions, *, enc_kv=None, causal=True, enc=False):
+    blocks = params["enc_blocks"] if enc else params["blocks"]
+
+    def one_layer(pos):
+        spec = specs[pos]
+
+        def f(p_, x, positions, enc_kv):
+            x = constrain(x, "tokens")
+            return layer_apply_full(
+                p_, cfg, spec, x, positions,
+                enc_kv=enc_kv, window=cfg.sliding_window, causal=causal,
+            )
+
+        # multi-layer blocks (jamba) remat per LAYER, not per block: a whole-
+        # block checkpoint keeps all 8 layers' internals live in its backward
+        return jax.checkpoint(f) if cfg.remat and len(specs) > 1 else f
+
+    layer_fns = [one_layer(pos) for pos in range(len(specs))]
+
+    def one_block(block_p, x, positions, enc_kv):
+        aux = z = jnp.zeros((), jnp.float32)
+        for pos in range(len(specs)):
+            x, a, zz = layer_fns[pos](block_p[pos], x, positions, enc_kv)
+            aux, z = aux + a, z + zz
+        return constrain(x, "tokens"), aux, z
+
+    if cfg.remat and len(specs) == 1:
+        one_block = jax.checkpoint(one_block)
+
+    def body(carry, block_p):
+        x, aux, z = carry
+        x, a, zz = one_block(block_p, x, positions, enc_kv)
+        return (x, aux + a, z + zz), None
+
+    (x, aux, z), _ = jax.lax.scan(body, (x, jnp.zeros((), jnp.float32), jnp.zeros((), jnp.float32)), blocks)
+    return x, aux, z
+
+
+def encode(params, cfg: ModelConfig, enc_embeds):
+    """Whisper encoder over precomputed frame embeddings (B, F, d)."""
+    pos = jnp.arange(enc_embeds.shape[1])[None, :]
+    enc_spec = [LayerSpec(kind="attn", is_moe=False, cross=False)]
+    x, _, _ = _scan_blocks(params, cfg, enc_spec, enc_embeds, pos, causal=False, enc=True)
+    return apply_norm(params["enc_final_norm"], x, cfg.norm_eps)
+
+
+def forward_hidden(params, cfg: ModelConfig, tokens, *, enc_embeds=None):
+    """Like ``forward`` but stops at the final norm: returns (hidden, aux).
+
+    Used with ``chunked_lm_loss`` so the (B, S, V) logits never materialize.
+    """
+    specs, _ = block_spec(cfg)
+    x = embed(params["embed"], tokens)
+    positions = jnp.arange(tokens.shape[1])[None, :]
+    if cfg.family == "encdec":
+        assert enc_embeds is not None
+        enc_out = encode(params, cfg, enc_embeds.astype(x.dtype))
+        x, aux, z = _scan_blocks_with_cross(params, cfg, specs, x, positions, enc_out=enc_out)
+    else:
+        x, aux, z = _scan_blocks(params, cfg, specs, x, positions)
+    x = apply_norm(params["final_norm"], x, cfg.norm_eps)
+    return x, {"moe_aux": aux, "moe_z": z}
+
+
+def forward(params, cfg: ModelConfig, tokens, *, enc_embeds=None):
+    """tokens: (B, S) int32 -> (logits (B, S, V), aux_losses dict).
+
+    For encdec, ``enc_embeds`` (B, F, d) are the stub-frontend frame
+    embeddings; cross-attention K/V are computed per decoder layer from the
+    shared encoder output.
+    """
+    x, aux = forward_hidden(params, cfg, tokens, enc_embeds=enc_embeds)
+    head = params.get("lm_head", params["embed"])
+    logits = unembed(head, x)
+    return logits, aux
+
+
+def _scan_blocks_with_cross(params, cfg, specs, x, positions, *, enc_out):
+    def one_block(block_p, x, positions, enc_out):
+        aux = z = jnp.zeros((), jnp.float32)
+        for pos, spec in enumerate(specs):
+            p = block_p[pos]
+            kv = attn.encoder_kv(p["cross"], cfg, enc_out) if "cross" in p else None
+            x = constrain(x, "tokens")
+            x, a, zz = layer_apply_full(
+                p, cfg, spec, x, positions, enc_kv=kv, window=cfg.sliding_window
+            )
+            aux, z = aux + a, z + zz
+        return constrain(x, "tokens"), aux, z
+
+    if cfg.remat:
+        one_block = jax.checkpoint(one_block)
+
+    def body(carry, block_p):
+        x, aux, z = carry
+        x, a, zz = one_block(block_p, x, positions, enc_out)
+        return (x, aux + a, z + zz), None
+
+    (x, aux, z), _ = jax.lax.scan(
+        body, (x, jnp.zeros((), jnp.float32), jnp.zeros((), jnp.float32)), params["blocks"]
+    )
+    return x, aux, z
+
+
+# ---------------------------------------------------------------------------
+# prefill: full-sequence forward that also fills the decode caches
+# ---------------------------------------------------------------------------
+def layer_apply_prefill(p, cfg: ModelConfig, spec: LayerSpec, x, positions, max_seq, *, enc_kv=None):
+    """Full-sequence layer that returns (x, cache) for decode handoff."""
+    h = apply_norm(p["norm1"], x, cfg.norm_eps)
+    if spec.kind == "attn":
+        h, k, v = attn.full_attention(
+            p["mixer"], cfg, h, positions, window=cfg.sliding_window, return_kv=True
+        )
+        s = x.shape[1]
+        pad = max_seq - s
+        kc = jnp.pad(k, ((0, 0), (0, pad), (0, 0), (0, 0))).astype(cfg.param_dtype)
+        vc = jnp.pad(v, ((0, 0), (0, pad), (0, 0), (0, 0))).astype(cfg.param_dtype)
+        cache = {"k": kc, "v": vc}
+    elif spec.kind == "mamba":
+        h, cache = mam.mamba_mixer(p["mixer"], cfg, h, return_state=True)
+    else:
+        h, cache = rwk.rwkv_mixer(p["mixer"], cfg, h, return_state=True)
+    x = x + h
+    if "cross" in p and enc_kv is not None:
+        hq = apply_norm(p["norm_x"], x, cfg.norm_eps)
+        x = x + attn.cross_attention(p["cross"], cfg, hq, enc_kv)
+        cache["cross_k"], cache["cross_v"] = enc_kv
+    hh = apply_norm(p["norm2"], x, cfg.norm_eps)
+    if spec.is_moe:
+        if hh.shape[0] * hh.shape[1] >= 4096:
+            hh, _, _ = moem.moe_mlp_grouped(p["ffn"], cfg, hh)
+        else:
+            hh, _, _ = moem.moe_mlp(p["ffn"], cfg, hh)
+    else:
+        hh = mlpm.mlp(p["ffn"], cfg, hh)
+    return x + hh, cache
+
+
+def prefill(params, cfg: ModelConfig, tokens, *, max_seq=None, enc_embeds=None):
+    """Process the prompt, returning (last-position logits, decode cache).
+
+    max_seq: cache capacity (>= prompt length); defaults to prompt length.
+    """
+    specs, _ = block_spec(cfg)
+    max_seq = max_seq or tokens.shape[1]
+    x = embed(params["embed"], tokens)
+    positions = jnp.arange(tokens.shape[1])[None, :]
+    enc_out = None
+    if cfg.family == "encdec":
+        assert enc_embeds is not None
+        enc_out = encode(params, cfg, enc_embeds.astype(x.dtype))
+
+    def body(x, block_p):
+        caches = []
+        for pos, spec in enumerate(specs):
+            kv = (
+                attn.encoder_kv(block_p[pos]["cross"], cfg, enc_out)
+                if enc_out is not None and "cross" in block_p[pos]
+                else None
+            )
+            x, c = layer_apply_prefill(
+                block_p[pos], cfg, spec, x, positions, max_seq, enc_kv=kv
+            )
+            caches.append(c)
+        return x, tuple(caches)
+
+    x, cache = jax.lax.scan(body, x, params["blocks"])
+    x = apply_norm(params["final_norm"], x[:, -1:], cfg.norm_eps)
+    head = params.get("lm_head", params["embed"])
+    return unembed(head, x), cache
+
+
+# ---------------------------------------------------------------------------
+# decode caches + serve step
+# ---------------------------------------------------------------------------
+def init_cache(cfg: ModelConfig, batch: int, max_seq: int, *, enc_embeds=None, params=None):
+    """Allocate per-block-position caches (leading n_blocks axis).
+
+    For encdec, cross K/V are precomputed from the encoder output (requires
+    ``params`` and ``enc_embeds``).
+    """
+    specs, n_blocks = block_spec(cfg)
+    dt = cfg.param_dtype
+    caches = []
+    enc_out = None
+    if cfg.family == "encdec":
+        assert params is not None and enc_embeds is not None
+        enc_out = encode(params, cfg, enc_embeds.astype(dt))
+    for pos, spec in enumerate(specs):
+        if spec.kind == "attn":
+            c = {
+                "k": jnp.zeros((n_blocks, batch, max_seq, cfg.n_kv_heads, cfg.d_head), dt),
+                "v": jnp.zeros((n_blocks, batch, max_seq, cfg.n_kv_heads, cfg.d_head), dt),
+            }
+        elif spec.kind == "mamba":
+            c = jax.tree.map(
+                lambda l: jnp.broadcast_to(l[None], (n_blocks,) + l.shape),
+                mam.mamba_init_state(cfg, batch),
+            )
+        else:
+            c = jax.tree.map(
+                lambda l: jnp.broadcast_to(l[None], (n_blocks,) + l.shape),
+                rwk.rwkv_init_state(cfg, batch),
+            )
+        if cfg.family == "encdec" and spec.kind == "attn":
+            # per-block cross kv: project enc_out with each block's cross weights
+            block_p = params["blocks"][pos]
+            def kv_of(bp):
+                return attn.encoder_kv(bp["cross"], cfg, enc_out)
+            ks, vs = jax.vmap(kv_of)(block_p)
+            c["cross_k"], c["cross_v"] = ks, vs
+        caches.append(c)
+    return tuple(caches)
+
+
+def decode_step(params, cfg: ModelConfig, token, cache, position):
+    """token: (B, 1) int32; position: (B,) int32 current slot.
+
+    Returns (logits (B, 1, V), new_cache).
+    """
+    specs, _ = block_spec(cfg)
+    x = embed(params["embed"], token)
+
+    def body(x, scanned):
+        block_p, block_c = scanned
+        new_c = []
+        for pos, spec in enumerate(specs):
+            x, c = layer_apply_decode(
+                block_p[pos], cfg, spec, x, block_c[pos], position, window=cfg.sliding_window
+            )
+            new_c.append(c)
+        return x, tuple(new_c)
+
+    x, new_cache = jax.lax.scan(body, x, (params["blocks"], cache))
+    x = apply_norm(params["final_norm"], x, cfg.norm_eps)
+    head = params.get("lm_head", params["embed"])
+    logits = unembed(head, x)
+    return logits, new_cache

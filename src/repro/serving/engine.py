@@ -1,0 +1,68 @@
+"""Batched serving engine: static-batch prefill + decode over the model zoo.
+
+A deliberately simple production shape: fixed-capacity batch slots, greedy
+sampling, per-slot stop lengths.  Prefill fills the KV/state caches for a
+batch of prompts (padded to a common length); decode steps all active slots
+in lock-step (the decode_32k / long_500k dry-run shapes).  Works for every
+family (attention KV, mamba/rwkv state, whisper cross-attention).
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import List, Optional
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.models import init_params
+from repro.models.config import ModelConfig
+from repro.models.transformer import decode_step, prefill
+
+
+@dataclasses.dataclass
+class Request:
+    prompt: np.ndarray  # (L,) int32 token ids
+    max_new_tokens: int = 16
+    out: Optional[np.ndarray] = None
+
+
+class ServeEngine:
+    def __init__(self, cfg: ModelConfig, params=None, *, max_seq: int = 256, seed: int = 0):
+        self.cfg = cfg
+        self.params = params if params is not None else init_params(
+            jax.random.PRNGKey(seed), cfg
+        )
+        self.max_seq = max_seq
+        self._prefill = jax.jit(
+            lambda p, t, **kw: prefill(p, cfg, t, max_seq=max_seq, **kw)
+        )
+        self._step = jax.jit(lambda p, t, c, pos: decode_step(p, cfg, t, c, pos))
+
+    def run(self, requests: List[Request], *, enc_embeds=None) -> List[Request]:
+        if not requests:
+            return requests
+        b = len(requests)
+        plen = max(len(r.prompt) for r in requests)
+        toks = np.zeros((b, plen), np.int32)
+        for i, r in enumerate(requests):
+            toks[i, plen - len(r.prompt):] = r.prompt  # left-pad
+        kw = {}
+        if self.cfg.family == "encdec":
+            assert enc_embeds is not None
+            kw["enc_embeds"] = enc_embeds
+        logits, cache = self._prefill(self.params, jnp.asarray(toks), **kw)
+        tok = jnp.argmax(logits[:, -1], -1)[:, None].astype(jnp.int32)
+        budget = max(r.max_new_tokens for r in requests)
+        outs = [np.asarray(tok)[:, 0]]
+        for i in range(budget - 1):
+            pos = jnp.full((b,), plen + i, jnp.int32)
+            if plen + i >= self.max_seq:
+                break
+            logits, cache = self._step(self.params, tok, cache, pos)
+            tok = jnp.argmax(logits[:, -1], -1)[:, None].astype(jnp.int32)
+            outs.append(np.asarray(tok)[:, 0])
+        gen = np.stack(outs, axis=1)  # (b, T)
+        for i, r in enumerate(requests):
+            r.out = gen[i, : r.max_new_tokens]
+        return requests

@@ -1,0 +1,38 @@
+from repro.training.optimizers import (
+    Optimizer,
+    adam,
+    adamw,
+    sgd,
+    cosine_schedule,
+    clip_by_global_norm,
+)
+from repro.training.loss import accuracy, lm_loss, softmax_xent
+from repro.training.train_step import (
+    TrainState,
+    init_train_state,
+    make_grad_step,
+    make_loss_fn,
+    make_serve_step,
+    make_train_step,
+)
+from repro.training.checkpoint import load_checkpoint, save_checkpoint
+
+__all__ = [
+    "Optimizer",
+    "TrainState",
+    "accuracy",
+    "adam",
+    "adamw",
+    "clip_by_global_norm",
+    "cosine_schedule",
+    "init_train_state",
+    "lm_loss",
+    "load_checkpoint",
+    "make_grad_step",
+    "make_loss_fn",
+    "make_serve_step",
+    "make_train_step",
+    "save_checkpoint",
+    "sgd",
+    "softmax_xent",
+]

@@ -1,0 +1,63 @@
+"""npz-based pytree checkpointing with a path manifest.
+
+Flat keys are '/'-joined pytree paths; restore rebuilds into the reference
+tree structure (shape/dtype checked).
+"""
+from __future__ import annotations
+
+import json
+import os
+from typing import Any
+
+import jax
+import numpy as np
+
+
+def _flatten(tree) -> dict:
+    flat = {}
+    for path, leaf in jax.tree_util.tree_flatten_with_path(tree)[0]:
+        key = "/".join(
+            str(getattr(p, "key", getattr(p, "idx", getattr(p, "name", p))))
+            for p in path
+        )
+        flat[key] = np.asarray(leaf)
+    return flat
+
+
+def save_checkpoint(path: str, tree, step: int = 0, extra: dict | None = None) -> None:
+    os.makedirs(os.path.dirname(path) or ".", exist_ok=True)
+    flat = _flatten(tree)
+    np.savez(path, **flat)
+    manifest = {
+        "step": step,
+        "keys": sorted(flat),
+        "shapes": {k: list(v.shape) for k, v in flat.items()},
+        "dtypes": {k: str(v.dtype) for k, v in flat.items()},
+        "extra": extra or {},
+    }
+    with open(path + ".json", "w") as f:
+        json.dump(manifest, f, indent=1)
+
+
+def load_checkpoint(path: str, reference_tree: Any) -> Any:
+    data = np.load(path if path.endswith(".npz") else path + ".npz")
+    flat_ref = _flatten(reference_tree)
+    missing = set(flat_ref) - set(data.files)
+    if missing:
+        raise KeyError(f"checkpoint missing keys: {sorted(missing)[:5]} ...")
+    leaves_ref, treedef = jax.tree_util.tree_flatten(reference_tree)
+    flat_loaded = []
+    for path_key, ref in zip(sorted(flat_ref), [flat_ref[k] for k in sorted(flat_ref)]):
+        arr = data[path_key]
+        if arr.shape != ref.shape:
+            raise ValueError(f"{path_key}: shape {arr.shape} != {ref.shape}")
+    # rebuild in tree order
+    keyed = jax.tree_util.tree_flatten_with_path(reference_tree)[0]
+    out = []
+    for path, leaf in keyed:
+        key = "/".join(
+            str(getattr(p, "key", getattr(p, "idx", getattr(p, "name", p))))
+            for p in path
+        )
+        out.append(data[key].astype(np.asarray(leaf).dtype))
+    return jax.tree_util.tree_unflatten(treedef, out)

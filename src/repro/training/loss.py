@@ -1,0 +1,61 @@
+"""Loss functions: LM next-token cross-entropy and classifier cross-entropy
+(the paper's eq. 1)."""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+
+def softmax_xent(logits, labels, mask=None):
+    """Mean token-level cross entropy. logits (..., V) fp32; labels (...)."""
+    logits = logits.astype(jnp.float32)
+    logz = jax.nn.logsumexp(logits, axis=-1)
+    gold = jnp.take_along_axis(logits, labels[..., None], axis=-1)[..., 0]
+    nll = logz - gold
+    if mask is not None:
+        return jnp.sum(nll * mask) / jnp.maximum(jnp.sum(mask), 1.0)
+    return jnp.mean(nll)
+
+
+def lm_loss(logits, tokens, *, shift: bool = True):
+    """Next-token prediction: predict tokens[t+1] from logits[t]."""
+    if shift:
+        logits = logits[:, :-1]
+        labels = tokens[:, 1:]
+    else:
+        labels = tokens
+    return softmax_xent(logits, labels)
+
+
+def accuracy(logits, labels):
+    return jnp.mean((jnp.argmax(logits, axis=-1) == labels).astype(jnp.float32))
+
+
+def chunked_lm_loss(hidden, emb, labels, *, chunk: int = 512):
+    """Fused unembed + cross-entropy, chunked over the sequence axis.
+
+    Materializing full (B, S, V) logits dominates activation memory at
+    large vocab (151936 x 4096 x 256 = 2.5 TB fp32); scanning sequence
+    chunks keeps the peak at B x chunk x V per device shard.
+
+    hidden: (B, S, d) final normed activations; emb: (V, d) output table;
+    labels: (B, S) int32.  Mean token NLL.
+    """
+    b, s, d = hidden.shape
+    chunk = min(chunk, s)
+    assert s % chunk == 0, (s, chunk)
+    n = s // chunk
+    hid = hidden.reshape(b, n, chunk, d).swapaxes(0, 1)  # (n, B, chunk, d)
+    lab = labels.reshape(b, n, chunk).swapaxes(0, 1)
+
+    def body(acc, xs):
+        h, y = xs
+        logits = jnp.einsum(
+            "bcd,vd->bcv", h, emb, preferred_element_type=jnp.float32
+        )
+        logz = jax.nn.logsumexp(logits, axis=-1)
+        gold = jnp.take_along_axis(logits, y[..., None], axis=-1)[..., 0]
+        return acc + jnp.sum(logz - gold), None
+
+    total, _ = jax.lax.scan(body, jnp.zeros((), jnp.float32), (hid, lab))
+    return total / (b * s)

@@ -1,0 +1,152 @@
+"""Train/serve step builders shared by examples, the launcher, and dry-run.
+
+``make_train_step`` builds a pure (state, batch) -> (state, metrics) function
+for any ModelConfig (LM next-token objective + MoE auxiliary losses).
+``make_serve_step`` builds the single-token decode step.
+"""
+from __future__ import annotations
+
+from typing import Any, Dict, NamedTuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.models import decode_step, forward
+from repro.models.config import ModelConfig
+from repro.models.transformer import forward_hidden
+from repro.training.loss import chunked_lm_loss, lm_loss
+from repro.training.optimizers import Optimizer, clip_by_global_norm
+
+
+class TrainState(NamedTuple):
+    params: Any
+    opt_state: Any
+    step: jnp.ndarray
+
+
+def init_train_state(params, optimizer: Optimizer) -> TrainState:
+    return TrainState(params, optimizer.init(params), jnp.zeros((), jnp.int32))
+
+
+def make_loss_fn(
+    cfg: ModelConfig,
+    *,
+    aux_weight: float = 0.01,
+    z_weight: float = 1e-3,
+    loss_chunk: int = 512,
+):
+    """LM loss with fused-chunked unembed (never materializes (B,S,V))."""
+
+    def loss_fn(params, batch: Dict[str, jnp.ndarray]):
+        hidden, aux = forward_hidden(
+            params, cfg, batch["tokens"], enc_embeds=batch.get("enc_embeds")
+        )
+        head = params.get("lm_head", params["embed"])
+        l = chunked_lm_loss(hidden, head["emb"], batch["labels"], chunk=loss_chunk)
+        total = l + aux_weight * aux["moe_aux"] + z_weight * aux["moe_z"]
+        return total, {"lm_loss": l, "moe_aux": aux["moe_aux"], "moe_z": aux["moe_z"]}
+
+    return loss_fn
+
+
+def make_train_step(
+    cfg: ModelConfig,
+    optimizer: Optimizer,
+    *,
+    grad_clip: float = 1.0,
+    remat: bool = False,
+    grad_accum: int = 1,
+    param_pspec=None,
+):
+    """Build (state, batch) -> (state, metrics).
+
+    * remat: per-block activation rematerialization (applied inside the layer
+      scan via cfg.remat; a whole-loss jax.checkpoint does NOT bound residual
+      memory and is not used).
+    * grad_accum: microbatching — the global batch is split into
+      ``grad_accum`` microbatches processed sequentially with fp32 gradient
+      accumulation, dividing activation memory by the same factor.
+    * param_pspec: optional PartitionSpec pytree matching params; when set,
+      per-microbatch gradients are constrained to it BEFORE accumulation so
+      XLA reduce-scatters each microbatch's grads instead of all-reducing
+      them unsharded (EXPERIMENTS.md §Perf iteration A4).
+    """
+    if remat and not cfg.remat:
+        import dataclasses as _dc
+
+        cfg = _dc.replace(cfg, remat=True)
+    loss_fn = make_loss_fn(cfg)
+
+    def shard_grads(grads):
+        if param_pspec is None:
+            return grads
+        return jax.tree.map(
+            lambda g, sp: jax.lax.with_sharding_constraint(g, sp), grads, param_pspec
+        )
+
+    def grads_of(params, batch):
+        if grad_accum <= 1:
+            (tm, grads) = jax.value_and_grad(loss_fn, has_aux=True)(params, batch)
+            return tm, shard_grads(grads)
+
+        def split(leaf):
+            b = leaf.shape[0]
+            assert b % grad_accum == 0, (b, grad_accum)
+            return leaf.reshape(grad_accum, b // grad_accum, *leaf.shape[1:])
+
+        micro = jax.tree.map(split, batch)
+
+        def body(carry, mb):
+            gacc, tacc = carry
+            (total, metrics), grads = jax.value_and_grad(loss_fn, has_aux=True)(
+                params, mb
+            )
+            grads = shard_grads(grads)
+            gacc = jax.tree.map(
+                lambda a, g: a + g.astype(jnp.float32), gacc, grads
+            )
+            return (gacc, tacc + total), metrics
+
+        gacc0 = jax.tree.map(
+            lambda p: jnp.zeros(p.shape, jnp.float32), params
+        )
+        (gacc, total), metrics = jax.lax.scan(
+            body, (gacc0, jnp.zeros((), jnp.float32)), micro
+        )
+        grads = jax.tree.map(lambda g: (g / grad_accum), gacc)
+        metrics = jax.tree.map(lambda m: m.mean(), metrics)
+        return (total / grad_accum, metrics), grads
+
+    def train_step(state: TrainState, batch):
+        (total, metrics), grads = grads_of(state.params, batch)
+        grads, gnorm = clip_by_global_norm(grads, grad_clip)
+        params, opt_state = optimizer.update(
+            state.params, grads, state.opt_state, state.step
+        )
+        metrics = dict(metrics, total_loss=total, grad_norm=gnorm)
+        return TrainState(params, opt_state, state.step + 1), metrics
+
+    return train_step
+
+
+def make_grad_step(cfg: ModelConfig, *, remat: bool = False):
+    """Gradient-only step for federated local updates (optimizer applied by
+    the federated client so the aggregation math stays explicit)."""
+    if remat and not cfg.remat:
+        import dataclasses as _dc
+
+        cfg = _dc.replace(cfg, remat=True)
+    loss_fn = make_loss_fn(cfg)
+
+    def grad_step(params, batch):
+        (total, metrics), grads = jax.value_and_grad(loss_fn, has_aux=True)(params, batch)
+        return grads, dict(metrics, total_loss=total)
+
+    return grad_step
+
+
+def make_serve_step(cfg: ModelConfig):
+    def serve_step(params, cache, token, position):
+        return decode_step(params, cfg, token, cache, position)
+
+    return serve_step

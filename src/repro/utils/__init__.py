@@ -1,0 +1,23 @@
+from repro.utils.tree import (
+    tree_add,
+    tree_scale,
+    tree_sub,
+    tree_weighted_mean,
+    tree_zeros_like,
+    tree_l2_norm,
+    tree_size_bytes,
+    tree_num_params,
+)
+from repro.utils.registry import Registry
+
+__all__ = [
+    "Registry",
+    "tree_add",
+    "tree_scale",
+    "tree_sub",
+    "tree_weighted_mean",
+    "tree_zeros_like",
+    "tree_l2_norm",
+    "tree_size_bytes",
+    "tree_num_params",
+]

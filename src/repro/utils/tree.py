@@ -1,0 +1,65 @@
+"""Pytree arithmetic helpers used across the federated runtime.
+
+All helpers are pure and jit-compatible; they operate on arbitrary pytrees of
+jnp arrays (model parameters, optimizer states, gradients).
+"""
+from __future__ import annotations
+
+from typing import Sequence
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+
+def tree_add(a, b):
+    """Elementwise a + b over two pytrees of identical structure."""
+    return jax.tree.map(jnp.add, a, b)
+
+
+def tree_sub(a, b):
+    """Elementwise a - b over two pytrees of identical structure."""
+    return jax.tree.map(jnp.subtract, a, b)
+
+
+def tree_scale(a, s):
+    """Scale every leaf of ``a`` by scalar ``s``."""
+    return jax.tree.map(lambda x: x * s, a)
+
+
+def tree_zeros_like(a):
+    return jax.tree.map(jnp.zeros_like, a)
+
+
+def tree_weighted_mean(trees: Sequence, weights) -> object:
+    """Weighted average of a list of pytrees: sum_i w_i * tree_i / sum_i w_i.
+
+    This is the FedAvg aggregation primitive (paper eq. 6 and eq. 8).
+    ``weights`` may be a python list/np array/jnp array of scalars.
+    """
+    w = jnp.asarray(weights, dtype=jnp.float32)
+    w = w / jnp.sum(w)
+
+    def avg(*leaves):
+        stacked = jnp.stack([l.astype(jnp.float32) for l in leaves], axis=0)
+        out = jnp.tensordot(w, stacked, axes=1)
+        return out.astype(leaves[0].dtype)
+
+    return jax.tree.map(avg, *trees)
+
+
+def tree_l2_norm(a) -> jnp.ndarray:
+    """Global L2 norm over all leaves (used for divergence eq. 17 tracking)."""
+    leaves = jax.tree.leaves(a)
+    return jnp.sqrt(sum(jnp.sum(jnp.square(l.astype(jnp.float32))) for l in leaves))
+
+
+def tree_size_bytes(a) -> int:
+    """Total bytes of a pytree — the per-round model update payload |W_i|."""
+    return int(
+        sum(int(np.prod(l.shape)) * l.dtype.itemsize for l in jax.tree.leaves(a))
+    )
+
+
+def tree_num_params(a) -> int:
+    return int(sum(int(np.prod(l.shape)) for l in jax.tree.leaves(a)))

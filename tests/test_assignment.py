@@ -1,0 +1,154 @@
+"""EARA algorithm tests: LP solvers, rounding, bandwidth allocation, oracles."""
+import numpy as np
+import jax
+import jax.numpy as jnp
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from repro.core import (
+    allocate_bandwidth,
+    dba_assignment,
+    eara,
+    eu_importance,
+    local_search_refine,
+    min_bandwidth_for_latency,
+    optimal_ilp,
+    pairwise_l1_objective,
+    random_assignment,
+    round_dca,
+    round_sca,
+    solve_lp_eg,
+    solve_lp_scipy,
+    total_kld_uniform,
+)
+from repro.wireless import WirelessParams, build_cost_matrices, sample_topology
+
+
+def _skewed_counts(m, k, rng, dominant=1000):
+    cc = np.zeros((m, k))
+    for i in range(m):
+        cc[i, i % k] = dominant
+        cc[i, (i + 1) % k] = rng.integers(0, dominant // 10)
+    return cc
+
+
+@pytest.fixture(scope="module")
+def setup():
+    rng = np.random.default_rng(0)
+    m, n, k = 12, 3, 3
+    cc = _skewed_counts(m, k, rng)
+    p = WirelessParams()
+    topo = sample_topology(jax.random.PRNGKey(0), m, n, mean_dist=200.0,
+                           dataset_sizes=cc.sum(1))
+    cost = build_cost_matrices(topo, model_bits=14789 * 32, p=p)
+    return cc, p, topo, cost
+
+
+def test_lp_eg_matches_scipy_objective(setup):
+    cc, p, topo, cost = setup
+    feas = np.ones_like(cost.feasible)
+    lam_eg = np.asarray(solve_lp_eg(jnp.asarray(cc, jnp.float32), jnp.asarray(feas)))
+    lam_sp = solve_lp_scipy(cc, feas)
+    obj_eg = float(pairwise_l1_objective(jnp.asarray(lam_eg), jnp.asarray(cc)))
+    obj_sp = float(pairwise_l1_objective(jnp.asarray(lam_sp), jnp.asarray(cc)))
+    # EG is approximate; must be within a small additive gap of LP optimum
+    assert obj_eg <= obj_sp + 0.02 * cc.sum()
+
+
+def test_lp_respects_feasibility_mask(setup):
+    cc, p, topo, cost = setup
+    feas = np.ones((cc.shape[0], 3), bool)
+    feas[0, 1:] = False  # EU 0 can only reach edge 0
+    lam = np.asarray(solve_lp_eg(jnp.asarray(cc, jnp.float32), jnp.asarray(feas)))
+    assert lam[0, 0] == pytest.approx(1.0, abs=1e-5)
+    rows = lam.sum(axis=1)
+    np.testing.assert_allclose(rows, 1.0, atol=1e-4)
+
+
+def test_rounding_sca_rows(setup):
+    cc, p, topo, cost = setup
+    feas = np.ones((cc.shape[0], 3), bool)
+    lam_frac = np.asarray(solve_lp_eg(jnp.asarray(cc, jnp.float32), jnp.asarray(feas)))
+    lam = round_sca(lam_frac, feas)
+    assert set(np.unique(lam)) <= {0.0, 1.0}
+    np.testing.assert_array_equal(lam.sum(axis=1), 1.0)
+
+
+def test_rounding_dca_allows_two(setup):
+    cc, p, topo, cost = setup
+    feas = np.ones((cc.shape[0], 3), bool)
+    lam_frac = np.full((cc.shape[0], 3), 1 / 3.0)
+    lam = round_dca(lam_frac, feas, nu=0.2)
+    assert np.all(lam.sum(axis=1) <= 2)
+    assert np.all(lam.sum(axis=1) >= 1)
+
+
+def test_eara_beats_dba_and_random_on_kld(setup):
+    cc, p, topo, cost = setup
+    res = eara(cc, cost, p, 14789 * 32, topo.tx_power_max, mode="sca", allocate=False)
+    dba = dba_assignment(cc, topo.dist)
+    rnd = random_assignment(cc, 3, seed=1)
+    assert res.kld_total <= dba.kld_total + 1e-6
+    assert res.kld_total <= rnd.kld_total + 1e-6
+
+
+def test_refine_never_hurts(setup):
+    cc, p, topo, cost = setup
+    base = eara(cc, cost, p, 14789 * 32, topo.tx_power_max, mode="sca", allocate=False)
+    ref = eara(cc, cost, p, 14789 * 32, topo.tx_power_max, mode="sca", allocate=False, refine=True)
+    assert ref.kld_total <= base.kld_total + 1e-9
+
+
+def test_near_optimality_vs_brute_force():
+    """The paper claims near-optimal performance: check vs exact ILP."""
+    rng = np.random.default_rng(3)
+    m, n, k = 8, 2, 2
+    cc = _skewed_counts(m, k, rng)
+    feas = np.ones((m, n), bool)
+    opt = optimal_ilp(cc, feas)
+    lam_frac = np.asarray(solve_lp_eg(jnp.asarray(cc, jnp.float32), jnp.asarray(feas)))
+    lam = local_search_refine(round_sca(lam_frac, feas), cc, feas)
+    got = float(total_kld_uniform(jnp.asarray(lam), jnp.asarray(cc)))
+    assert got <= opt.kld_total + 0.05  # near-optimal
+
+
+def test_importance_highlights_unique_class():
+    # edge 0 has EUs {0,1}: EU1 holds the only class-1 data -> more important
+    cc = np.array([[100, 0], [0, 100], [50, 50]], float)
+    lam = np.array([[1, 0], [1, 0], [0, 1]], float)
+    imp = eu_importance(lam, cc)
+    assert imp[1] > imp[0] - 1e-9
+
+
+def test_min_bandwidth_monotone(setup):
+    cc, p, topo, cost = setup
+    b1 = min_bandwidth_for_latency(1e5, 1e-9, 0.2, 0.01, p)
+    b2 = min_bandwidth_for_latency(2e5, 1e-9, 0.2, 0.01, p)
+    assert b2 >= b1  # more bits need more bandwidth
+
+
+def test_bandwidth_allocation_budget(setup):
+    cc, p, topo, cost = setup
+    res = eara(cc, cost, p, 14789 * 32, topo.tx_power_max, mode="sca")
+    bw = res.bandwidth
+    assert bw is not None
+    # per-edge total within budget
+    per_edge = bw.sum(axis=0)
+    assert np.all(per_edge <= p.bandwidth_total + 1e-6)
+    # only assigned pairs get bandwidth
+    assert np.all((bw > 0) <= (res.lam > 0))
+
+
+@settings(max_examples=20, deadline=None)
+@given(st.integers(4, 10), st.integers(2, 3), st.integers(2, 4), st.integers(0, 99999))
+def test_eara_property_valid_assignment(m, n, k, seed):
+    rng = np.random.default_rng(seed)
+    cc = rng.integers(0, 200, (m, k)).astype(float)
+    cc[cc.sum(1) == 0, 0] = 1
+    feas = rng.random((m, n)) > 0.2
+    feas[~feas.any(axis=1), 0] = True
+    lam_frac = np.asarray(solve_lp_eg(jnp.asarray(cc, jnp.float32), jnp.asarray(feas), n_steps=300))
+    lam = round_sca(lam_frac, feas)
+    # every EU on exactly one feasible edge
+    np.testing.assert_array_equal(lam.sum(axis=1), 1.0)
+    assert np.all(lam[~feas] == 0)

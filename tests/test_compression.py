@@ -1,0 +1,71 @@
+"""Compression baselines + wall-clock accounting tests."""
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.core.compression import CompressionSpec, ternarize, topk_sparsify
+from repro.core.hfl import WallClock
+
+
+def _tree(key):
+    k1, k2 = jax.random.split(key)
+    return {"a": jax.random.normal(k1, (40, 25)), "b": jax.random.normal(k2, (64,))}
+
+
+def test_topk_keeps_largest():
+    t = _tree(jax.random.PRNGKey(0))
+    sparse, err = topk_sparsify(t, 0.1)
+    for orig, s in zip(jax.tree.leaves(t), jax.tree.leaves(sparse)):
+        nz = np.count_nonzero(np.asarray(s))
+        assert nz <= int(np.ceil(orig.size * 0.1)) + 1
+        # kept entries are the largest-magnitude ones
+        kept_min = np.abs(np.asarray(s))[np.asarray(s) != 0].min()
+        dropped_max = np.abs(np.asarray(orig - s)).max()
+        assert kept_min >= dropped_max - 1e-5 or nz == orig.size
+
+
+def test_error_feedback_preserves_signal():
+    """sparse + error == original (nothing lost, just delayed)."""
+    t = _tree(jax.random.PRNGKey(1))
+    sparse, err = topk_sparsify(t, 0.05)
+    for o, s, e in zip(*(jax.tree.leaves(x) for x in (t, sparse, err))):
+        np.testing.assert_allclose(np.asarray(s + e), np.asarray(o), rtol=1e-5)
+
+
+def test_ternary_three_levels():
+    t = _tree(jax.random.PRNGKey(2))
+    q, err = ternarize(t)
+    for leaf in jax.tree.leaves(q):
+        vals = np.unique(np.round(np.asarray(leaf), 5))
+        assert len(vals) <= 3  # {-mu, 0, +mu}
+    for o, s, e in zip(*(jax.tree.leaves(x) for x in (t, q, err))):
+        np.testing.assert_allclose(np.asarray(s + e), np.asarray(o), rtol=1e-5)
+
+
+def test_compression_bits_ordering():
+    t = _tree(jax.random.PRNGKey(3))
+    dense = CompressionSpec("none").bits(t)
+    topk = CompressionSpec("topk", fraction=0.01).bits(t)
+    tern = CompressionSpec("ternary").bits(t)
+    assert topk < tern < dense
+
+
+def test_wallclock_straggler_max():
+    lat = np.array([[0.1, 9.0], [0.5, 0.2], [9.0, 0.3]])
+    lam = np.array([[1, 0], [0, 1], [0, 1]])
+    wc = WallClock(lat)
+    dt = wc.on_edge_sync(lam)
+    # slowest participating EU on its own edge: max(0.1, 0.2, 0.3) = 0.3
+    assert dt == pytest.approx(0.3)
+    wc.on_cloud_sync()
+    assert wc.seconds == pytest.approx(0.3 + wc.backhaul_s)
+
+
+def test_wallclock_in_simulation():
+    from repro.federated import build_scenario
+
+    sc = build_scenario("heartbeat", scale=0.02, seed=0, n_test_per_class=20)
+    a = sc.assign("eara-sca")
+    res = sc.simulate(a.lam, cloud_rounds=1, wall_clock=True)
+    assert res.wall_seconds > 0

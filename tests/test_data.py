@@ -1,0 +1,88 @@
+"""Synthetic datasets + partitioners."""
+import numpy as np
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from repro.data import (
+    TABLE2_SEIZURE,
+    TABLE3_HEARTBEAT,
+    TokenStream,
+    class_histogram,
+    dirichlet_partition,
+    eu_counts_from_edge_table,
+    heartbeat_like,
+    seizure_like,
+    split_dataset_by_counts,
+)
+
+
+def test_tables_match_paper():
+    assert TABLE2_SEIZURE.shape == (3, 3)
+    assert TABLE2_SEIZURE[0, 0] == 1459 and TABLE2_SEIZURE[1, 1] == 1160
+    assert TABLE3_HEARTBEAT.shape == (5, 5)
+    assert TABLE3_HEARTBEAT.sum() == 100_000  # 10 x 10^3 per nonzero cell
+
+
+def test_heartbeat_dataset_shapes():
+    rng = np.random.default_rng(0)
+    ds = heartbeat_like(rng, [50, 40, 30, 20, 10])
+    assert ds.x.shape == (150, 187, 1)
+    np.testing.assert_array_equal(class_histogram(ds.y, 5), [50, 40, 30, 20, 10])
+
+
+def test_seizure_dataset_channels():
+    rng = np.random.default_rng(0)
+    ds = seizure_like(rng, [30, 30, 30])
+    assert ds.x.shape == (90, 178, 19)
+
+
+def test_classes_are_separable():
+    """A trivial nearest-centroid rule must beat chance by a wide margin —
+    otherwise the FL accuracy comparisons are meaningless."""
+    rng = np.random.default_rng(1)
+    train = heartbeat_like(rng, [100] * 5)
+    test = heartbeat_like(rng, [30] * 5)
+    cents = np.stack([train.x[train.y == c].mean(0).ravel() for c in range(5)])
+    pred = np.argmin(
+        ((test.x.reshape(len(test), -1)[:, None] - cents[None]) ** 2).sum(-1), axis=1
+    )
+    assert (pred == test.y).mean() > 0.6
+
+
+def test_eu_counts_preserve_edge_totals():
+    rng = np.random.default_rng(0)
+    counts, init_edge = eu_counts_from_edge_table(rng, TABLE2_SEIZURE, [5, 4, 4])
+    assert counts.shape == (13, 3)
+    for j in range(3):
+        np.testing.assert_array_equal(
+            counts[init_edge == j].sum(axis=0), TABLE2_SEIZURE[j]
+        )
+
+
+@settings(max_examples=10, deadline=None)
+@given(st.integers(2, 6), st.floats(0.1, 5.0), st.integers(0, 999))
+def test_dirichlet_partition_covers_everything(n_eus, alpha, seed):
+    rng = np.random.default_rng(seed)
+    labels = rng.integers(0, 4, 200)
+    parts = dirichlet_partition(rng, labels, n_eus, alpha)
+    all_idx = np.concatenate(parts)
+    assert len(all_idx) == 200
+    assert len(np.unique(all_idx)) == 200
+
+
+def test_split_dataset_by_counts_exact():
+    rng = np.random.default_rng(0)
+    ds = heartbeat_like(rng, [60, 60, 60, 60, 60])
+    counts = np.array([[10, 0, 5, 0, 0], [0, 20, 0, 0, 30]])
+    shards = split_dataset_by_counts(rng, ds, counts)
+    for i in range(2):
+        np.testing.assert_array_equal(class_histogram(shards[i].y, 5), counts[i])
+
+
+def test_token_stream_deterministic_and_topical():
+    s1 = TokenStream(1000, seed=0, topic=0)
+    s2 = TokenStream(1000, seed=0, topic=0)
+    np.testing.assert_array_equal(s1.batch(2, 32), s2.batch(2, 32))
+    b = TokenStream(1000, seed=0, topic=1).train_batch(2, 16)
+    assert b["tokens"].shape == (2, 16) and b["labels"].shape == (2, 16)
+    assert b["tokens"].max() < 1000

@@ -1,0 +1,79 @@
+"""Federated runtime integration tests (small scale, CPU-fast)."""
+import numpy as np
+import pytest
+
+from repro.core.hfl import HFLSchedule
+from repro.data import TABLE3_HEARTBEAT, eu_counts_from_edge_table
+from repro.federated import build_scenario
+
+
+@pytest.fixture(scope="module")
+def scenario():
+    return build_scenario("heartbeat", scale=0.02, seed=0, n_test_per_class=50)
+
+
+def test_scenario_construction(scenario):
+    sc = scenario
+    assert len(sc.clients) == 18
+    assert sc.class_counts.shape == (18, 5)
+    # per-edge class totals match Table 3 structure: zeros stay zero
+    rng = np.random.default_rng(0)
+    counts, init_edge = eu_counts_from_edge_table(
+        rng, TABLE3_HEARTBEAT, [4, 4, 4, 3, 3], scale=0.02
+    )
+    for j in range(5):
+        tot = counts[init_edge == j].sum(axis=0)
+        expect = (TABLE3_HEARTBEAT[j] * 0.02).astype(np.int64)
+        np.testing.assert_array_equal(tot, expect)
+
+
+def test_shards_match_counts(scenario):
+    sc = scenario
+    for i, c in enumerate(sc.clients):
+        np.testing.assert_array_equal(c.class_counts(), sc.class_counts[i])
+
+
+def test_assignment_strategies_ordering(scenario):
+    sc = scenario
+    dba = sc.assign("dba")
+    sca = sc.assign("eara-sca")
+    plus = sc.assign("eara-sca+")
+    assert sca.kld_total <= dba.kld_total + 1e-6
+    assert plus.kld_total <= sca.kld_total + 1e-9
+
+
+def test_simulation_improves_accuracy(scenario):
+    sc = scenario
+    a = sc.assign("eara-sca")
+    res = sc.simulate(a.lam, cloud_rounds=3, seed=0)
+    assert len(res.history) == 3
+    accs = [m.test_acc for m in res.history]
+    assert accs[-1] > 1.0 / 5 + 0.1  # clearly above chance
+    assert res.accountant.cloud_rounds == 3
+
+
+def test_hierarchical_schedule_reduces_cloud_syncs(scenario):
+    sc = scenario
+    a = sc.assign("eara-sca")
+    r1 = sc.simulate(a.lam, cloud_rounds=2, schedule=HFLSchedule(1, 1), seed=0)
+    r2 = sc.simulate(a.lam, cloud_rounds=2, schedule=HFLSchedule(1, 2), seed=0)
+    # T=2: twice the edge rounds per cloud round
+    assert r2.accountant.edge_rounds == 2 * r1.accountant.edge_rounds
+    assert r2.accountant.cloud_rounds == r1.accountant.cloud_rounds
+
+
+def test_upp_drops_participants(scenario):
+    sc = scenario
+    a = sc.assign("eara-sca")
+    full = sc.simulate(a.lam, cloud_rounds=1, upp=1.0, seed=0)
+    half = sc.simulate(a.lam, cloud_rounds=1, upp=0.5, seed=0)
+    t_full = sum(full.accountant.eu_traffic_bits().values())
+    t_half = sum(half.accountant.eu_traffic_bits().values())
+    assert t_half < t_full
+
+
+def test_divergence_tracked(scenario):
+    sc = scenario
+    a = sc.assign("dba")
+    res = sc.simulate(a.lam, cloud_rounds=1, track_divergence=True, seed=0)
+    assert res.history[0].divergence > 0.0

@@ -1,0 +1,64 @@
+"""Hierarchical aggregation schedule + accounting tests (eq. 6-9)."""
+import numpy as np
+import jax.numpy as jnp
+import pytest
+
+from repro.core import CommAccountant, HFLSchedule, cloud_aggregate, edge_aggregate, weight_divergence
+from repro.utils.tree import tree_weighted_mean
+
+
+def _model(val):
+    return {"w": jnp.full((3, 2), val), "b": jnp.full((2,), val)}
+
+
+def test_schedule_periods():
+    s = HFLSchedule(local_steps=2, edge_per_cloud=3)
+    assert s.cloud_period == 6
+    edge_steps = [t for t in range(1, 13) if s.edge_sync_at(t)]
+    cloud_steps = [t for t in range(1, 13) if s.cloud_sync_at(t)]
+    assert edge_steps == [2, 4, 6, 8, 10, 12]
+    assert cloud_steps == [6, 12]
+
+
+def test_edge_aggregate_weighted_mean():
+    """eq. 6-7: sigma-weighted mean by dataset size."""
+    agg = edge_aggregate([_model(1.0), _model(3.0)], [100, 300])
+    np.testing.assert_allclose(np.asarray(agg["w"]), 2.5, rtol=1e-6)
+
+
+def test_aggregate_identity():
+    agg = cloud_aggregate([_model(2.0)] * 4, [1, 2, 3, 4])
+    np.testing.assert_allclose(np.asarray(agg["b"]), 2.0, rtol=1e-6)
+
+
+def test_weight_divergence_zero_for_equal():
+    assert weight_divergence(_model(1.5), _model(1.5)) == pytest.approx(0.0, abs=1e-7)
+    assert weight_divergence(_model(1.0), _model(2.0)) > 0
+
+
+def test_tree_weighted_mean_normalizes():
+    out = tree_weighted_mean([_model(0.0), _model(10.0)], [9, 1])
+    np.testing.assert_allclose(np.asarray(out["w"]), 1.0, rtol=1e-5)
+
+
+def test_accountant_counts():
+    acc = CommAccountant(model_bits=1000.0)
+    lam = np.array([[1, 0], [1, 0], [0, 1]])
+    acc.on_edge_sync(lam)
+    acc.on_edge_sync(lam)
+    acc.on_cloud_sync(n_edges=2)
+    assert acc.edge_rounds == 2 and acc.cloud_rounds == 1
+    # each EU: 2 rounds x (1000 up + 1000 down)
+    t = acc.eu_traffic_bits()
+    assert t[0] == pytest.approx(4000.0)
+    assert acc.edge_cloud_bits == pytest.approx(2 * 1000 * 2)
+
+
+def test_accountant_dca_multicast():
+    acc = CommAccountant(model_bits=1000.0, dca_multicast_overhead=0.03)
+    lam = np.array([[1, 1], [1, 0]])  # EU0 dual connectivity
+    acc.on_edge_sync(lam)
+    t_up = acc.eu_bits_up
+    assert t_up[0] == pytest.approx(1030.0)  # multicast + 3%
+    assert t_up[1] == pytest.approx(1000.0)
+    assert acc.eu_bits_down[0] == pytest.approx(2000.0)  # two downlink copies

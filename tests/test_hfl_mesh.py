@@ -1,0 +1,95 @@
+"""Hierarchical-FL-on-mesh semantics (CPU functional tests, no mesh)."""
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.configs import get_smoke_config
+from repro.distributed.axes import grad_cast, sharding_hints
+from repro.distributed.hfl_mesh import (
+    init_hfl_state,
+    make_hfl_train_step,
+    replicate_for_edges,
+)
+from repro.models import init_params
+from repro.training.optimizers import adam
+
+
+@pytest.fixture(scope="module")
+def setup():
+    cfg = get_smoke_config("phi3-mini-3.8b")
+    params = init_params(jax.random.PRNGKey(0), cfg)
+    opt = adam(1e-3)
+    E, B, S = 2, 4, 16
+    toks = jax.random.randint(jax.random.PRNGKey(1), (E, B, S), 0, cfg.vocab_size)
+    batch = {"tokens": toks, "labels": jnp.roll(toks, -1, 2)}
+    return cfg, params, opt, batch
+
+
+def test_replicas_diverge_then_sync(setup):
+    cfg, params, opt, batch = setup
+    state = init_hfl_state(params, opt, 2)
+    local = jax.jit(make_hfl_train_step(cfg, opt, sync=False))
+    syncs = jax.jit(make_hfl_train_step(cfg, opt, sync=True))
+    state, _ = local(state, batch)
+    div = max(jax.tree.leaves(jax.tree.map(
+        lambda x: float(jnp.max(jnp.abs(x[0] - x[1]))), state.params)))
+    assert div > 0  # non-IID per-edge batches -> replicas diverge
+    state, _ = syncs(state, batch)
+    div2 = max(jax.tree.leaves(jax.tree.map(
+        lambda x: float(jnp.max(jnp.abs(x[0] - x[1]))), state.params)))
+    assert div2 < 1e-6  # cloud sync equalizes replicas (eq. 8)
+
+
+def test_sigma_weighted_cloud_average(setup):
+    cfg, params, opt, batch = setup
+    w = jnp.asarray([3.0, 1.0])
+    state = init_hfl_state(params, opt, 2)
+    # hand-divergent replicas
+    state = state._replace(params=jax.tree.map(
+        lambda x: x.at[1].set(x[1] + 1.0), state.params))
+    syncs = jax.jit(make_hfl_train_step(cfg, opt, sync=True, edge_weights=w))
+    new, _ = syncs(state, batch)
+    # after sync every replica equals the sigma-weighted average
+    for leaf in jax.tree.leaves(new.params):
+        np.testing.assert_allclose(np.asarray(leaf[0]), np.asarray(leaf[1]), atol=1e-5)
+
+
+def test_grad_cast_identity_forward_and_matching_backward():
+    """grad_cast is identity in forward; the cotangent is pinned to the
+    primal dtype at the gate (so later resharding moves bf16)."""
+    x = jnp.ones((4,), jnp.bfloat16)
+
+    def f(x):
+        y = grad_cast(x * jnp.bfloat16(2.0))
+        return jnp.sum(y.astype(jnp.float32) * 3.0)
+
+    assert float(f(x)) == 24.0
+    g = jax.grad(f)(x)
+    assert g.dtype == jnp.bfloat16
+    assert float(g[0]) == 6.0
+
+
+def test_sharding_hints_scoped():
+    from repro.distributed.axes import current_hints
+
+    assert current_hints().batch_axes is None
+
+    class M:
+        axis_names = ("data", "model")
+        shape = {"data": 2, "model": 2}
+
+    with sharding_hints(M()):
+        assert current_hints().batch_axes == ("data",)
+        assert current_hints().model_size == 2
+    assert current_hints().batch_axes is None
+
+
+def test_bf16_moment_adam_converges():
+    opt = adam(0.1, moment_dtype=jnp.bfloat16)
+    params = {"x": jnp.asarray(5.0)}
+    state = opt.init(params)
+    assert jax.tree.leaves(state)[0].dtype == jnp.bfloat16
+    for i in range(120):
+        params, state = opt.update(params, {"x": 2 * params["x"]}, state, jnp.asarray(i))
+    assert abs(float(params["x"])) < 0.05

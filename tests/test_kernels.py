@@ -1,0 +1,79 @@
+"""Pallas kernel tests: shape/dtype sweeps, assert_allclose vs ref.py oracle
+(interpret=True executes the kernel body on CPU)."""
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.kernels.flash_attention import flash_attention
+from repro.kernels.hier_aggregate import hier_aggregate
+from repro.kernels.topk_gating import topk_gating
+from repro.kernels.ref import flash_attention_ref, hier_aggregate_ref, topk_gating_ref
+
+
+@pytest.mark.parametrize("dtype", [jnp.float32, jnp.bfloat16])
+@pytest.mark.parametrize(
+    "b,s,hq,hkv,d,bq,bk",
+    [
+        (1, 128, 4, 4, 64, 64, 64),     # MHA
+        (2, 256, 8, 2, 64, 128, 64),    # GQA 4:1
+        (1, 256, 6, 6, 32, 64, 128),    # non-pow2 heads
+        (2, 128, 4, 1, 128, 32, 32),    # MQA
+    ],
+)
+def test_flash_attention_sweep(dtype, b, s, hq, hkv, d, bq, bk):
+    ks = jax.random.split(jax.random.PRNGKey(0), 3)
+    q = jax.random.normal(ks[0], (b, s, hq, d)).astype(dtype)
+    k = jax.random.normal(ks[1], (b, s, hkv, d)).astype(dtype)
+    v = jax.random.normal(ks[2], (b, s, hkv, d)).astype(dtype)
+    out = flash_attention(q, k, v, causal=True, block_q=bq, block_k=bk, interpret=True)
+    ref = flash_attention_ref(q, k, v, causal=True)
+    tol = 2e-2 if dtype == jnp.bfloat16 else 2e-5
+    np.testing.assert_allclose(
+        np.asarray(out, np.float32), np.asarray(ref, np.float32), atol=tol, rtol=tol
+    )
+
+
+@pytest.mark.parametrize("window", [16, 64, 100])
+def test_flash_attention_sliding_window(window):
+    ks = jax.random.split(jax.random.PRNGKey(1), 3)
+    q, k, v = (jax.random.normal(kk, (2, 128, 4, 32)) for kk in ks)
+    out = flash_attention(q, k, v, causal=True, window=window, block_q=32, block_k=32, interpret=True)
+    ref = flash_attention_ref(q, k, v, causal=True, window=window)
+    np.testing.assert_allclose(np.asarray(out), np.asarray(ref), atol=2e-5, rtol=2e-5)
+
+
+@pytest.mark.parametrize("dtype", [jnp.float32, jnp.bfloat16])
+@pytest.mark.parametrize("n,d,block", [(4, 1000, 256), (13, 14789, 4096), (32, 512, 512)])
+def test_hier_aggregate_sweep(dtype, n, d, block):
+    u = jax.random.normal(jax.random.PRNGKey(0), (n, d)).astype(dtype)
+    w = jax.random.uniform(jax.random.PRNGKey(1), (n,), minval=0.05)
+    out = hier_aggregate(u, w, block=block, interpret=True)
+    ref = hier_aggregate_ref(u, w)
+    tol = 2e-2 if dtype == jnp.bfloat16 else 1e-5
+    np.testing.assert_allclose(
+        np.asarray(out, np.float32), np.asarray(ref, np.float32), atol=tol, rtol=tol
+    )
+
+
+def test_hier_aggregate_is_fedavg():
+    """Kernel implements exactly eq. 6: sigma-weighted average."""
+    u = jnp.stack([jnp.full((100,), 1.0), jnp.full((100,), 3.0)])
+    out = hier_aggregate(u, jnp.asarray([1.0, 3.0]), interpret=True)
+    np.testing.assert_allclose(np.asarray(out), 2.5, rtol=1e-6)
+
+
+@pytest.mark.parametrize("t,e,k,bt", [(64, 8, 2, 32), (200, 16, 4, 64), (100, 40, 8, 128)])
+def test_topk_gating_sweep(t, e, k, bt):
+    logits = jax.random.normal(jax.random.PRNGKey(0), (t, e)) * 2
+    out = topk_gating(logits, k, block_t=bt, interpret=True)
+    ref, _ = topk_gating_ref(logits, k)
+    np.testing.assert_allclose(np.asarray(out), np.asarray(ref), atol=1e-5, rtol=1e-5)
+
+
+def test_topk_gating_properties():
+    logits = jax.random.normal(jax.random.PRNGKey(2), (128, 16))
+    out = np.asarray(topk_gating(logits, 4, interpret=True))
+    # exactly k nonzeros per row, weights sum to 1
+    assert (np.count_nonzero(out, axis=1) == 4).all()
+    np.testing.assert_allclose(out.sum(axis=1), 1.0, rtol=1e-5)

@@ -1,0 +1,95 @@
+"""Unit + property tests for the KLD / entropy / eq-29 objective math."""
+import numpy as np
+import jax.numpy as jnp
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from repro.core import (
+    divergence_bound,
+    edge_class_counts,
+    edge_distributions,
+    kld,
+    pairwise_l1_objective,
+    total_entropy,
+    total_kld_uniform,
+)
+
+
+def _one_hot_assignment(m, n, rng):
+    lam = np.zeros((m, n))
+    lam[np.arange(m), rng.integers(0, n, m)] = 1.0
+    return lam
+
+
+def test_kld_zero_iff_equal():
+    q = jnp.full((5,), 0.2)
+    assert float(kld(q, q)) == pytest.approx(0.0, abs=1e-9)
+    h = jnp.asarray([0.5, 0.3, 0.1, 0.05, 0.05])
+    assert float(kld(h, q)) > 0.0
+
+
+def test_perfectly_balanced_assignment_zero_kld():
+    # 4 EUs, 2 edges, 2 classes: each edge gets one EU of each pure class
+    cc = np.array([[100, 0], [0, 100], [100, 0], [0, 100]], float)
+    lam = np.array([[1, 0], [1, 0], [0, 1], [0, 1]], float)
+    assert float(total_kld_uniform(jnp.asarray(lam), jnp.asarray(cc))) == pytest.approx(0.0, abs=1e-6)
+    assert float(pairwise_l1_objective(jnp.asarray(lam), jnp.asarray(cc))) == pytest.approx(0.0, abs=1e-6)
+
+
+def test_skewed_assignment_positive_kld():
+    cc = np.array([[100, 0], [0, 100], [100, 0], [0, 100]], float)
+    lam = np.array([[1, 0], [0, 1], [1, 0], [0, 1]], float)  # edge0 all class0
+    assert float(total_kld_uniform(jnp.asarray(lam), jnp.asarray(cc))) > 0.5
+
+
+def test_edge_counts_linear_in_lambda():
+    rng = np.random.default_rng(0)
+    cc = rng.integers(0, 50, (6, 4)).astype(float)
+    l1 = _one_hot_assignment(6, 3, rng)
+    l2 = _one_hot_assignment(6, 3, rng)
+    c1 = edge_class_counts(jnp.asarray(l1), jnp.asarray(cc))
+    c2 = edge_class_counts(jnp.asarray(l2), jnp.asarray(cc))
+    c12 = edge_class_counts(jnp.asarray(0.5 * l1 + 0.5 * l2), jnp.asarray(cc))
+    np.testing.assert_allclose(np.asarray(c12), 0.5 * (np.asarray(c1) + np.asarray(c2)), rtol=1e-6)
+
+
+@settings(max_examples=40, deadline=None)
+@given(
+    st.integers(3, 8),
+    st.integers(2, 4),
+    st.integers(2, 5),
+    st.integers(0, 10_000),
+)
+def test_entropy_kld_duality(m, n, k, seed):
+    """Paper eq. 25-27: sum KLD(H_j||U) == N*log K - sum entropy(H_j)."""
+    rng = np.random.default_rng(seed)
+    cc = rng.integers(1, 100, (m, k)).astype(float)
+    lam = _one_hot_assignment(m, n, rng)
+    # only count edges with data (empty edges contribute log-K offset)
+    occupied = np.asarray(edge_class_counts(jnp.asarray(lam), jnp.asarray(cc))).sum(1) > 0
+    n_occ = occupied.sum()
+    kl = float(total_kld_uniform(jnp.asarray(lam[:, occupied]), jnp.asarray(cc)))
+    ent = float(total_entropy(jnp.asarray(lam[:, occupied]), jnp.asarray(cc)))
+    assert kl == pytest.approx(n_occ * np.log(k) - ent, rel=1e-4, abs=1e-4)
+
+
+@settings(max_examples=30, deadline=None)
+@given(st.integers(2, 6), st.integers(2, 4), st.integers(0, 10_000))
+def test_divergence_bound_nonnegative_and_zero_when_balanced(m, k, seed):
+    rng = np.random.default_rng(seed)
+    cc = rng.integers(1, 50, (m, k)).astype(float)
+    lam = _one_hot_assignment(m, 2, rng)
+    db = float(divergence_bound(jnp.asarray(lam), jnp.asarray(cc)))
+    assert db >= -1e-6
+    # single edge == global distribution -> zero distance
+    lam_all = np.zeros((m, 2))
+    lam_all[:, 0] = 1.0
+    assert float(divergence_bound(jnp.asarray(lam_all), jnp.asarray(cc))) == pytest.approx(0.0, abs=1e-5)
+
+
+def test_distributions_rows_normalized():
+    rng = np.random.default_rng(1)
+    cc = rng.integers(1, 40, (7, 5)).astype(float)
+    lam = _one_hot_assignment(7, 3, rng)
+    h = np.asarray(edge_distributions(jnp.asarray(lam), jnp.asarray(cc)))
+    np.testing.assert_allclose(h.sum(axis=1), 1.0, rtol=1e-5)

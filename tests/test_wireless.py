@@ -1,0 +1,77 @@
+"""Wireless model tests: eq. 12-16 identities and monotonicity properties."""
+import numpy as np
+import jax
+import jax.numpy as jnp
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from repro.wireless import (
+    WirelessParams,
+    build_cost_matrices,
+    channel_gain,
+    computation_time,
+    sample_topology,
+    shannon_rate,
+    tx_energy,
+    tx_power,
+    uplink_latency,
+)
+
+P = WirelessParams()
+
+
+def test_rate_power_inversion():
+    """eq. 13 <-> eq. 14: tx_power(rate(P)) == P."""
+    gain = jnp.asarray(2e-9)
+    bw = jnp.asarray(1e6)
+    p_tx = jnp.asarray(0.2)
+    rate = shannon_rate(p_tx, gain, bw, P)
+    p_back = tx_power(rate, gain, bw, P)
+    assert float(p_back) == pytest.approx(0.2, rel=1e-4)
+
+
+@settings(max_examples=30, deadline=None)
+@given(st.floats(100, 2000), st.floats(0.01, 1.0))
+def test_gain_decreases_with_distance(d, h2):
+    g1 = float(channel_gain(jnp.asarray(d), jnp.asarray(h2), P))
+    g2 = float(channel_gain(jnp.asarray(d * 2), jnp.asarray(h2), P))
+    assert g2 < g1
+
+
+@settings(max_examples=30, deadline=None)
+@given(st.floats(1e5, 1e7), st.floats(1e-12, 1e-8))
+def test_rate_increases_with_bandwidth_and_gain(bw, g):
+    r1 = float(shannon_rate(0.2, jnp.asarray(g), jnp.asarray(bw), P))
+    r2 = float(shannon_rate(0.2, jnp.asarray(g), jnp.asarray(bw * 2), P))
+    r3 = float(shannon_rate(0.2, jnp.asarray(g * 2), jnp.asarray(bw), P))
+    assert r2 > r1 and r3 > r1
+
+
+def test_energy_scales_with_bits():
+    g, bw = jnp.asarray(1e-9), jnp.asarray(1e6)
+    rate = shannon_rate(0.2, g, bw, P)
+    e1 = float(tx_energy(1e5, rate, g, bw, P))
+    e2 = float(tx_energy(2e5, rate, g, bw, P))
+    assert e2 == pytest.approx(2 * e1, rel=1e-6)
+
+
+def test_latency_components():
+    l = float(uplink_latency(1e6, jnp.asarray(1e6), P))
+    assert l == pytest.approx(1.0 + P.xi_access_delay, rel=1e-6)
+
+
+def test_computation_time_scales_with_data_and_cpu():
+    t1 = float(computation_time(jnp.asarray(1000.0), jnp.asarray(1e9), P))
+    t2 = float(computation_time(jnp.asarray(2000.0), jnp.asarray(1e9), P))
+    t3 = float(computation_time(jnp.asarray(1000.0), jnp.asarray(2e9), P))
+    assert t2 == pytest.approx(2 * t1, rel=1e-6)
+    assert t3 == pytest.approx(t1 / 2, rel=1e-6)
+
+
+def test_cost_matrices_shapes_and_fallback():
+    topo = sample_topology(jax.random.PRNGKey(0), 9, 4, mean_dist=5000.0)
+    cost = build_cost_matrices(topo, model_bits=1e6, p=P)
+    assert cost.latency.shape == (9, 4)
+    assert cost.energy.shape == (9, 4)
+    # even at extreme distance every EU keeps >= 1 feasible edge (fallback)
+    assert cost.feasible.any(axis=1).all()
