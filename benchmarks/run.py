@@ -11,6 +11,7 @@ manageable.
   roofline — dry-run roofline table                        (EXPERIMENTS §Roofline)
   hfl_collectives — cross-edge collective-byte claim on mesh
   kernels — Pallas kernel micro-bench (interpret mode)
+  engine — clients/sec: sync-loop vs batched-sync vs async at M up to 512
 """
 from __future__ import annotations
 
@@ -26,6 +27,7 @@ def main() -> None:
         fig4_kld_distance,
         fig5_acc_rounds,
         fig6_traffic,
+        engine_bench,
         hfl_collectives,
         kernels_bench,
         roofline,
@@ -40,6 +42,7 @@ def main() -> None:
         ("roofline", roofline),
         ("hfl_collectives", hfl_collectives),
         ("kernels", kernels_bench),
+        ("engine", engine_bench),
     ]
     failures = 0
     for name, mod in mods:

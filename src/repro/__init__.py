@@ -1,0 +1,25 @@
+"""repro — hierarchical federated learning reproduction on JAX/Pallas.
+
+Module map
+==========
+
+``core``        EARA assignment (LP relaxation + greedy KLD rounding +
+                local search), KLD objectives, HFL schedule/accounting,
+                compression operators (top-k / ternary, error feedback)
+``wireless``    channel model eq. 10-16, (M, N) cost matrices, topologies
+``data``        synthetic ECG/EEG datasets matching Tables 2-3, partitioners
+``federated``   FL clients, scenario builder, reference ``HFLSimulation``
+``engine``      scalable simulation backends: ``flatten`` (tree <-> (N, D)
+                flat buffers + Pallas FedAvg), ``cohort`` (vmapped batched
+                local training), ``events`` (deterministic heap),
+                ``sync_sim`` (batched reference semantics), ``async_sim``
+                (event-driven staleness-weighted aggregation) — select with
+                ``Scenario.simulate(..., engine="sync"|"async")``
+``kernels``     Pallas TPU kernels (hier_aggregate, flash attention, top-k
+                gating) with interpret-mode CPU fallback + numpy references
+``models``      the paper's 1-D CNN plus transformer/mamba/rwkv/moe families
+``training``    loss, optimizers, train steps, checkpointing
+``distributed`` mesh/collective utilities for multi-host experiments
+``serving``     batched inference engine over the model families
+``launch``      CLI entry points (train, serve, dryrun)
+"""

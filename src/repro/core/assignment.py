@@ -54,6 +54,67 @@ def round_sca(lam_frac: np.ndarray, feasible: np.ndarray) -> np.ndarray:
     return lam
 
 
+def round_greedy_kld(
+    lam_frac: np.ndarray, feasible: np.ndarray, class_counts: np.ndarray
+) -> np.ndarray:
+    """BEYOND-PAPER rounding repair used by ``eara()``.
+
+    The LP relaxation of P2 is degenerate: splitting every EU uniformly
+    across edges equalizes the edge class distributions exactly, so the
+    fractional optimum is (near-)uniform and eq. 35 argmax rounding of it is
+    essentially arbitrary — it can land *behind* the DBA baseline.  Instead,
+    place EUs greedily (largest datasets first, so the big shards anchor the
+    edge distributions) on the feasible edge that minimizes the exact P1 KLD
+    objective of the partial assignment, using the LP mass as a tie-break.
+
+    ``total_kld_uniform`` scores an EMPTY edge as zero divergence, so the
+    unpenalized greedy would collapse every EU onto one edge whenever the
+    global class distribution is near-uniform; an edge with no data is
+    maximally useless, so each still-empty edge is charged the maximum
+    divergence log(K).
+
+    Placing EU i on edge j only changes edge j's term of eq. 19, so each
+    candidate is scored incrementally from cached per-edge class counts —
+    O(K) per (EU, edge) pair, no device round-trips.
+    """
+
+    def kld_uniform(counts: np.ndarray) -> float:
+        """numpy twin of kld(edge_distributions(...), uniform) (eq. 18/28)."""
+        k = counts.shape[0]
+        h = np.maximum(counts / max(counts.sum(), 1e-12), 1e-12)
+        return float(np.sum(h * (np.log(h) + np.log(k))))
+
+    m, n = lam_frac.shape
+    cc = np.asarray(class_counts, np.float64)
+    empty_penalty = np.log(cc.shape[1])
+    edge_counts = np.zeros((n, cc.shape[1]))
+    edge_kld = np.array([kld_uniform(edge_counts[j]) for j in range(n)])
+    n_assigned = np.zeros(n, np.int64)
+    lam = np.zeros_like(lam_frac)
+    order = np.argsort(-cc.sum(axis=1), kind="stable")
+    for i in order:
+        best_j, best_val, best_kld = None, np.inf, 0.0
+        for j in range(n):
+            if not feasible[i, j]:
+                continue
+            kld_j = kld_uniform(edge_counts[j] + cc[i])
+            empties = int((n_assigned == 0).sum()) - (1 if n_assigned[j] == 0 else 0)
+            val = (
+                edge_kld.sum() - edge_kld[j] + kld_j
+                + empty_penalty * empties
+                - 1e-9 * lam_frac[i, j]
+            )
+            if val < best_val - 1e-12:
+                best_val, best_j, best_kld = val, j, kld_j
+        if best_j is None:  # no feasible edge: row stays unassigned
+            continue
+        lam[i, best_j] = 1.0
+        edge_counts[best_j] += cc[i]
+        edge_kld[best_j] = best_kld
+        n_assigned[best_j] += 1
+    return lam
+
+
 def round_dca(lam_frac: np.ndarray, feasible: np.ndarray, nu: float = 0.3) -> np.ndarray:
     """Top-1 always; top-2 additionally iff lambda^2_ij > nu (Alg. 1 l. 7-15)."""
     masked = np.where(feasible, lam_frac, -np.inf)
@@ -245,9 +306,21 @@ def eara(
             solve_lp_eg(jnp.asarray(class_counts, jnp.float32), jnp.asarray(feasible))
         )
     if mode == "sca":
-        lam = round_sca(lam_frac, feasible)
+        lam = round_greedy_kld(lam_frac, feasible, class_counts)
     elif mode == "dca":
-        lam = round_dca(lam_frac, feasible, nu=nu)
+        # greedy primary edge + the lam_frac-thresholded DCA secondary
+        lam = round_greedy_kld(lam_frac, feasible, class_counts)
+        masked = np.where(feasible, lam_frac, -np.inf)
+        if lam.shape[1] > 1:
+            for i in range(lam.shape[0]):
+                primary = np.nonzero(lam[i])[0]
+                if len(primary) != 1:
+                    continue
+                cand = masked[i].copy()
+                cand[primary[0]] = -np.inf
+                second = int(cand.argmax())
+                if np.isfinite(cand[second]) and cand[second] > nu:
+                    lam[i, second] = 1.0
     else:
         raise ValueError(f"unknown EARA mode {mode!r}")
     if refine:

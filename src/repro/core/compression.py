@@ -37,8 +37,14 @@ def topk_sparsify(tree, fraction: float, error=None) -> Tuple[object, object]:
         xe = x + e
         flat = jnp.abs(xe).ravel()
         k = max(1, int(np.ceil(flat.size * fraction)))
-        thresh = jnp.sort(flat)[-k]
-        mask = jnp.abs(xe) >= thresh
+        # exact-k selection: a >= threshold mask keeps MORE than k entries
+        # when magnitudes tie at the cutoff, silently inflating the payload
+        # past what CompressionSpec.bits accounts for.  top_k breaks ties by
+        # position, so the mask has exactly k nonzeros.
+        _, idx = jax.lax.top_k(flat, k)
+        mask = jnp.zeros(flat.shape, bool).at[idx].set(True).reshape(xe.shape)
+        if not isinstance(mask, jax.core.Tracer):
+            assert int(mask.sum()) == k, f"top-k kept {int(mask.sum())} != k={k}"
         kept = jnp.where(mask, xe, 0)
         return kept, xe - kept
 
@@ -82,7 +88,11 @@ class CompressionSpec:
         if self.kind == "none":
             return float(n * self.value_bits)
         if self.kind == "topk":
-            k = n * self.fraction
+            # mirror topk_sparsify exactly: per-leaf k = max(1, ceil(size * f))
+            k = sum(
+                max(1, int(np.ceil(int(np.prod(l.shape)) * self.fraction)))
+                for l in jax.tree.leaves(tree)
+            )
             return float(k * (self.index_bits + self.value_bits))
         if self.kind == "ternary":
             # ~half the entries nonzero; 2 bits/entry (dense ternary code)

@@ -72,18 +72,34 @@ class CommAccountant:
     eu_bits_down: Dict[int, float] = dataclasses.field(default_factory=dict)
     edge_cloud_bits: float = 0.0
 
-    def on_edge_sync(self, assignment: np.ndarray) -> None:
+    def on_edge_sync(self, assignment: np.ndarray, uplink_bits: "float | None" = None) -> None:
+        """One synchronous edge round.  ``uplink_bits`` overrides the per-EU
+        upload payload (e.g. a ``CompressionSpec.bits`` figure); the downlink
+        stays a full model broadcast."""
         self.edge_rounds += 1
+        payload = self.model_bits if uplink_bits is None else uplink_bits
         for i in range(assignment.shape[0]):
             edges = np.nonzero(assignment[i])[0]
             if len(edges) == 0:
                 continue
-            up = self.model_bits * (
+            up = payload * (
                 1.0 + (self.dca_multicast_overhead if len(edges) > 1 else 0.0)
             )
             down = self.model_bits * len(edges)
             self.eu_bits_up[i] = self.eu_bits_up.get(i, 0.0) + up
             self.eu_bits_down[i] = self.eu_bits_down.get(i, 0.0) + down
+
+    # -- fine-grained events for the asynchronous engine ---------------------
+    def on_eu_exchange(self, i: int, up_bits: float = 0.0, down_bits: float = 0.0) -> None:
+        """A single EU<->edge exchange (async uploads/dispatches are per-EU,
+        not per-round, so the matrix form of ``on_edge_sync`` doesn't apply)."""
+        if up_bits:
+            self.eu_bits_up[i] = self.eu_bits_up.get(i, 0.0) + up_bits
+        if down_bits:
+            self.eu_bits_down[i] = self.eu_bits_down.get(i, 0.0) + down_bits
+
+    def on_edge_round(self) -> None:
+        self.edge_rounds += 1
 
     def on_cloud_sync(self, n_edges: int) -> None:
         self.cloud_rounds += 1

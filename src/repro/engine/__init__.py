@@ -1,0 +1,43 @@
+"""Scalable batched/async HFL simulation engine.
+
+A second simulation backend alongside ``federated.simulation.HFLSimulation``
+(the readable reference), built for large client counts:
+
+====================  =====================================================
+module                role
+====================  =====================================================
+``flatten``           tree <-> (N, D) flat update matrices; ``flat_mean``
+                      routes FedAvg through the ``hier_aggregate`` Pallas
+                      kernel (``backend="pallas"``) or the reference
+                      contraction (``backend="reference"``)
+``cohort``            same-shape client cohorts trained by one
+                      ``vmap(_local_epoch)`` call instead of M sequential
+                      jitted calls
+``events``            deterministic (time, seq) heap for discrete events
+``sync_sim``          ``BatchedSyncEngine`` — reference semantics (bit-
+                      identical with ``backend="reference"``), batched speed
+``async_sim``         ``AsyncHFLEngine`` — event-driven uploads, quorum
+                      edge aggregation, staleness-decayed weighting
+====================  =====================================================
+
+Select via ``Scenario.simulate(..., engine="sync"|"async")``.
+"""
+from repro.engine.async_sim import AsyncHFLEngine
+from repro.engine.cohort import LocalJob, draw_batch_indices, make_job, run_cohorts
+from repro.engine.events import Event, EventQueue
+from repro.engine.flatten import BACKENDS, FlatPack, flat_mean
+from repro.engine.sync_sim import BatchedSyncEngine
+
+__all__ = [
+    "AsyncHFLEngine",
+    "BACKENDS",
+    "BatchedSyncEngine",
+    "Event",
+    "EventQueue",
+    "FlatPack",
+    "LocalJob",
+    "draw_batch_indices",
+    "flat_mean",
+    "make_job",
+    "run_cohorts",
+]

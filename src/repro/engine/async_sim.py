@@ -1,0 +1,234 @@
+"""Event-driven asynchronous HFL engine (straggler-tolerant edge rounds).
+
+The synchronous simulators advance in lock-step: every edge round waits for
+the slowest participating EU (the straggler effect of paper Sec. 4.2).  Here
+each EU uploads when *it* finishes — completion times come from the
+``channel.build_cost_matrices`` latency matrix — and an edge aggregates as
+soon as a configurable quorum of its EUs has reported:
+
+  * every upload is tagged with the edge-model version it started from;
+    stale updates are down-weighted by ``staleness_decay ** staleness``
+    (FedAsync-style, Xie et al. '19);
+  * the current edge model anchors the average with the weight of the
+    EUs that have NOT reported, so a full fresh quorum reduces exactly to
+    FedAvg and the ``quorum=1.0, staleness_decay=1.0`` corner recovers
+    synchronous semantics for single-connectivity assignments (modulo wall
+    clock).  A DCA client is dispatched independently per edge — it trains
+    once per membership from that edge's model and pays a full uplink each
+    time, unlike the sync simulators' train-once-multicast semantics;
+  * after ``edge_per_cloud`` aggregations an edge reports to the cloud; the
+    cloud round closes when every edge has reported (the hierarchy's only
+    barrier), and in-flight stragglers are dropped at that barrier.
+
+Wall clock is the simulated event time itself, so ``SimResult.wall_seconds``
+directly measures how much async buys over the synchronous max-latency model.
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Dict, List, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.core.compression import CompressionSpec
+from repro.core.hfl import CommAccountant, HFLSchedule
+from repro.data.synthetic_health import Dataset
+from repro.engine.cohort import LocalJob, make_job, run_cohorts
+from repro.engine.events import EventQueue
+from repro.engine.flatten import FlatPack, compress_flat_upload, flat_mean
+from repro.federated.client import FLClient
+from repro.federated.simulation import RoundMetrics, SimResult, evaluate
+from repro.models.cnn1d import CNNConfig, cnn_init
+from repro.utils.tree import tree_size_bytes
+
+
+@dataclasses.dataclass
+class _EdgeState:
+    row: "object"  # current edge model as a flat (D,) vector
+    members: List[int]  # participating client indices this cloud round
+    version: int = 0
+    rounds_done: int = 0
+    done_time: float = 0.0
+    # buffered uploads: (client_idx, row, data_size, birth_version)
+    buffer: List[Tuple[int, object, float, int]] = dataclasses.field(default_factory=list)
+
+
+class AsyncHFLEngine:
+    """Heap-scheduled async counterpart of :class:`BatchedSyncEngine`."""
+
+    def __init__(
+        self,
+        clients: List[FLClient],
+        assignment: np.ndarray,
+        cfg: CNNConfig,
+        test: Dataset,
+        latency: np.ndarray,  # (M, N) per-EU upload latency incl. compute, s
+        schedule: HFLSchedule = HFLSchedule(1, 1),
+        seed: int = 0,
+        upp: float = 1.0,
+        staleness_decay: float = 0.5,
+        quorum: float = 0.75,
+        backhaul_s: float = 0.05,
+        backend: str = "pallas",
+        compression: Optional[CompressionSpec] = None,
+    ):
+        if not (0.0 < quorum <= 1.0):
+            raise ValueError(f"quorum must be in (0, 1], got {quorum}")
+        self.clients = clients
+        self.assignment = np.asarray(assignment)
+        self.cfg = cfg
+        self.test = test
+        self.latency = np.asarray(latency)
+        self.schedule = schedule
+        self.rng = np.random.default_rng(seed)
+        self.upp = upp
+        self.staleness_decay = staleness_decay
+        self.quorum = quorum
+        self.backhaul_s = backhaul_s
+        self.backend = backend
+        self.compression = compression
+        self.params = cnn_init(jax.random.PRNGKey(seed), cfg)
+        self.pack = FlatPack(self.params)
+        self.accountant = CommAccountant(model_bits=tree_size_bytes(self.params) * 8)
+        self._uplink_bits = self.accountant.model_bits
+        if compression is not None and compression.kind != "none":
+            # bits() on the flat (D,) layout the engine actually compresses
+            # (one global top-k), not the per-leaf tree the reference uses
+            self._uplink_bits = compression.bits(jnp.zeros((self.pack.dim,), jnp.float32))
+        self._errors: Dict[Tuple[int, int], object] = {}
+        self.queue = EventQueue()
+        self._losses: List[float] = []
+
+    # -- helpers --------------------------------------------------------------
+    def _mean(self, rows: List, weights: List[float]):
+        return flat_mean(
+            jnp.stack(rows), np.asarray(weights, np.float32), backend=self.backend
+        )
+
+
+    def _dispatch(self, pairs: List[Tuple[int, int]], edges: Dict[int, _EdgeState]):
+        """Train (client, edge) pairs as one cohort batch, schedule uploads.
+
+        Pairs are processed in (client, edge) order so the numpy RNG stream
+        is consumed client-by-client like the synchronous simulators; in the
+        ``quorum=1.0`` corner this makes async reduce to reference FedAvg.
+        """
+        pairs = sorted(pairs)
+        jobs: List[LocalJob] = []
+        for i, j in pairs:
+            jobs.append(
+                make_job(
+                    self.clients[i], edges[j].row, self.rng,
+                    self.schedule.local_steps, tag=(i, j),
+                )
+            )
+        trained = run_cohorts(jobs, self.cfg, self.pack)
+        for (i, j), job in zip(pairs, jobs):
+            upd = trained.row((i, j))
+            self._losses.append(trained.loss[(i, j)])
+            upd = compress_flat_upload(
+                self.compression, self._errors, (i, j), job.start_flat, upd
+            )
+            self.accountant.on_eu_exchange(i, down_bits=self.accountant.model_bits)
+            self.queue.push(
+                self.queue.now + float(self.latency[i, j]),
+                "upload",
+                client=i,
+                edge=j,
+                row=upd,
+                birth=edges[j].version,
+            )
+
+    def _quorum_count(self, edge: _EdgeState) -> int:
+        return max(1, int(np.ceil(self.quorum * len(edge.members))))
+
+    def _edge_aggregate(self, j: int, edge: _EdgeState) -> List[Tuple[int, int]]:
+        """Staleness-weighted aggregation; returns (client, edge) redispatches."""
+        rows, weights, reporters = [], [], []
+        for i, row, size, birth in sorted(edge.buffer, key=lambda b: b[0]):
+            staleness = edge.version - birth
+            rows.append(row)
+            weights.append(max(size, 1.0) * self.staleness_decay ** staleness)
+            reporters.append(i)
+        # the current edge model stands in for the EUs that have not reported
+        missing = [i for i in edge.members if i not in set(reporters)]
+        anchor_w = float(sum(max(self.clients[i].data_size, 1.0) for i in missing))
+        if anchor_w > 0:
+            rows = [edge.row] + rows
+            weights = [anchor_w] + weights
+        edge.row = self._mean(rows, weights)
+        edge.version += 1
+        edge.rounds_done += 1
+        edge.buffer = []
+        self.accountant.on_edge_round()
+        if edge.rounds_done >= self.schedule.edge_per_cloud:
+            edge.done_time = self.queue.now
+            return []
+        return [(i, j) for i in reporters]
+
+    # -- main loop ------------------------------------------------------------
+    def run(self, cloud_rounds: int, eval_every: int = 1) -> SimResult:
+        m, n = self.assignment.shape
+        history: List[RoundMetrics] = []
+        global_row = self.pack.ravel(self.params)
+        edge_sizes = [
+            sum(c.data_size for i, c in enumerate(self.clients) if self.assignment[i, j])
+            for j in range(n)
+        ]
+        for b in range(1, cloud_rounds + 1):
+            self._losses = []
+            participating = self.rng.random(m) < self.upp
+            if not participating.any():
+                participating[self.rng.integers(0, m)] = True
+            edges: Dict[int, _EdgeState] = {}
+            pairs: List[Tuple[int, int]] = []
+            for j in range(n):
+                members = [
+                    i for i in range(m) if self.assignment[i, j] and participating[i]
+                ]
+                st = _EdgeState(row=global_row, members=members)
+                if not members:  # nothing to wait for: report immediately
+                    st.rounds_done = self.schedule.edge_per_cloud
+                    st.done_time = self.queue.now
+                edges[j] = st
+                pairs += [(i, j) for i in members]
+            self._dispatch(pairs, edges)
+            while any(e.rounds_done < self.schedule.edge_per_cloud for e in edges.values()):
+                if not self.queue:
+                    raise RuntimeError("async engine deadlock: no pending events")
+                ev = self.queue.pop()
+                j = ev.payload["edge"]
+                edge = edges[j]
+                if edge.rounds_done >= self.schedule.edge_per_cloud:
+                    continue  # late straggler: edge already reported to cloud
+                self.accountant.on_eu_exchange(ev.payload["client"], up_bits=self._uplink_bits)
+                edge.buffer.append(
+                    (
+                        ev.payload["client"],
+                        ev.payload["row"],
+                        float(self.clients[ev.payload["client"]].data_size),
+                        ev.payload["birth"],
+                    )
+                )
+                if len(edge.buffer) >= self._quorum_count(edge):
+                    self._dispatch(self._edge_aggregate(j, edge), edges)
+            # cloud barrier: all edges reported; drop in-flight stragglers
+            self.queue.clear()
+            self.queue.now = max(e.done_time for e in edges.values()) + self.backhaul_s
+            global_row = self._mean(
+                [edges[j].row for j in range(n)], [max(s, 1) for s in edge_sizes]
+            )
+            self.accountant.on_cloud_sync(n)
+            if b % eval_every == 0 or b == cloud_rounds:
+                acc = evaluate(self.pack.unravel(global_row), self.cfg, self.test)
+                history.append(
+                    RoundMetrics(
+                        b, acc, 0.0, float(np.mean(self._losses)) if self._losses else 0.0
+                    )
+                )
+        self.params = self.pack.unravel(global_row)
+        return SimResult(
+            history, self.accountant, self.params, wall_seconds=self.queue.now
+        )

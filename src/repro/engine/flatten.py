@@ -1,0 +1,113 @@
+"""Flat-buffer views of client model pytrees.
+
+The batched engine moves aggregation off the per-leaf ``jax.tree.map`` path
+and onto a single ``(N, D)`` update matrix so the FedAvg reduction can run
+through the ``hier_aggregate`` Pallas kernel in one HBM pass.  ``FlatPack``
+caches the layout spec of the model once and converts trees <-> rows;
+``flat_mean`` is the weighted-average primitive with two backends:
+
+  * ``"pallas"``    — ``kernels.hier_aggregate`` (tiled VMEM reduction;
+                      interpret mode off-TPU)
+  * ``"reference"`` — the same contraction ``tree_weighted_mean`` performs,
+                      expressed on the flat matrix
+
+A consistency test (``tests/test_engine.py``) pins the two together.
+"""
+from __future__ import annotations
+
+from typing import Optional, Sequence
+
+import jax
+import jax.numpy as jnp
+
+from repro.kernels.hier_aggregate import hier_aggregate
+from repro.kernels.ops import hier_aggregate as hier_aggregate_jit
+from repro.utils.tree import TreeSpec, tree_ravel, tree_spec, tree_unravel
+
+BACKENDS = ("pallas", "reference")
+
+
+class FlatPack:
+    """Tree <-> flat-row converter bound to one model layout."""
+
+    def __init__(self, template_tree):
+        self.spec: TreeSpec = tree_spec(template_tree)
+
+    @property
+    def dim(self) -> int:
+        return self.spec.total_size
+
+    def ravel(self, tree) -> jnp.ndarray:
+        flat, spec = tree_ravel(tree)
+        if spec.shapes != self.spec.shapes:
+            raise ValueError("tree layout does not match FlatPack template")
+        return flat
+
+    def unravel(self, flat: jnp.ndarray):
+        return tree_unravel(self.spec, flat)
+
+    def stack(self, trees: Sequence) -> jnp.ndarray:
+        """Ravel N trees into the (N, D) update matrix."""
+        return jnp.stack([self.ravel(t) for t in trees], axis=0)
+
+    def ravel_batched(self, stacked_tree) -> jnp.ndarray:
+        """Tree with a leading cohort axis C on every leaf -> (C, D) matrix.
+
+        One reshape+concat per LEAF (not per client) — the cheap direction
+        for engine hot loops.
+        """
+        leaves = jax.tree.leaves(stacked_tree)
+        return jnp.concatenate([l.reshape(l.shape[0], -1) for l in leaves], axis=1)
+
+    def unravel_batched(self, mat: jnp.ndarray):
+        """(C, D) matrix -> tree with a leading cohort axis C on every leaf."""
+        c = mat.shape[0]
+        leaves = []
+        off = 0
+        for shape, dtype, size in zip(self.spec.shapes, self.spec.dtypes, self.spec.sizes):
+            leaves.append(
+                jax.lax.slice_in_dim(mat, off, off + size, axis=1)
+                .reshape((c,) + shape)
+                .astype(dtype)
+            )
+            off += size
+        return jax.tree.unflatten(self.spec.treedef, leaves)
+
+
+def compress_flat_upload(spec, errors: dict, key, start_row, trained_row):
+    """Apply a ``CompressionSpec`` to a flat model delta with error feedback.
+
+    Shared by both engines.  The spec is applied to the whole (D,) delta in
+    one shot — a single global top-k over all parameters — unlike the
+    reference simulator's per-leaf application.  ``errors[key]`` holds the
+    client's error-feedback state and is updated in place.
+    """
+    if spec is None or spec.kind == "none":
+        return trained_row
+    delta = trained_row - start_row
+    sparse, err = spec.apply(delta, errors.get(key))
+    errors[key] = err
+    return start_row + sparse
+
+
+def flat_mean(
+    updates: jnp.ndarray,
+    weights,
+    *,
+    backend: str = "pallas",
+    block: int = 4096,
+    interpret: Optional[bool] = None,
+) -> jnp.ndarray:
+    """Weighted average over the leading axis of an (N, D) update matrix."""
+    if backend == "pallas":
+        if interpret is not None:  # explicit mode: bypass the jit cache
+            return hier_aggregate(updates, jnp.asarray(weights), block=block, interpret=interpret)
+        # the jitted wrapper caches the (interpret-emulated off-TPU) kernel
+        # per (N, D) shape — the hot path for repeated engine rounds
+        return hier_aggregate_jit(updates, jnp.asarray(weights), block=block)
+    if backend == "reference":
+        w = jnp.asarray(weights, dtype=jnp.float32)
+        w = w / jnp.sum(w)
+        out = jnp.tensordot(w, updates.astype(jnp.float32), axes=1)
+        return out.astype(updates.dtype)
+    raise ValueError(f"backend must be one of {BACKENDS}, got {backend!r}")

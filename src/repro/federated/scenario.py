@@ -75,22 +75,78 @@ class Scenario:
         track_divergence: bool = False,
         eval_every: int = 1,
         wall_clock: bool = False,
+        engine: str = "reference",
+        backend: str = "pallas",
+        compression=None,
+        staleness_decay: float = 0.5,
+        quorum: float = 0.75,
     ) -> SimResult:
-        sim = HFLSimulation(
-            self.clients,
-            assignment,
-            self.cfg,
-            self.test,
-            schedule=schedule,
-            seed=seed,
-            upp=upp,
-            track_divergence=track_divergence,
-            cost_latency=self.cost.latency if wall_clock else None,
-        )
-        res = sim.run(cloud_rounds, eval_every=eval_every)
-        if wall_clock:
-            res.wall_seconds = sim.clock.seconds
-        return res
+        """Run the scenario through one of the simulation engines.
+
+        engine:  "reference" — the sequential readable simulator;
+                 "sync"      — batched cohorts + flat-buffer aggregation,
+                               same semantics as the reference;
+                 "async"     — event-driven staleness-weighted engine.
+        backend: aggregation path for the engines ("pallas" | "reference").
+        """
+        if engine == "reference":
+            sim = HFLSimulation(
+                self.clients,
+                assignment,
+                self.cfg,
+                self.test,
+                schedule=schedule,
+                seed=seed,
+                upp=upp,
+                track_divergence=track_divergence,
+                cost_latency=self.cost.latency if wall_clock else None,
+                compression=compression,
+            )
+            res = sim.run(cloud_rounds, eval_every=eval_every)
+            if wall_clock:
+                res.wall_seconds = sim.clock.seconds
+            return res
+        if engine == "sync":
+            from repro.engine import BatchedSyncEngine
+
+            sim = BatchedSyncEngine(
+                self.clients,
+                assignment,
+                self.cfg,
+                self.test,
+                schedule=schedule,
+                seed=seed,
+                upp=upp,
+                track_divergence=track_divergence,
+                cost_latency=self.cost.latency if wall_clock else None,
+                backend=backend,
+                compression=compression,
+            )
+            return sim.run(cloud_rounds, eval_every=eval_every)
+        if engine == "async":
+            from repro.engine import AsyncHFLEngine
+
+            if track_divergence:
+                raise ValueError(
+                    "engine='async' does not support track_divergence; "
+                    "use engine='reference' or 'sync'"
+                )
+            sim = AsyncHFLEngine(
+                self.clients,
+                assignment,
+                self.cfg,
+                self.test,
+                latency=self.cost.latency,
+                schedule=schedule,
+                seed=seed,
+                upp=upp,
+                staleness_decay=staleness_decay,
+                quorum=quorum,
+                backend=backend,
+                compression=compression,
+            )
+            return sim.run(cloud_rounds, eval_every=eval_every)
+        raise ValueError(f"unknown engine {engine!r} (reference | sync | async)")
 
     def centralized(self, rounds: int, seed: int = 0, eval_every: int = 1):
         batch = 10 * self.n_edges  # paper: local batch x n_edges (50 / 30)

@@ -14,12 +14,13 @@ import jax
 import jax.numpy as jnp
 import numpy as np
 
+from repro.core.compression import CompressionSpec
 from repro.core.hfl import CommAccountant, HFLSchedule, WallClock, cloud_aggregate, edge_aggregate, weight_divergence
 from repro.data.synthetic_health import Dataset
 from repro.federated.client import FLClient, _local_epoch
 from repro.models.cnn1d import CNNConfig, cnn_apply, cnn_init
 from repro.training.loss import accuracy
-from repro.utils.tree import tree_size_bytes
+from repro.utils.tree import tree_add, tree_size_bytes, tree_sub
 
 
 @dataclasses.dataclass
@@ -47,6 +48,21 @@ class SimResult:
         return self.history[-1].test_acc if self.history else 0.0
 
 
+def central_reference_step(params, data: Dataset, rng, batch: int, cfg: CNNConfig):
+    """One mini-epoch of the virtual centralized model (divergence ref, eq. 17).
+
+    Shared by the reference simulator and the batched engine so the two
+    divergence baselines cannot drift apart.
+    """
+    n = len(data)
+    steps = max(1, min(128, n // batch))
+    idx = rng.permutation(n)[: steps * batch].reshape(steps, batch)
+    xb = jnp.asarray(data.x[idx])
+    yb = jnp.asarray(data.y[idx])
+    params, _ = _local_epoch(params, xb, yb, cfg, steps, 1e-3)
+    return params
+
+
 def evaluate(params, cfg: CNNConfig, test: Dataset, batch: int = 512) -> float:
     accs, ns = [], []
     for i in range(0, len(test), batch):
@@ -72,6 +88,7 @@ class HFLSimulation:
         track_divergence: bool = False,
         central_batch: int = 50,
         cost_latency=None,
+        compression: Optional[CompressionSpec] = None,
     ):
         self.clients = clients
         self.assignment = assignment
@@ -93,6 +110,22 @@ class HFLSimulation:
         model_bits = tree_size_bytes(self.params) * 8
         self.accountant = CommAccountant(model_bits=model_bits)
         self.clock = WallClock(cost_latency) if cost_latency is not None else None
+        # optional EU->edge uplink compression (composes with EARA: EARA cuts
+        # rounds, compression cuts bits per round — paper Fig. 6 discussion)
+        self.compression = compression
+        self._uplink_bits = None
+        self._comp_errors: Dict[int, object] = {}
+        if compression is not None and compression.kind != "none":
+            self._uplink_bits = compression.bits(self.params)
+
+    def _compress_upload(self, cid: int, start, trained):
+        """Apply the spec to the EU's model delta with per-EU error feedback."""
+        if self.compression is None or self.compression.kind == "none":
+            return trained
+        delta = tree_sub(trained, start)
+        sparse, err = self.compression.apply(delta, self._comp_errors.get(cid))
+        self._comp_errors[cid] = err
+        return tree_add(start, sparse)
 
     # -- one edge round: every client trains locally, edges aggregate --------
     def _edge_round(self, edge_params: List[dict]) -> List[float]:
@@ -114,28 +147,23 @@ class HFLSimulation:
             )
             upd, loss = cl.local_update(start, self.rng, epochs=self.schedule.local_steps)
             losses.append(loss)
+            upd = self._compress_upload(cl.cid, start, upd)
             for j in edges:
                 new_models[j].append(upd)
                 new_sizes[j].append(cl.data_size)
         for j in range(n):
             if new_models[j]:
                 edge_params[j] = edge_aggregate(new_models[j], new_sizes[j])
-        self.accountant.on_edge_sync(self.assignment * participating[:, None])
+        self.accountant.on_edge_sync(
+            self.assignment * participating[:, None], uplink_bits=self._uplink_bits
+        )
         if self.clock is not None:
             self.clock.on_edge_sync(self.assignment, participating)
         return losses
 
     def _central_step(self):
-        """One mini-epoch of the virtual centralized model (divergence ref)."""
-        n = len(self.central_data)
-        steps = max(1, min(128, n // self.central_batch))
-        idx = self.rng.permutation(n)[: steps * self.central_batch].reshape(
-            steps, self.central_batch
-        )
-        xb = jnp.asarray(self.central_data.x[idx])
-        yb = jnp.asarray(self.central_data.y[idx])
-        self.central_params, _ = _local_epoch(
-            self.central_params, xb, yb, self.cfg, steps, 1e-3
+        self.central_params = central_reference_step(
+            self.central_params, self.central_data, self.rng, self.central_batch, self.cfg
         )
 
     def run(self, cloud_rounds: int, eval_every: int = 1) -> SimResult:

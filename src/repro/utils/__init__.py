@@ -1,7 +1,11 @@
 from repro.utils.tree import (
+    TreeSpec,
     tree_add,
     tree_scale,
+    tree_spec,
     tree_sub,
+    tree_ravel,
+    tree_unravel,
     tree_weighted_mean,
     tree_zeros_like,
     tree_l2_norm,
@@ -12,9 +16,13 @@ from repro.utils.registry import Registry
 
 __all__ = [
     "Registry",
+    "TreeSpec",
     "tree_add",
     "tree_scale",
+    "tree_spec",
     "tree_sub",
+    "tree_ravel",
+    "tree_unravel",
     "tree_weighted_mean",
     "tree_zeros_like",
     "tree_l2_norm",

@@ -5,7 +5,8 @@ jnp arrays (model parameters, optimizer states, gradients).
 """
 from __future__ import annotations
 
-from typing import Sequence
+import dataclasses
+from typing import Sequence, Tuple
 
 import jax
 import jax.numpy as jnp
@@ -63,3 +64,55 @@ def tree_size_bytes(a) -> int:
 
 def tree_num_params(a) -> int:
     return int(sum(int(np.prod(l.shape)) for l in jax.tree.leaves(a)))
+
+
+@dataclasses.dataclass(frozen=True)
+class TreeSpec:
+    """Static shape/dtype layout of a pytree, for ravel/unravel round-trips."""
+
+    treedef: object
+    shapes: Tuple[Tuple[int, ...], ...]
+    dtypes: Tuple[object, ...]
+
+    @property
+    def sizes(self) -> Tuple[int, ...]:
+        return tuple(int(np.prod(s)) for s in self.shapes)
+
+    @property
+    def total_size(self) -> int:
+        return sum(self.sizes)
+
+
+def tree_spec(tree) -> TreeSpec:
+    leaves, treedef = jax.tree.flatten(tree)
+    return TreeSpec(
+        treedef,
+        tuple(tuple(l.shape) for l in leaves),
+        tuple(l.dtype for l in leaves),
+    )
+
+
+def tree_ravel(tree) -> Tuple[jnp.ndarray, TreeSpec]:
+    """Flatten a pytree into a single (D,) vector + the spec to invert it.
+
+    The flat layout is the concatenation of every leaf raveled in treedef
+    order — the row format of the ``(N, D)`` update matrices consumed by the
+    ``hier_aggregate`` Pallas kernel.
+    """
+    spec = tree_spec(tree)
+    leaves = jax.tree.leaves(tree)
+    if not leaves:
+        return jnp.zeros((0,), jnp.float32), spec
+    return jnp.concatenate([jnp.ravel(l) for l in leaves]), spec
+
+
+def tree_unravel(spec: TreeSpec, flat: jnp.ndarray):
+    """Inverse of :func:`tree_ravel`: rebuild the pytree from a (D,) vector."""
+    if flat.shape != (spec.total_size,):
+        raise ValueError(f"flat vector has shape {flat.shape}, spec wants ({spec.total_size},)")
+    leaves = []
+    off = 0
+    for shape, dtype, size in zip(spec.shapes, spec.dtypes, spec.sizes):
+        leaves.append(jax.lax.slice(flat, (off,), (off + size,)).reshape(shape).astype(dtype))
+        off += size
+    return jax.tree.unflatten(spec.treedef, leaves)

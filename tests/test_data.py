@@ -1,7 +1,9 @@
 """Synthetic datasets + partitioners."""
 import numpy as np
 import pytest
-from hypothesis import given, settings, strategies as st
+
+hypothesis = pytest.importorskip("hypothesis")
+from hypothesis import given, settings, strategies as st  # noqa: E402
 
 from repro.data import (
     TABLE2_SEIZURE,
