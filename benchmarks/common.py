@@ -1,23 +1,47 @@
-"""Shared benchmark utilities: timing + CSV emission."""
+"""Shared benchmark utilities: timing, CSV emission, JSON result files.
+
+Every ``emit`` prints one ``name,us_per_call,derived`` CSV row and records
+it; benchmark modules bracket their rows with ``mark()`` / ``dump_json()``
+to land a machine-readable ``BENCH_<module>.json`` in the repo root, so
+the perf trajectory is tracked (and diffable) across PRs.
+"""
 from __future__ import annotations
 
+import json
 import os
 import time
-from typing import Callable, List
+from pathlib import Path
+from typing import Callable, Dict, List
 
 QUICK = os.environ.get("BENCH_FULL", "") == ""
 
-_rows: List[str] = []
+# JSON results default to the repo root (committed alongside the code);
+# BENCH_OUT redirects them (e.g. to a scratch dir in CI artifacts).
+OUT_DIR = Path(os.environ.get("BENCH_OUT", Path(__file__).resolve().parent.parent))
+
+_rows: List[Dict[str, object]] = []
 
 
 def emit(name: str, us_per_call: float, derived: str = "") -> None:
-    row = f"{name},{us_per_call:.1f},{derived}"
-    _rows.append(row)
-    print(row, flush=True)
+    _rows.append({"name": name, "us_per_call": round(us_per_call, 1), "derived": derived})
+    print(f"{name},{us_per_call:.1f},{derived}", flush=True)
 
 
 def rows() -> List[str]:
-    return list(_rows)
+    return [f"{r['name']},{r['us_per_call']:.1f},{r['derived']}" for r in _rows]
+
+
+def mark() -> int:
+    """Index into the row log; pass to ``dump_json`` to scope one module."""
+    return len(_rows)
+
+
+def dump_json(filename: str, start: int = 0) -> Path:
+    """Write rows emitted since ``start`` to ``OUT_DIR/filename``."""
+    path = OUT_DIR / filename
+    payload = {"quick": QUICK, "results": _rows[start:]}
+    path.write_text(json.dumps(payload, indent=2) + "\n")
+    return path
 
 
 def timeit(fn: Callable, *args, repeats: int = 3, **kw) -> float:

@@ -1,14 +1,25 @@
 """Kernel micro-benchmarks (interpret-mode on CPU: correctness-scale timings;
-the CSV exists so the harness is ready to run on real TPU)."""
+the CSV/JSON exists so the harness is ready to run on real TPU).
+
+Results land in ``BENCH_kernels.json`` for cross-PR tracking.
+"""
 from __future__ import annotations
 
 import jax
+import jax.numpy as jnp
 
-from benchmarks.common import QUICK, emit, timeit
-from repro.kernels.ops import flash_attention, hier_aggregate, topk_gating
+from benchmarks.common import QUICK, dump_json, emit, mark, timeit
+from repro.kernels.ops import (
+    flash_attention,
+    hier_aggregate,
+    hier_segment_aggregate,
+    topk_gating,
+)
+from repro.kernels.ref import hier_segment_aggregate_ref
 
 
 def main() -> None:
+    start = mark()
     k1, k2, k3 = jax.random.split(jax.random.PRNGKey(0), 3)
     s = 256 if QUICK else 1024
     q = jax.random.normal(k1, (1, s, 4, 64))
@@ -22,10 +33,25 @@ def main() -> None:
     us = timeit(hier_aggregate, u, w, repeats=3)
     emit("kernel_hier_aggregate", us, "13 clients x 14789 params (paper model)")
 
+    # segmented aggregation: every edge's FedAvg in one pass (ISSUE 2)
+    n, e = (512, 8) if QUICK else (2048, 16)
+    u = jax.random.normal(k1, (n, 14789))
+    w = jax.random.uniform(k2, (n,), minval=0.1)
+    seg = jax.random.randint(k3, (n,), 0, e)
+    us = timeit(hier_segment_aggregate, u, seg, w, e, repeats=3)
+    emit("kernel_hier_segment_aggregate", us,
+         f"{n} clients x {e} edges x 14789 params, one-hot kernel")
+    seg_ref = jax.jit(hier_segment_aggregate_ref, static_argnames=("n_segments",))
+    us = timeit(seg_ref, u, seg, w, n_segments=e, repeats=3)
+    emit("kernel_hier_segment_aggregate_ref", us,
+         f"{n} clients x {e} edges, segment_sum scatter-add")
+
     lg = jax.random.normal(k1, (2048, 16))
     us = timeit(topk_gating, lg, 4, repeats=3)
     emit("kernel_topk_gating", us, "2048 tokens x 16 experts top-4")
+    dump_json("BENCH_kernels.json", start)
 
 
 if __name__ == "__main__":
+    print("name,us_per_call,derived")
     main()

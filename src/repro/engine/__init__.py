@@ -7,17 +7,26 @@ A second simulation backend alongside ``federated.simulation.HFLSimulation``
 module                role
 ====================  =====================================================
 ``flatten``           tree <-> (N, D) flat update matrices; ``flat_mean``
-                      routes FedAvg through the ``hier_aggregate`` Pallas
-                      kernel (``backend="pallas"``) or the reference
-                      contraction (``backend="reference"``)
+                      (one weighted average) and ``flat_segment_mean``
+                      (every edge at once, (N, D) -> (E, D)) route FedAvg
+                      through the Pallas kernels (``backend="pallas"``) or
+                      plain-XLA contractions (``backend="reference"``)
+``store``             ``DeviceShardStore`` — all client shards padded into
+                      one (M, n_max, L, Ch) device array; cohort batches
+                      gathered on device from int32 sample indices
 ``cohort``            same-shape client cohorts trained by one
                       ``vmap(_local_epoch)`` call instead of M sequential
                       jitted calls
 ``events``            deterministic (time, seq) heap for discrete events
-``sync_sim``          ``BatchedSyncEngine`` — reference semantics (bit-
-                      identical with ``backend="reference"``), batched speed
+``sync_sim``          ``BatchedSyncEngine`` — reference semantics, batched
+                      speed; ``pipeline="device"`` (default) runs a cloud
+                      round as a handful of fixed-shape device programs
+                      (edge state as one (E, D) matrix, segment-kernel
+                      aggregation), ``pipeline="host"`` keeps the PR 1
+                      host-major loop as the comparison baseline
 ``async_sim``         ``AsyncHFLEngine`` — event-driven uploads, quorum
-                      edge aggregation, staleness-decayed weighting
+                      edge aggregation, staleness-decayed weighting; edge
+                      models also live in one (E, D) matrix
 ====================  =====================================================
 
 Select via ``Scenario.simulate(..., engine="sync"|"async")``.
@@ -25,19 +34,23 @@ Select via ``Scenario.simulate(..., engine="sync"|"async")``.
 from repro.engine.async_sim import AsyncHFLEngine
 from repro.engine.cohort import LocalJob, draw_batch_indices, make_job, run_cohorts
 from repro.engine.events import Event, EventQueue
-from repro.engine.flatten import BACKENDS, FlatPack, flat_mean
-from repro.engine.sync_sim import BatchedSyncEngine
+from repro.engine.flatten import BACKENDS, FlatPack, flat_mean, flat_segment_mean
+from repro.engine.store import DeviceShardStore
+from repro.engine.sync_sim import PIPELINES, BatchedSyncEngine
 
 __all__ = [
     "AsyncHFLEngine",
     "BACKENDS",
     "BatchedSyncEngine",
+    "DeviceShardStore",
     "Event",
     "EventQueue",
     "FlatPack",
     "LocalJob",
+    "PIPELINES",
     "draw_batch_indices",
     "flat_mean",
+    "flat_segment_mean",
     "make_job",
     "run_cohorts",
 ]

@@ -22,6 +22,13 @@ soon as a configurable quorum of its EUs has reported:
 
 Wall clock is the simulated event time itself, so ``SimResult.wall_seconds``
 directly measures how much async buys over the synchronous max-latency model.
+
+Device residency (ISSUE 2): edge models live in one (E, D) matrix (quorum
+flushes write a row, the cloud barrier reduces the matrix in place with a
+static shape), cohort batches are gathered from a ``DeviceShardStore``
+instead of host-stacked numpy shards, and the tiny varying-N quorum
+averages route through ``flat_mean``'s jitted contraction instead of
+compiling a fresh pallas kernel per buffer size.
 """
 from __future__ import annotations
 
@@ -37,7 +44,8 @@ from repro.core.hfl import CommAccountant, HFLSchedule
 from repro.data.synthetic_health import Dataset
 from repro.engine.cohort import LocalJob, make_job, run_cohorts
 from repro.engine.events import EventQueue
-from repro.engine.flatten import FlatPack, compress_flat_upload, flat_mean
+from repro.engine.flatten import BACKENDS, FlatPack, compress_flat_upload, flat_mean
+from repro.engine.store import DeviceShardStore
 from repro.federated.client import FLClient
 from repro.federated.simulation import RoundMetrics, SimResult, evaluate
 from repro.models.cnn1d import CNNConfig, cnn_init
@@ -46,7 +54,10 @@ from repro.utils.tree import tree_size_bytes
 
 @dataclasses.dataclass
 class _EdgeState:
-    row: "object"  # current edge model as a flat (D,) vector
+    """Bookkeeping for one edge; the model itself lives as row ``j`` of the
+    engine's (E, D) ``_edge_mat`` so the cloud mean and dispatch reads are
+    fixed-shape device ops."""
+
     members: List[int]  # participating client indices this cloud round
     version: int = 0
     rounds_done: int = 0
@@ -76,6 +87,8 @@ class AsyncHFLEngine:
     ):
         if not (0.0 < quorum <= 1.0):
             raise ValueError(f"quorum must be in (0, 1], got {quorum}")
+        if backend not in BACKENDS:
+            raise ValueError(f"backend must be one of {BACKENDS}, got {backend!r}")
         self.clients = clients
         self.assignment = np.asarray(assignment)
         self.cfg = cfg
@@ -100,6 +113,12 @@ class AsyncHFLEngine:
         self._errors: Dict[Tuple[int, int], object] = {}
         self.queue = EventQueue()
         self._losses: List[float] = []
+        # edge models as one (E, D) device matrix (see _EdgeState)
+        self._edge_mat: Optional[jnp.ndarray] = None
+        # None when shard sizes are skewed enough that padding would cost
+        # more memory than the device gather saves; run_cohorts then falls
+        # back to host batch stacking
+        self.store = DeviceShardStore.build_if_economical(clients)
 
     # -- helpers --------------------------------------------------------------
     def _mean(self, rows: List, weights: List[float]):
@@ -117,14 +136,17 @@ class AsyncHFLEngine:
         """
         pairs = sorted(pairs)
         jobs: List[LocalJob] = []
+        row_cache: Dict[int, jnp.ndarray] = {}  # one edge-matrix read per edge
         for i, j in pairs:
+            if j not in row_cache:
+                row_cache[j] = self._edge_mat[j]
             jobs.append(
                 make_job(
-                    self.clients[i], edges[j].row, self.rng,
+                    self.clients[i], row_cache[j], self.rng,
                     self.schedule.local_steps, tag=(i, j),
                 )
             )
-        trained = run_cohorts(jobs, self.cfg, self.pack)
+        trained = run_cohorts(jobs, self.cfg, self.pack, store=self.store)
         for (i, j), job in zip(pairs, jobs):
             upd = trained.row((i, j))
             self._losses.append(trained.loss[(i, j)])
@@ -156,9 +178,12 @@ class AsyncHFLEngine:
         missing = [i for i in edge.members if i not in set(reporters)]
         anchor_w = float(sum(max(self.clients[i].data_size, 1.0) for i in missing))
         if anchor_w > 0:
-            rows = [edge.row] + rows
+            rows = [self._edge_mat[j]] + rows
             weights = [anchor_w] + weights
-        edge.row = self._mean(rows, weights)
+        # quorum flushes average 1-3 rows; flat_mean routes these tiny-N
+        # calls to a jitted contraction, so varying buffer sizes do not
+        # compile a fresh pallas kernel per shape
+        self._edge_mat = self._edge_mat.at[j].set(self._mean(rows, weights))
         edge.version += 1
         edge.rounds_done += 1
         edge.buffer = []
@@ -182,13 +207,15 @@ class AsyncHFLEngine:
             participating = self.rng.random(m) < self.upp
             if not participating.any():
                 participating[self.rng.integers(0, m)] = True
+            # every edge starts the cloud round from the global model
+            self._edge_mat = jnp.broadcast_to(global_row, (n, global_row.shape[0]))
             edges: Dict[int, _EdgeState] = {}
             pairs: List[Tuple[int, int]] = []
             for j in range(n):
                 members = [
                     i for i in range(m) if self.assignment[i, j] and participating[i]
                 ]
-                st = _EdgeState(row=global_row, members=members)
+                st = _EdgeState(members=members)
                 if not members:  # nothing to wait for: report immediately
                     st.rounds_done = self.schedule.edge_per_cloud
                     st.done_time = self.queue.now
@@ -217,8 +244,11 @@ class AsyncHFLEngine:
             # cloud barrier: all edges reported; drop in-flight stragglers
             self.queue.clear()
             self.queue.now = max(e.done_time for e in edges.values()) + self.backhaul_s
-            global_row = self._mean(
-                [edges[j].row for j in range(n)], [max(s, 1) for s in edge_sizes]
+            # cloud FedAvg straight off the (E, D) matrix: static shape
+            global_row = flat_mean(
+                self._edge_mat,
+                np.asarray([max(s, 1) for s in edge_sizes], np.float32),
+                backend=self.backend,
             )
             self.accountant.on_cloud_sync(n)
             if b % eval_every == 0 or b == cloud_rounds:

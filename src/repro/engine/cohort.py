@@ -21,6 +21,7 @@ import jax
 import jax.numpy as jnp
 import numpy as np
 
+from repro.engine.flatten import ravel_batched, unravel_batched
 from repro.federated.client import FLClient, _bucket
 from repro.models.cnn1d import CNNConfig, cnn_apply
 from repro.training.loss import softmax_xent
@@ -79,8 +80,7 @@ def make_job(
     )
 
 
-@partial(jax.jit, static_argnames=("cfg", "n_steps", "lr"))
-def _cohort_epoch(params, xb, yb, cfg: CNNConfig, n_steps: int, lr: float):
+def _cohort_epoch_body(params, xb, yb, cfg: CNNConfig, n_steps: int, lr: float, impl: str):
     """params: pytree with leading cohort axis C; xb: (C, n_steps, B, L, Ch).
 
     Equivalent to ``vmap(_local_epoch)`` but with the steps-scan OUTSIDE the
@@ -89,12 +89,17 @@ def _cohort_epoch(params, xb, yb, cfg: CNNConfig, n_steps: int, lr: float):
     the per-client arithmetic is bit-identical to ``_local_epoch``; hoisting
     the scan avoids shuffling the (C, D)-sized optimizer carry through a
     vmapped scan, which dominates wall clock at large C.
+
+    ``impl`` picks the conv formulation: "gemm" (default in the engines)
+    lowers the vmapped per-client convolutions to batched GEMMs instead of
+    the C-group convolution XLA:CPU serializes; "xla" is the PR 1 path,
+    kept for the benchmark baseline.
     """
     opt = adam(lr=lr)
     opt_state = opt.init(params)
 
     def client_loss(p, x, y):
-        return softmax_xent(cnn_apply(p, cfg, x), y)
+        return softmax_xent(cnn_apply(p, cfg, x, conv_impl=impl), y)
 
     grad_fn = jax.vmap(jax.value_and_grad(client_loss))
 
@@ -122,6 +127,37 @@ def _cohort_epoch(params, xb, yb, cfg: CNNConfig, n_steps: int, lr: float):
         carry, losses = jax.lax.scan(body, carry, xs)
         params = carry[0]
     return params, losses.mean(axis=0)
+
+
+@partial(jax.jit, static_argnames=("cfg", "n_steps", "lr", "impl"), donate_argnums=(0,))
+def _cohort_epoch(params, xb, yb, cfg: CNNConfig, n_steps: int, lr: float, impl: str = "gemm"):
+    """Tree-major cohort epoch (see ``_cohort_epoch_body``).
+
+    The params carry is donated: epochs chain ``params`` through repeated
+    calls and never reuse the old value, so XLA may update the (C, D)-sized
+    params (and with it the Adam carry) in place instead of
+    double-buffering it.
+    """
+    return _cohort_epoch_body(params, xb, yb, cfg, n_steps, lr, impl)
+
+
+@partial(
+    jax.jit, static_argnames=("spec", "cfg", "n_steps", "lr", "impl"), donate_argnums=(0,)
+)
+def _cohort_epoch_flat(
+    flat, xb, yb, spec, cfg: CNNConfig, n_steps: int, lr: float, impl: str = "gemm"
+):
+    """Flat-major cohort epoch: (C, D) in, (C, D) out, one dispatch.
+
+    The device pipeline keeps model state as flat matrices end to end; the
+    tree unravel/ravel happens INSIDE the jit so the per-leaf slices fuse
+    with their consumers instead of materializing between dispatches, and
+    the donated (C, D) carry can be updated in place across epochs.
+    ``spec`` is the model's (hashable) ``TreeSpec``.
+    """
+    params = unravel_batched(spec, flat)
+    params, loss = _cohort_epoch_body(params, xb, yb, cfg, n_steps, lr, impl)
+    return ravel_batched(params), loss
 
 
 @dataclasses.dataclass
@@ -163,12 +199,20 @@ def _stack_starts(jobs: Sequence[LocalJob]) -> "jnp.ndarray":
     return stacked[np.asarray(take)]
 
 
-def run_cohorts(jobs: Sequence[LocalJob], cfg: CNNConfig, pack) -> CohortResult:
+def run_cohorts(
+    jobs: Sequence[LocalJob], cfg: CNNConfig, pack, store=None, impl: str = "gemm"
+) -> CohortResult:
     """Train every job, batching same-shape clients into vmapped cohorts.
 
     ``pack`` is the model's ``engine.flatten.FlatPack``.  Multi-epoch
     schedules run epoch-by-epoch with the cohort's params carried across
     epochs, matching the reference's sequential-epoch semantics.
+
+    ``store`` (optional): a ``DeviceShardStore``; per-epoch batches are
+    gathered on device from the padded shard array (uploading only the
+    int32 sample indices) instead of ``np.stack``-ing numpy shards on the
+    host every epoch.  ``impl`` is the conv formulation for the cohort
+    step ("gemm" | "xla", see ``_cohort_epoch_body``).
     """
     groups: Dict[Tuple, List[LocalJob]] = {}
     passthrough: List[LocalJob] = []
@@ -185,10 +229,18 @@ def run_cohorts(jobs: Sequence[LocalJob], cfg: CNNConfig, pack) -> CohortResult:
         params = pack.unravel_batched(_stack_starts(members))
         loss = jnp.zeros((len(members),), jnp.float32)
         epochs = len(members[0].idx)
+        cids = (
+            np.asarray([j.client.cid for j in members], np.int64)
+            if store is not None
+            else None
+        )
         for e in range(epochs):
-            xb = jnp.asarray(np.stack([j.client.shard.x[j.idx[e]] for j in members]))
-            yb = jnp.asarray(np.stack([j.client.shard.y[j.idx[e]] for j in members]))
-            params, loss = _cohort_epoch(params, xb, yb, cfg, steps, lr)
+            if store is not None:
+                xb, yb = store.gather(cids, np.stack([j.idx[e] for j in members]))
+            else:
+                xb = jnp.asarray(np.stack([j.client.shard.x[j.idx[e]] for j in members]))
+                yb = jnp.asarray(np.stack([j.client.shard.y[j.idx[e]] for j in members]))
+            params, loss = _cohort_epoch(params, xb, yb, cfg, steps, lr, impl)
         mats.append(pack.ravel_batched(params))
         loss = np.asarray(loss)
         for c, job in enumerate(members):
@@ -205,3 +257,85 @@ def run_cohorts(jobs: Sequence[LocalJob], cfg: CNNConfig, pack) -> CohortResult:
         return CohortResult(jnp.zeros((0, pack.dim), jnp.float32), {}, {})
     matrix = mats[0] if len(mats) == 1 else jnp.concatenate(mats, axis=0)
     return CohortResult(matrix, index, loss_of)
+
+
+@dataclasses.dataclass
+class _PlanGroup:
+    """One same-shape cohort of a ``CohortPlan`` after a round's draw."""
+
+    members: np.ndarray  # (C,) participating client ids, in client order
+    idx: np.ndarray  # (C, epochs, steps, batch) int32 sample indices
+    steps: int
+    batch: int
+    lr: float
+
+
+class CohortPlan:
+    """Static cohort grouping for the device pipeline.
+
+    Which cohort a client falls into depends only on its shard size and
+    hyperparameters, so the grouping (and each client's padded step count)
+    is computed ONCE at engine construction.  Per round, :meth:`draw` only
+    consumes the numpy RNG stream — draw-for-draw like
+    ``FLClient.local_update`` and in global client order, which is what
+    keeps fixed-seed device-pipeline runs on the reference trajectory —
+    and fills per-group index tensors.  This replaces the per-round
+    ``LocalJob``/``make_job`` object churn of the host pipeline (~2x less
+    host time per round at M=512).
+    """
+
+    def __init__(self, clients: Sequence[FLClient]):
+        self.sizes = np.array([len(c.shard) for c in clients], np.int64)
+        self.steps = np.zeros(len(clients), np.int64)
+        self._group_key: Dict[int, Tuple] = {}
+        for i, c in enumerate(clients):
+            n = self.sizes[i]
+            if n == 0:
+                continue
+            steps = _bucket(max(1, min(c.max_steps, int(np.ceil(n / c.batch_size)))))
+            self.steps[i] = steps
+            self._group_key[i] = (steps, c.batch_size, c.lr)
+
+    def draw(
+        self, rng: np.random.Generator, active: np.ndarray, epochs: int
+    ) -> Tuple[List[_PlanGroup], np.ndarray]:
+        """Returns (groups, passthrough) for the ``active`` clients.
+
+        ``passthrough`` lists active clients with empty shards (they train
+        zero steps and upload their start row).  RNG consumption replicates
+        ``draw_batch_indices`` per active client, in client order.
+        """
+        members: Dict[Tuple, List[int]] = {}
+        passthrough: List[int] = []
+        for i in np.nonzero(active)[0]:
+            if self.sizes[i] == 0:
+                passthrough.append(int(i))
+            else:
+                members.setdefault(self._group_key[int(i)], []).append(int(i))
+        groups = [
+            _PlanGroup(
+                members=np.asarray(ids, np.int64),
+                idx=np.zeros((len(ids), epochs, steps, batch), np.int32),
+                steps=steps,
+                batch=batch,
+                lr=lr,
+            )
+            for (steps, batch, lr), ids in members.items()
+        ]
+        slot = {}
+        for g in groups:
+            for c, i in enumerate(g.members):
+                slot[int(i)] = (g, c)
+        # the draws themselves MUST run in global client order
+        for i in np.nonzero(active)[0]:
+            if self.sizes[i] == 0:
+                continue
+            g, c = slot[int(i)]
+            n = int(self.sizes[i])
+            need = g.steps * g.batch
+            for e in range(epochs):
+                idx = rng.permutation(n)
+                if need > n:  # pad by resampling
+                    idx = np.concatenate([idx, rng.integers(0, n, need - n)])
+                g.idx[c, e] = idx[:need].reshape(g.steps, g.batch)
+        return groups, np.asarray(passthrough, np.int64)

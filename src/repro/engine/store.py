@@ -1,0 +1,106 @@
+"""Device-resident client shard store.
+
+``run_cohorts`` originally gathered every cohort batch on the host — a
+python list comprehension over C clients' numpy shards, an ``np.stack``,
+and a fresh host->device upload of the full batch tensor per epoch of
+every round.  At M >= 512 that host loop is the dominant per-round cost
+once training itself is batched.
+
+``DeviceShardStore`` pads all client shards into ONE ``(M, n_max, L, Ch)``
+device array at engine construction (a one-time cost outside the round
+loop).  Per-step batches are then assembled by a single jitted gather from
+sample indices: the only host->device traffic per epoch is the small
+``(C, steps, batch)`` int32 index tensor the RNG stream produces anyway.
+
+Indices are always drawn in ``[0, len(shard_i))`` (the reference sampling
+resamples within the shard), so the zero padding rows are never read.
+
+Padding is to the LARGEST shard: memory is O(M * n_max).  With the IoT
+populations this engine targets (many small, similar shards) the overhead
+is bounded, but one pathologically large shard inflates the store M-fold —
+``padding_ratio`` reports the blow-up, the async engine skips the store
+past ``MAX_PADDING_RATIO``, and the sync engine's ``pipeline="host"``
+avoids the store entirely.
+"""
+from __future__ import annotations
+
+from typing import List, Sequence, Tuple
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+# past this pad blow-up the store costs more memory than it saves time;
+# callers that can fall back to host batch stacking (async engine) do so
+MAX_PADDING_RATIO = 16.0
+
+
+@jax.jit
+def _store_gather(x, y, cids, idx):
+    """x: (M, n_max, L, Ch); y: (M, n_max); cids: (C,); idx: (C, S, B).
+
+    Returns (C, S, B, L, Ch) batches and (C, S, B) labels in one gather.
+    """
+    c = cids[:, None, None]
+    return x[c, idx], y[c, idx]
+
+
+class DeviceShardStore:
+    """All client shards padded into one device-resident array pair."""
+
+    def __init__(self, clients: Sequence):
+        if not clients:
+            raise ValueError("DeviceShardStore needs at least one client")
+        for i, c in enumerate(clients):
+            if getattr(c, "cid", i) != i:
+                # gather() is indexed by cid; a reordered client list would
+                # silently train on the wrong shards
+                raise ValueError(f"client at position {i} has cid {c.cid}")
+        shards = [c.shard for c in clients]
+        self.sizes = np.array([len(s) for s in shards], np.int64)
+        n_max = max(1, int(self.sizes.max()))
+        feat = None
+        for s in shards:
+            if len(s):
+                feat = s.x.shape[1:]
+                break
+        if feat is None:  # every shard empty: 1-sample zero store, never read
+            feat = shards[0].x.shape[1:]
+        xs = np.zeros((len(shards), n_max) + tuple(feat), np.float32)
+        ys = np.zeros((len(shards), n_max), np.int32)
+        for i, s in enumerate(shards):
+            if len(s) == 0:
+                continue
+            if s.x.shape[1:] != feat:
+                raise ValueError(
+                    f"client {i} shard shape {s.x.shape[1:]} != store layout {feat}"
+                )
+            xs[i, : len(s)] = s.x
+            ys[i, : len(s)] = s.y
+        self.x = jnp.asarray(xs)
+        self.y = jnp.asarray(ys)
+
+    @property
+    def n_clients(self) -> int:
+        return int(self.x.shape[0])
+
+    @property
+    def padding_ratio(self) -> float:
+        """Padded cells per real sample (1.0 = perfectly uniform shards)."""
+        total = max(1, int(self.sizes.sum()))
+        return self.x.shape[0] * self.x.shape[1] / total
+
+    @classmethod
+    def build_if_economical(cls, clients: Sequence):
+        """Store, or None when padding would blow memory past
+        ``MAX_PADDING_RATIO`` (one huge shard among many small ones).
+        The ratio is checked BEFORE any allocation."""
+        sizes = np.array([len(c.shard) for c in clients] or [0])
+        ratio = len(sizes) * max(1, int(sizes.max())) / max(1, int(sizes.sum()))
+        return cls(clients) if ratio <= MAX_PADDING_RATIO else None
+
+    def gather(self, cids, idx) -> Tuple[jnp.ndarray, jnp.ndarray]:
+        """cids: (C,) client ids; idx: (C, steps, batch) in-shard indices."""
+        return _store_gather(
+            self.x, self.y, jnp.asarray(cids, jnp.int32), jnp.asarray(idx, jnp.int32)
+        )

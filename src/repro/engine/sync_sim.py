@@ -6,14 +6,29 @@ the hot loop is restructured for scale:
 
   * local training: one jitted cohort call per same-shape client group
     (``engine.cohort``) instead of one jitted call per client;
-  * model state is *flat-major*: clients exchange (D,) rows, edges hold
-    (D,) vectors, and FedAvg runs on (N, D) matrices through
-    ``engine.flatten.flat_mean`` (the ``hier_aggregate`` Pallas kernel, or
-    the reference contraction with ``backend="reference"``);
+  * model state is *flat-major*: clients exchange (D,) rows, edge models
+    live in one (E, D) device matrix, and FedAvg runs on (N, D) matrices
+    through the Pallas kernels (``backend="pallas"``) or plain-XLA
+    contractions (``backend="reference"``);
   * uploads optionally pass through a ``CompressionSpec`` applied to the
     flat model delta (global top-k over all parameters, vs the reference
     simulator's per-leaf top-k) with per-client error feedback, and the
     accountant then counts compressed bits.
+
+Two pipelines (``pipeline=``):
+
+  * ``"device"`` (default) — the round executes as a handful of
+    fixed-shape device programs: client shards live in a
+    ``DeviceShardStore`` (batches gathered on device from int32 indices),
+    every edge's aggregation is ONE ``flat_segment_mean`` call over the
+    (P, D) membership-pair matrix (segments = edges; per-round
+    participation travels in the weights so shapes never change), DCA
+    start averaging is one segment call with segments = clients, and the
+    cloud mean reduces the (E, D) edge matrix directly.  O(1) device
+    dispatches per round instead of O(E), no per-edge-size recompiles.
+  * ``"host"`` — the PR 1 host-major loop (per-edge ``flat_mean`` calls,
+    numpy batch stacking), kept as the comparison baseline for
+    ``benchmarks/engine_bench.py`` and the equivalence tests.
 
 The engine consumes the numpy RNG stream draw-for-draw like the reference
 simulator, so a fixed seed reproduces the reference accuracy trajectory
@@ -23,6 +38,7 @@ Adam amplifies — predictions are unaffected).
 """
 from __future__ import annotations
 
+from functools import partial
 from typing import Dict, List, Optional
 
 import jax
@@ -32,8 +48,15 @@ import numpy as np
 from repro.core.compression import CompressionSpec
 from repro.core.hfl import CommAccountant, HFLSchedule, WallClock, weight_divergence
 from repro.data.synthetic_health import Dataset
-from repro.engine.cohort import make_job, run_cohorts
-from repro.engine.flatten import FlatPack, compress_flat_upload, flat_mean
+from repro.engine.cohort import CohortPlan, _cohort_epoch_flat, make_job, run_cohorts
+from repro.engine.flatten import (
+    BACKENDS,
+    FlatPack,
+    compress_flat_upload,
+    flat_mean,
+    flat_segment_mean,
+)
+from repro.engine.store import DeviceShardStore
 from repro.federated.client import FLClient
 from repro.federated.simulation import (
     RoundMetrics,
@@ -43,6 +66,16 @@ from repro.federated.simulation import (
 )
 from repro.models.cnn1d import CNNConfig, cnn_init
 from repro.utils.tree import tree_size_bytes
+
+PIPELINES = ("device", "host")
+
+
+@partial(jax.jit, static_argnames=("n_segments", "backend"))
+def _segment_agg_keep(upd, seg_ids, weights, has, prev, n_segments: int, backend: str):
+    """Fused per-edge FedAvg + keep-previous-model-for-empty-edges: one
+    dispatch instead of a segment call, a mask upload, and a select."""
+    agg = flat_segment_mean(upd, seg_ids, weights, n_segments, backend=backend)
+    return jnp.where(has[:, None], agg, prev)
 
 
 class BatchedSyncEngine:
@@ -62,7 +95,12 @@ class BatchedSyncEngine:
         cost_latency=None,
         backend: str = "pallas",
         compression: Optional[CompressionSpec] = None,
+        pipeline: str = "device",
     ):
+        if pipeline not in PIPELINES:
+            raise ValueError(f"pipeline must be one of {PIPELINES}, got {pipeline!r}")
+        if backend not in BACKENDS:
+            raise ValueError(f"backend must be one of {BACKENDS}, got {backend!r}")
         self.clients = clients
         self.assignment = assignment
         self.cfg = cfg
@@ -73,6 +111,7 @@ class BatchedSyncEngine:
         self.params = cnn_init(jax.random.PRNGKey(seed), cfg)
         self.backend = backend
         self.compression = compression
+        self.pipeline = pipeline
         self.pack = FlatPack(self.params)
         self.track_divergence = track_divergence
         if track_divergence:
@@ -92,15 +131,153 @@ class BatchedSyncEngine:
             # bits() on the flat (D,) layout the engine actually compresses
             # (one global top-k), not the per-leaf tree the reference uses
             self._uplink_bits = compression.bits(jnp.zeros((self.pack.dim,), jnp.float32))
+        # static round structure: the (client, edge) membership pairs, in
+        # client-major order.  Participation varies per round but travels in
+        # the segment WEIGHTS, so every device program keeps a fixed shape.
+        asn = np.asarray(assignment)
+        pc, pe = np.nonzero(asn)
+        self._pair_clients = pc.astype(np.int64)
+        self._pair_edges = pe.astype(np.int64)
+        self._pair_clients_dev = jnp.asarray(pc, jnp.int32)
+        self._pair_edges_dev = jnp.asarray(pe, jnp.int32)
+        self._pair_ones = jnp.ones((len(pc),), jnp.float32)
+        self._has_edge = asn.any(axis=1)
+        self._data_sizes = np.array([c.data_size for c in clients], np.float32)
+        # SCA fast path: with single-connectivity every DCA start IS an edge
+        # row, so starts reduce to one gather instead of a segment mean
+        self._single_edge = bool((asn.sum(axis=1) <= 1).all())
+        self._client_edge = np.where(self._has_edge, asn.argmax(axis=1), 0).astype(
+            np.int64
+        )
+        self.store = DeviceShardStore(clients) if pipeline == "device" else None
+        self._plan = CohortPlan(clients) if pipeline == "device" else None
 
     def _mean(self, rows: List[jnp.ndarray], weights) -> jnp.ndarray:
         return flat_mean(
             jnp.stack(rows), np.asarray(weights, np.float32), backend=self.backend
         )
 
+    # -- one edge round, device pipeline --------------------------------------
+    def _client_starts(self, edge_mat: jnp.ndarray) -> jnp.ndarray:
+        """(M, D) per-client DCA start rows from the (E, D) edge matrix.
 
-    # -- one edge round -------------------------------------------------------
+        A DCA client starts from the unweighted mean of its edges' models —
+        one segment call with segments = clients over the membership pairs.
+        No RNG is consumed, so computing starts for every client
+        (participating or not) keeps the shape static at no parity cost —
+        unused rows are never read.
+        """
+        return flat_segment_mean(
+            edge_mat[self._pair_edges_dev],
+            self._pair_clients_dev,
+            self._pair_ones,
+            self.assignment.shape[0],
+            backend=self.backend,
+        )
+
+    def _edge_round_device(self, edge_mat: jnp.ndarray):
+        """One edge round as fixed-shape device programs; returns the new
+        (E, D) edge matrix and the per-client losses."""
+        m, n = self.assignment.shape
+        participating = self.rng.random(m) < self.upp
+        if not participating.any():
+            participating[self.rng.integers(0, m)] = True
+        # lazy DCA start rows: the SCA corner (every client on one edge) is a
+        # plain gather per cohort; only dual-connectivity pays the segment
+        # call for the full (M, D) matrix
+        starts_full = None
+
+        def starts_for(ids: np.ndarray) -> jnp.ndarray:
+            nonlocal starts_full
+            if self._single_edge:
+                return jnp.take(
+                    edge_mat, jnp.asarray(self._client_edge[ids], jnp.int32), axis=0
+                )
+            if starts_full is None:
+                starts_full = self._client_starts(edge_mat)
+            return starts_full[jnp.asarray(ids, jnp.int32)]
+
+        active = self._has_edge & participating
+        # the plan's draw consumes the RNG in client order, mirroring the
+        # reference; grouping itself was precomputed at construction
+        groups, passthrough = self._plan.draw(
+            self.rng, active, self.schedule.local_steps
+        )
+        # train each cohort flat-major: starts gather -> per-epoch on-device
+        # batch gather -> fused (C, D)-in/(C, D)-out epoch.  Losses stay on
+        # device until metrics time so the aggregation dispatches below can
+        # queue behind the (async-dispatched) epochs without a host sync.
+        mats, loss_chunks = [], []
+        row_of = np.zeros(m, np.int64)
+        offset = 0
+        for g in groups:
+            flat = starts_for(g.members)
+            for e in range(g.idx.shape[1]):
+                xb, yb = self.store.gather(g.members, g.idx[:, e])
+                flat, loss = _cohort_epoch_flat(
+                    flat, xb, yb, self.pack.spec, self.cfg, g.steps, g.lr
+                )
+            mats.append(flat)
+            loss_chunks.append(loss)
+            row_of[g.members] = np.arange(offset, offset + len(g.members))
+            offset += len(g.members)
+        if len(passthrough):  # empty shards upload their start row untouched
+            mats.append(starts_for(passthrough))
+            loss_chunks.append(np.zeros(len(passthrough), np.float32))
+            row_of[passthrough] = np.arange(offset, offset + len(passthrough))
+            offset += len(passthrough)
+        job_cids = np.nonzero(active)[0]
+        upd_matrix = (
+            jnp.concatenate(mats, axis=0) if len(mats) > 1
+            else (mats[0] if mats else jnp.zeros((1, self.pack.dim), jnp.float32))
+        )
+        compressing = self.compression is not None and self.compression.kind != "none"
+        if compressing and len(job_cids):
+            start_rows = starts_for(job_cids)
+            trained_rows = upd_matrix[jnp.asarray(row_of[job_cids], jnp.int32)]
+            rows = []
+            for k, i in enumerate(job_cids):
+                rows.append(
+                    compress_flat_upload(
+                        self.compression, self._errors, int(i),
+                        start_rows[k], trained_rows[k],
+                    )
+                )
+                row_of[i] = k
+            upd_matrix = jnp.stack(rows)
+        if len(job_cids):
+            # every edge's FedAvg in ONE segment call over the pair matrix
+            part_pairs = participating[self._pair_clients]
+            take = row_of[self._pair_clients]
+            if len(take) == upd_matrix.shape[0] and np.array_equal(
+                take, np.arange(len(take))
+            ):
+                upd = upd_matrix  # rows already in pair order: skip the gather
+            else:
+                upd = upd_matrix[jnp.asarray(take, jnp.int32)]
+            # edges with no participants keep their previous model
+            has = np.bincount(self._pair_edges, weights=part_pairs, minlength=n) > 0
+            edge_mat = _segment_agg_keep(
+                upd,
+                self._pair_edges_dev,
+                jnp.asarray(self._data_sizes[self._pair_clients] * part_pairs),
+                jnp.asarray(has),
+                edge_mat,
+                n,
+                self.backend,
+            )
+        self.accountant.on_edge_sync(
+            self.assignment * participating[:, None], uplink_bits=self._uplink_bits
+        )
+        if self.clock is not None:
+            self.clock.on_edge_sync(self.assignment, participating)
+        return edge_mat, loss_chunks
+
+    # -- one edge round, host pipeline --------------------------------------
     def _edge_round(self, edge_rows: List[jnp.ndarray]) -> List[float]:
+        """The PR 1 host-major round, preserved verbatim (host batch
+        stacking, per-edge ``flat_mean`` loop, XLA-conv cohort step) as the
+        benchmark baseline and equivalence-test counterpart."""
         m, n = self.assignment.shape
         participating = self.rng.random(m) < self.upp
         if not participating.any():
@@ -117,7 +294,7 @@ class BatchedSyncEngine:
             )
             jobs.append(make_job(cl, start, self.rng, epochs=self.schedule.local_steps))
             job_edges.append(edges)
-        trained = run_cohorts(jobs, self.cfg, self.pack)
+        trained = run_cohorts(jobs, self.cfg, self.pack, impl="xla")
         compressing = self.compression is not None and self.compression.kind != "none"
         losses = []
         new_cids: List[List[int]] = [[] for _ in range(n)]
@@ -159,16 +336,40 @@ class BatchedSyncEngine:
         n = self.assignment.shape[1]
         history: List[RoundMetrics] = []
         global_row = self.pack.ravel(self.params)
-        edge_sizes = [
-            sum(c.data_size for i, c in enumerate(self.clients) if self.assignment[i, j])
-            for j in range(n)
-        ]
+        edge_sizes = np.asarray(
+            [
+                max(
+                    sum(
+                        c.data_size
+                        for i, c in enumerate(self.clients)
+                        if self.assignment[i, j]
+                    ),
+                    1,
+                )
+                for j in range(n)
+            ],
+            np.float32,
+        )
         for b in range(1, cloud_rounds + 1):
-            edge_rows = [global_row] * n
-            losses: List[float] = []
-            for _ in range(self.schedule.edge_per_cloud):
-                losses += self._edge_round(edge_rows)
-            global_row = self._mean(edge_rows, [max(s, 1) for s in edge_sizes])
+            losses: List = []
+            if self.pipeline == "device":
+                edge_mat = jnp.broadcast_to(global_row, (n, global_row.shape[0]))
+                for _ in range(self.schedule.edge_per_cloud):
+                    edge_mat, chunks = self._edge_round_device(edge_mat)
+                    losses += chunks  # per-cohort (C,) arrays, still on device
+                # cloud FedAvg straight off the (E, D) matrix: static shape,
+                # no per-round stacking
+                global_row = flat_mean(edge_mat, edge_sizes, backend=self.backend)
+                losses = (
+                    list(np.concatenate([np.asarray(c) for c in losses]))
+                    if losses
+                    else []
+                )
+            else:
+                edge_rows = [global_row] * n
+                for _ in range(self.schedule.edge_per_cloud):
+                    losses += self._edge_round(edge_rows)
+                global_row = self._mean(edge_rows, edge_sizes)
             self.accountant.on_cloud_sync(n)
             if self.clock is not None:
                 self.clock.on_cloud_sync()

@@ -80,14 +80,18 @@ class Scenario:
         compression=None,
         staleness_decay: float = 0.5,
         quorum: float = 0.75,
+        pipeline: str = "device",
     ) -> SimResult:
         """Run the scenario through one of the simulation engines.
 
-        engine:  "reference" — the sequential readable simulator;
-                 "sync"      — batched cohorts + flat-buffer aggregation,
-                               same semantics as the reference;
-                 "async"     — event-driven staleness-weighted engine.
-        backend: aggregation path for the engines ("pallas" | "reference").
+        engine:   "reference" — the sequential readable simulator;
+                  "sync"      — batched cohorts + flat-buffer aggregation,
+                                same semantics as the reference;
+                  "async"     — event-driven staleness-weighted engine.
+        backend:  aggregation path for the engines ("pallas" | "reference").
+        pipeline: sync-engine round pipeline ("device" — fixed-shape
+                  segment-kernel programs, shard store; "host" — the PR 1
+                  host-major loop).
         """
         if engine == "reference":
             sim = HFLSimulation(
@@ -121,6 +125,7 @@ class Scenario:
                 cost_latency=self.cost.latency if wall_clock else None,
                 backend=backend,
                 compression=compression,
+                pipeline=pipeline,
             )
             return sim.run(cloud_rounds, eval_every=eval_every)
         if engine == "async":

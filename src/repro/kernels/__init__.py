@@ -1,3 +1,13 @@
-from repro.kernels.ops import flash_attention, hier_aggregate, topk_gating
+from repro.kernels.ops import (
+    flash_attention,
+    hier_aggregate,
+    hier_segment_aggregate,
+    topk_gating,
+)
 
-__all__ = ["flash_attention", "hier_aggregate", "topk_gating"]
+__all__ = [
+    "flash_attention",
+    "hier_aggregate",
+    "hier_segment_aggregate",
+    "topk_gating",
+]

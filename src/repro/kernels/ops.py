@@ -12,6 +12,7 @@ import jax
 
 from repro.kernels.flash_attention import flash_attention as _flash
 from repro.kernels.hier_aggregate import hier_aggregate as _agg
+from repro.kernels.segment_aggregate import hier_segment_aggregate as _seg_agg
 from repro.kernels.topk_gating import topk_gating as _gate
 
 
@@ -23,6 +24,11 @@ def flash_attention(q, k, v, *, causal=True, window=None, block_q=128, block_k=1
 @partial(jax.jit, static_argnames=("block",))
 def hier_aggregate(updates, weights, *, block=4096):
     return _agg(updates, weights, block=block)
+
+
+@partial(jax.jit, static_argnames=("n_segments", "block"))
+def hier_segment_aggregate(updates, seg_ids, weights, n_segments, *, block=4096):
+    return _seg_agg(updates, seg_ids, weights, n_segments, block=block)
 
 
 @partial(jax.jit, static_argnames=("k", "block_t"))

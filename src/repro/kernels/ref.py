@@ -39,6 +39,24 @@ def hier_aggregate_ref(updates, weights):
     return jnp.einsum("n,nd->d", w, updates.astype(jnp.float32)).astype(updates.dtype)
 
 
+def hier_segment_aggregate_ref(updates, seg_ids, weights, n_segments: int):
+    """updates: (N, D); seg_ids, weights: (N,) -> (n_segments, D) per-segment
+    weighted averages via ``jax.ops.segment_sum`` (empty segments -> zeros).
+
+    Weights are normalized per segment BEFORE the scatter-add so the
+    contraction matches the one-hot kernel's ``sum_i (w_i / W_e) x_i`` form.
+    This is both the parity oracle and the preferred large-E execution path
+    (O(N*D) scatter-add vs the kernel's O(E*N*D) contraction).
+    """
+    w = weights.astype(jnp.float32)
+    denom = jax.ops.segment_sum(w, seg_ids, num_segments=n_segments)
+    wn = w / jnp.maximum(denom, 1e-30)[seg_ids]
+    out = jax.ops.segment_sum(
+        updates.astype(jnp.float32) * wn[:, None], seg_ids, num_segments=n_segments
+    )
+    return out.astype(updates.dtype)
+
+
 def topk_gating_ref(logits, k: int):
     """logits: (T, E) -> (combine (T, E) fp32, top_idx (T, k)).
 

@@ -7,7 +7,16 @@ import pytest
 
 from repro.core.compression import CompressionSpec
 from repro.core.hfl import HFLSchedule
-from repro.engine import AsyncHFLEngine, EventQueue, FlatPack, flat_mean
+from repro.engine import (
+    AsyncHFLEngine,
+    BatchedSyncEngine,
+    DeviceShardStore,
+    EventQueue,
+    FlatPack,
+    flat_mean,
+    flat_segment_mean,
+)
+from repro.engine.flatten import compress_flat_upload
 from repro.federated import build_scenario
 from repro.utils.tree import tree_ravel, tree_unravel
 
@@ -89,6 +98,40 @@ def test_unravel_rejects_wrong_size():
         tree_unravel(spec, jnp.zeros((5,)))
 
 
+def test_flat_segment_mean_backends_agree():
+    """pallas (kernel off-TPU routes to interpret/segment_sum) vs reference."""
+    u = jax.random.normal(jax.random.PRNGKey(0), (9, 301))
+    seg = np.array([0, 0, 1, 1, 1, 3, 3, 3, 3])
+    w = np.linspace(0.5, 2.0, 9).astype(np.float32)
+    outs = [
+        np.asarray(flat_segment_mean(u, seg, w, 4, backend=b))
+        for b in ("pallas", "reference")
+    ]
+    kern = np.asarray(flat_segment_mean(u, seg, w, 4, interpret=True))
+    np.testing.assert_allclose(outs[0], outs[1], atol=1e-6)
+    np.testing.assert_allclose(kern, outs[1], atol=1e-5)
+    np.testing.assert_array_equal(outs[0][2], 0.0)  # empty segment
+
+
+# -- device shard store ----------------------------------------------------
+def test_device_shard_store_gather_matches_numpy(scenario):
+    store = DeviceShardStore(scenario.clients)
+    rng = np.random.default_rng(0)
+    cids = np.array([i for i, c in enumerate(scenario.clients) if len(c.shard)][:4])
+    idx = np.stack(
+        [rng.integers(0, len(scenario.clients[i].shard), (2, 3)) for i in cids]
+    )
+    xb, yb = store.gather(cids, idx)
+    assert xb.shape == (len(cids), 2, 3) + scenario.clients[0].shard.x.shape[1:]
+    for k, i in enumerate(cids):
+        np.testing.assert_array_equal(
+            np.asarray(xb[k]), scenario.clients[i].shard.x[idx[k]]
+        )
+        np.testing.assert_array_equal(
+            np.asarray(yb[k]), scenario.clients[i].shard.y[idx[k]]
+        )
+
+
 # -- event queue -----------------------------------------------------------
 def test_event_queue_deterministic_order():
     q = EventQueue()
@@ -135,6 +178,43 @@ def test_sync_engine_matches_reference(scenario, assignment, schedule):
         np.testing.assert_allclose(np.asarray(a), np.asarray(b), atol=5e-3)
 
 
+@pytest.mark.parametrize("schedule,upp", [(HFLSchedule(1, 1), 1.0), (HFLSchedule(2, 2), 0.6)])
+def test_sync_engine_device_pipeline_matches_host(scenario, assignment, schedule, upp):
+    """Old path vs segment path: the PR 1 host-major loop and the
+    device-resident pipeline consume the same RNG stream and must produce
+    the same trajectory (segment aggregation reassociates the FedAvg sums,
+    so params agree to float tolerance, accuracy to 1e-6)."""
+    runs = {}
+    for pipeline in ("host", "device"):
+        runs[pipeline] = scenario.simulate(
+            assignment, cloud_rounds=2, schedule=schedule, seed=11, upp=upp,
+            engine="sync", pipeline=pipeline,
+        )
+    host, dev = runs["host"], runs["device"]
+    for mh, md in zip(host.history, dev.history):
+        assert md.test_acc == pytest.approx(mh.test_acc, abs=1e-6)
+        assert md.mean_local_loss == pytest.approx(mh.mean_local_loss, abs=5e-3)
+    assert dev.accountant.eu_traffic_bits() == host.accountant.eu_traffic_bits()
+    for a, b in zip(jax.tree.leaves(host.final_params), jax.tree.leaves(dev.final_params)):
+        np.testing.assert_allclose(np.asarray(a), np.asarray(b), atol=5e-3)
+
+
+def test_sync_engine_device_pipeline_dual_connectivity(scenario):
+    """DCA rows (clients on 2 edges) exercise the segment-mean start path;
+    both pipelines and the reference simulator must agree."""
+    m = len(scenario.clients)
+    n = scenario.n_edges
+    asn = np.zeros((m, n))
+    asn[np.arange(m), np.arange(m) % n] = 1.0
+    asn[: m // 2, (np.arange(m // 2) + 1) % n] = 1.0  # half the EUs dual-homed
+    ref = scenario.simulate(asn, cloud_rounds=1, seed=5, upp=1.0)
+    for pipeline in ("host", "device"):
+        eng = scenario.simulate(
+            asn, cloud_rounds=1, seed=5, upp=1.0, engine="sync", pipeline=pipeline
+        )
+        assert eng.final_accuracy() == pytest.approx(ref.final_accuracy(), abs=1e-6)
+
+
 def test_sync_engine_matches_reference_with_upp(scenario, assignment):
     """Partial participation draws the same RNG stream in both simulators."""
     ref = scenario.simulate(assignment, cloud_rounds=2, seed=3, upp=0.6)
@@ -162,6 +242,48 @@ def test_compression_reduces_accounted_traffic(scenario, assignment, engine):
     )
     # training still works on compressed uploads
     assert comp.final_accuracy() > 1.0 / 5
+
+
+def test_compress_flat_upload_error_feedback_accumulates():
+    """Over 3 rounds the transmitted total plus the residual error equals
+    the uncompressed delta total — error feedback loses nothing."""
+    spec = CompressionSpec("topk", fraction=0.2)
+    rng = np.random.default_rng(0)
+    d = 40
+    errors = {}
+    sent_total = np.zeros(d)
+    delta_total = np.zeros(d)
+    start = jnp.zeros((d,), jnp.float32)
+    for _ in range(3):
+        delta = rng.normal(size=d).astype(np.float32)
+        trained = start + jnp.asarray(delta)
+        up = compress_flat_upload(spec, errors, 7, start, trained)
+        sent = np.asarray(up - start)
+        # each round ships exactly k = ceil(0.2 * 40) = 8 values
+        assert int(np.count_nonzero(sent)) == 8
+        sent_total += sent
+        delta_total += delta
+        start = trained  # next round trains from the uncompressed model
+    residual = np.asarray(errors[7])
+    np.testing.assert_allclose(sent_total + residual, delta_total, atol=1e-5)
+
+
+def test_compress_flat_upload_errors_are_per_client():
+    """errors dict keys one state per client; streams do not interfere."""
+    spec = CompressionSpec("topk", fraction=0.1)
+    rng = np.random.default_rng(1)
+    errors = {}
+    start = jnp.zeros((30,), jnp.float32)
+    d0 = jnp.asarray(rng.normal(size=30).astype(np.float32))
+    d1 = jnp.asarray(rng.normal(size=30).astype(np.float32))
+    compress_flat_upload(spec, errors, 0, start, start + d0)
+    compress_flat_upload(spec, errors, 1, start, start + d1)
+    assert set(errors) == {0, 1}
+    assert not np.allclose(np.asarray(errors[0]), np.asarray(errors[1]))
+    # a solo-client run from the same start produces the same state for 0
+    solo = {}
+    compress_flat_upload(spec, solo, 0, start, start + d0)
+    np.testing.assert_allclose(np.asarray(solo[0]), np.asarray(errors[0]), atol=1e-7)
 
 
 def test_topk_exact_k_under_ties():

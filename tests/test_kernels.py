@@ -7,8 +7,14 @@ import pytest
 
 from repro.kernels.flash_attention import flash_attention
 from repro.kernels.hier_aggregate import hier_aggregate
+from repro.kernels.segment_aggregate import hier_segment_aggregate
 from repro.kernels.topk_gating import topk_gating
-from repro.kernels.ref import flash_attention_ref, hier_aggregate_ref, topk_gating_ref
+from repro.kernels.ref import (
+    flash_attention_ref,
+    hier_aggregate_ref,
+    hier_segment_aggregate_ref,
+    topk_gating_ref,
+)
 
 
 @pytest.mark.parametrize("dtype", [jnp.float32, jnp.bfloat16])
@@ -61,6 +67,52 @@ def test_hier_aggregate_is_fedavg():
     u = jnp.stack([jnp.full((100,), 1.0), jnp.full((100,), 3.0)])
     out = hier_aggregate(u, jnp.asarray([1.0, 3.0]), interpret=True)
     np.testing.assert_allclose(np.asarray(out), 2.5, rtol=1e-6)
+
+
+# -- segmented aggregation (ISSUE 2) ---------------------------------------
+RAGGED_CASES = [
+    # seg_ids, n_segments: empty segment (2), single-client segment (4)
+    (np.array([0, 0, 0, 1, 3, 3, 3, 3, 4]), 5),
+    # all clients on one edge
+    (np.zeros(9, int), 1),
+    # every client its own edge + one empty trailing edge
+    (np.arange(9), 10),
+]
+
+
+@pytest.mark.parametrize("seg,e", RAGGED_CASES)
+@pytest.mark.parametrize("d,block", [(257, 64), (1000, 4096)])
+def test_segment_aggregate_matches_reference_ragged(seg, e, d, block):
+    n = len(seg)
+    u = jax.random.normal(jax.random.PRNGKey(0), (n, d))
+    w = jax.random.uniform(jax.random.PRNGKey(1), (n,), minval=0.05)
+    out = hier_segment_aggregate(u, jnp.asarray(seg), w, e, block=block, interpret=True)
+    ref = hier_segment_aggregate_ref(u, jnp.asarray(seg), w, e)
+    assert out.shape == (e, d)
+    np.testing.assert_allclose(np.asarray(out), np.asarray(ref), atol=1e-5, rtol=1e-5)
+
+
+def test_segment_aggregate_edge_semantics():
+    """Empty segments are zero rows; single-client segments return the row
+    exactly; a full single segment equals ``hier_aggregate``."""
+    u = jax.random.normal(jax.random.PRNGKey(2), (9, 300))
+    w = jax.random.uniform(jax.random.PRNGKey(3), (9,), minval=0.1)
+    seg = jnp.asarray(np.array([0, 0, 0, 1, 3, 3, 3, 3, 4]))
+    out = hier_segment_aggregate(u, seg, w, 5, interpret=True)
+    np.testing.assert_array_equal(np.asarray(out[2]), 0.0)  # empty edge
+    np.testing.assert_array_equal(np.asarray(out[4]), np.asarray(u[8]))  # singleton
+    one = hier_segment_aggregate(u, jnp.zeros(9, jnp.int32), w, 1, interpret=True)
+    flat = hier_aggregate(u, w, interpret=True)
+    np.testing.assert_allclose(np.asarray(one[0]), np.asarray(flat), atol=1e-6)
+
+
+def test_segment_aggregate_is_per_edge_fedavg():
+    """Each segment row is that edge's sigma-weighted average (paper eq. 6)."""
+    u = jnp.stack([jnp.full((64,), v) for v in (1.0, 3.0, 10.0)])
+    seg = jnp.asarray([0, 0, 1])
+    out = hier_segment_aggregate(u, seg, jnp.asarray([1.0, 3.0, 7.0]), 2, interpret=True)
+    np.testing.assert_allclose(np.asarray(out[0]), 2.5, rtol=1e-6)
+    np.testing.assert_allclose(np.asarray(out[1]), 10.0, rtol=1e-6)
 
 
 @pytest.mark.parametrize("t,e,k,bt", [(64, 8, 2, 32), (200, 16, 4, 64), (100, 40, 8, 128)])
