@@ -14,7 +14,13 @@ Compares, at M in {18, 128, 512, 2048} EUs on one cloud round:
                        segment aggregation, (E, D) edge matrix);
   * ``async``        — ``AsyncHFLEngine`` with a 75% quorum.
 
-The workload is the dispatch-bound IoT regime the engine exists for: a
+``--model`` (or ``main(model=...)``) picks the client program: ``cnn``
+(default), ``mlp``, or ``lm`` — the engines are model-agnostic, so the same
+four paths run any registered ``ClientProgram``; every emitted mark records
+the program name.  The full suite (``benchmarks.run``) runs the CNN sizes
+plus one MLP scale point so CI tracks at least one non-CNN trajectory.
+
+The CNN workload is the dispatch-bound IoT regime the engine exists for: a
 micro 1-D CNN (seq 64, ~4k params) and small local shards, so per-client
 Python/dispatch overhead — what the engine eliminates — dominates the
 reference loop.  With the paper-size model (25k params, seq 187) the same
@@ -35,32 +41,66 @@ import numpy as np
 
 from benchmarks.common import QUICK, dump_json, emit, mark
 from repro.core.hfl import HFLSchedule
-from repro.data.synthetic_health import heartbeat_like
+from repro.data.lm_stream import TokenStream
+from repro.data.synthetic_health import Dataset, heartbeat_like
 from repro.data.partition import split_dataset_by_counts
 from repro.engine import AsyncHFLEngine, BatchedSyncEngine
 from repro.federated.client import FLClient
+from repro.federated.programs import CNNProgram, LMProgram, MLPProgram, tiny_lm_config
 from repro.federated.simulation import HFLSimulation
 from repro.models.cnn1d import CNNConfig, HEARTBEAT_CNN
 
 MICRO_CNN = CNNConfig(in_channels=1, n_classes=5, seq_len=64, c1=8, c2=8, hidden=16)
 CFG = HEARTBEAT_CNN if os.environ.get("BENCH_MODEL", "") == "paper" else MICRO_CNN
 
+LM_SEQ, LM_VOCAB, LM_TOPICS = 16, 64, 4
 
-def _make_population(m: int, n_edges: int, seed: int = 0):
-    """M heartbeat-like clients with small imbalanced shards + round-robin edges."""
+
+def _program(model: str):
+    if model == "cnn":
+        return CNNProgram(CFG)
+    if model == "mlp":  # micro MLP on the same micro-CNN shards
+        return MLPProgram(feat=(CFG.seq_len, CFG.in_channels), classes=CFG.n_classes,
+                          hidden=16)
+    if model == "lm":  # micro causal transformer on token shards
+        cfg = tiny_lm_config(vocab_size=LM_VOCAB, seq_len=LM_SEQ, d_model=16,
+                             n_layers=2, n_heads=2, d_ff=32)
+        return LMProgram(cfg=cfg, seq_len=LM_SEQ, n_topics=LM_TOPICS)
+    raise ValueError(f"unknown model {model!r} (cnn | mlp | lm)")
+
+
+def _make_population(m: int, n_edges: int, seed: int = 0, model: str = "cnn"):
+    """M clients with small imbalanced shards + round-robin edge assignment."""
     rng = np.random.default_rng(seed)
-    k = CFG.n_classes
-    counts = rng.integers(1, 3, (m, k))
-    train = heartbeat_like(rng, counts.sum(axis=0))
-    train.x = train.x[:, : CFG.seq_len, : CFG.in_channels]
-    shards = split_dataset_by_counts(rng, train, counts)
-    test = heartbeat_like(rng, np.full(k, 10))
-    test.x = test.x[:, : CFG.seq_len, : CFG.in_channels]
-    clients = [FLClient(i, shards[i], CFG) for i in range(m)]
+    program = _program(model)
+    if model == "lm":
+        counts = rng.integers(1, 3, (m, LM_TOPICS))
+        streams = [TokenStream(LM_VOCAB, seed=seed, topic=t) for t in range(LM_TOPICS)]
+        shards = []
+        for i in range(m):
+            xs = [streams[t].batch(int(counts[i, t]), LM_SEQ) for t in range(LM_TOPICS)]
+            ys = [np.full((int(counts[i, t]),), t, np.int32) for t in range(LM_TOPICS)]
+            shards.append(
+                Dataset(np.concatenate(xs, 0), np.concatenate(ys, 0), LM_TOPICS)
+            )
+        test = Dataset(
+            np.concatenate([s.batch(10, LM_SEQ) for s in streams], 0),
+            np.concatenate([np.full((10,), t, np.int32) for t in range(LM_TOPICS)], 0),
+            LM_TOPICS,
+        )
+    else:
+        k = CFG.n_classes
+        counts = rng.integers(1, 3, (m, k))
+        train = heartbeat_like(rng, counts.sum(axis=0))
+        train.x = train.x[:, : CFG.seq_len, : CFG.in_channels]
+        shards = split_dataset_by_counts(rng, train, counts)
+        test = heartbeat_like(rng, np.full(k, 10))
+        test.x = test.x[:, : CFG.seq_len, : CFG.in_channels]
+    clients = [FLClient(i, shards[i], program) for i in range(m)]
     assignment = np.zeros((m, n_edges))
     assignment[np.arange(m), np.arange(m) % n_edges] = 1.0
     latency = rng.uniform(0.01, 0.2, (m, n_edges))
-    return clients, assignment, test, latency
+    return clients, assignment, test, latency, program
 
 
 def _time_interleaved(makers: Dict[str, object], repeats: int = 3) -> Dict[str, float]:
@@ -81,9 +121,10 @@ def _time_interleaved(makers: Dict[str, object], repeats: int = 3) -> Dict[str, 
     return best
 
 
-def bench_scale(m: int, n_edges: int) -> Dict[str, Optional[float]]:
-    clients, assignment, test, latency = _make_population(m, n_edges)
-    mk = dict(cfg=CFG, test=test, schedule=HFLSchedule(1, 1), seed=0)
+def bench_scale(m: int, n_edges: int, model: str = "cnn") -> Dict[str, Optional[float]]:
+    clients, assignment, test, latency, program = _make_population(m, n_edges, model=model)
+    mk = dict(program=program, test=test, schedule=HFLSchedule(1, 1), seed=0)
+    tag = "" if model == "cnn" else f"{model}_"  # cnn names stay PR-comparable
 
     makers = {
         "host": lambda: BatchedSyncEngine(clients, assignment, pipeline="host", **mk),
@@ -101,28 +142,50 @@ def bench_scale(m: int, n_edges: int) -> Dict[str, Optional[float]]:
     t_ref = t.get("loop")
     t_host, t_dev, t_async = t["host"], t["device"], t["async"]
 
+    prog = f"program={program.name}"
     if t_ref is not None:
-        emit(f"engine_sync_loop_m{m}", t_ref * 1e6, f"{m / t_ref:.1f} clients/sec")
-        emit(f"engine_batched_sync_m{m}", t_host * 1e6,
-             f"{m / t_host:.1f} clients/sec ({t_ref / t_host:.1f}x vs loop)")
+        emit(f"engine_sync_loop_{tag}m{m}", t_ref * 1e6,
+             f"{m / t_ref:.1f} clients/sec {prog}")
+        emit(f"engine_batched_sync_{tag}m{m}", t_host * 1e6,
+             f"{m / t_host:.1f} clients/sec ({t_ref / t_host:.1f}x vs loop) {prog}")
     else:
-        emit(f"engine_sync_loop_m{m}", 0.0, "skipped in quick mode (infeasible)")
-        emit(f"engine_batched_sync_m{m}", t_host * 1e6, f"{m / t_host:.1f} clients/sec")
-    emit(f"engine_device_sync_m{m}", t_dev * 1e6,
-         f"{m / t_dev:.1f} clients/sec ({t_host / t_dev:.2f}x vs pr1-engine)")
-    emit(f"engine_async_m{m}", t_async * 1e6, f"{m / t_async:.1f} clients/sec")
+        emit(f"engine_sync_loop_{tag}m{m}", 0.0,
+             f"skipped in quick mode (infeasible) {prog}")
+        emit(f"engine_batched_sync_{tag}m{m}", t_host * 1e6,
+             f"{m / t_host:.1f} clients/sec {prog}")
+    emit(f"engine_device_sync_{tag}m{m}", t_dev * 1e6,
+         f"{m / t_dev:.1f} clients/sec ({t_host / t_dev:.2f}x vs pr1-engine) {prog}")
+    emit(f"engine_async_{tag}m{m}", t_async * 1e6,
+         f"{m / t_async:.1f} clients/sec {prog}")
     return {"loop": t_ref, "host": t_host, "device": t_dev, "async": t_async}
 
 
-def main() -> None:
+def main(model: Optional[str] = None) -> None:
     start = mark()
-    sizes = [18, 128, 512, 2048]
-    n_edges = {18: 5, 128: 8, 512: 8, 2048: 8}
-    for m in sizes:
-        bench_scale(m, n_edges[m])
-    dump_json("BENCH_engine.json", start)
+    if model is None:
+        # default suite: the CNN trajectory at every scale, plus one MLP
+        # scale point (quick mode included) so CI tracks a non-CNN program
+        sizes = [18, 128, 512, 2048]
+        n_edges = {18: 5, 128: 8, 512: 8, 2048: 8}
+        for m in sizes:
+            bench_scale(m, n_edges[m])
+        bench_scale(128, 8, model="mlp")
+        dump_json("BENCH_engine.json", start)
+    else:
+        sizes = {"cnn": [18, 128, 512, 2048], "mlp": [18, 128, 512], "lm": [18, 128]}
+        for m in sizes[model]:
+            bench_scale(m, 8 if m > 18 else 5, model=model)
+        # single-model sweeps land in their own file so they never clobber
+        # the PR-tracked default-suite trajectory in BENCH_engine.json
+        dump_json(f"BENCH_engine_{model}.json", start)
 
 
 if __name__ == "__main__":
+    import argparse
+
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--model", default=None, choices=["cnn", "mlp", "lm"],
+                    help="bench one program's scale sweep (default: CNN suite + MLP point)")
+    args = ap.parse_args()
     print("name,us_per_call,derived")
-    main()
+    main(model=args.model)

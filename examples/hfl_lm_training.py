@@ -1,80 +1,56 @@
-"""Hierarchical FL for LM training — the paper's technique applied to the
-assigned architectures (DESIGN.md Sec. 3 mapping).
+"""Hierarchical FL for LM training — the paper's pipeline on a non-CNN
+workload, end to end.
 
-Four edge replicas of a reduced LM train on topic-skewed token streams
-(non-IID shards); edge level aggregates gradients every step (FedSGD),
-the cloud syncs replicas every T steps.  EARA assigns topic shards to edges
-by their token-class histograms, vs. a naive contiguous assignment.
+Builds the topic-skewed token-stream population (``build_scenario(model=
+"lm")``): each EU's shard is dominated by one Markov topic, the LM
+counterpart of the paper's per-EU class imbalance.  EARA assigns EUs to
+edges by their TOPIC histograms (same KLD objective, topics = classes),
+then the batched sync engine trains the small causal transformer-LM
+through the device-resident round pipeline — the exact same engine code
+that runs the paper's CNN.
 
-  PYTHONPATH=src python examples/hfl_lm_training.py --steps 30 --T 5
+  PYTHONPATH=src python examples/hfl_lm_training.py --rounds 3 --scale 0.1
 """
 import argparse
 
-import jax
-import jax.numpy as jnp
-import numpy as np
-
-from repro.configs import get_smoke_config
-from repro.core import dba_assignment, eara, total_kld_uniform
-from repro.core.lp import solve_lp_eg
-from repro.core.assignment import round_sca
-from repro.data import TokenStream
-from repro.distributed.hfl_mesh import init_hfl_state, make_hfl_train_step
-from repro.models import init_params
-from repro.training.optimizers import adam
+from repro.federated import build_scenario
 
 
 def main() -> None:
     ap = argparse.ArgumentParser()
-    ap.add_argument("--arch", default="phi3-mini-3.8b")
-    ap.add_argument("--steps", type=int, default=30)
-    ap.add_argument("--T", type=int, default=5, help="cloud sync period")
-    ap.add_argument("--edges", type=int, default=2)
-    ap.add_argument("--shards", type=int, default=8)
+    ap.add_argument("--rounds", type=int, default=3, help="cloud rounds")
+    ap.add_argument("--scale", type=float, default=0.1, help="sequences-per-EU scale")
+    ap.add_argument("--eus", type=int, default=12)
+    ap.add_argument("--edges", type=int, default=4)
+    ap.add_argument("--topics", type=int, default=4)
+    ap.add_argument("--engine", default="sync", choices=["reference", "sync", "async"])
+    ap.add_argument("--seed", type=int, default=0)
     args = ap.parse_args()
 
-    cfg = get_smoke_config(args.arch)
-    # non-IID shards: each stream has a dominant "topic" (token-class skew)
-    streams = [TokenStream(cfg.vocab_size, seed=0, topic=i % 4) for i in range(args.shards)]
-    hist = np.stack([
-        np.bincount(s.batch(4, 256).ravel() % 16, minlength=16) for s in streams
-    ])
-    lam_frac = np.asarray(solve_lp_eg(jnp.asarray(hist, jnp.float32),
-                                      jnp.asarray(np.ones((args.shards, args.edges), bool))))
-    lam = round_sca(lam_frac, np.ones((args.shards, args.edges), bool))
-    naive = np.zeros_like(lam)
-    for i in range(args.shards):
-        naive[i, i * args.edges // args.shards] = 1.0
-    print("shard->edge KLD: EARA-style =",
-          float(total_kld_uniform(jnp.asarray(lam), jnp.asarray(hist))),
-          " naive contiguous =",
-          float(total_kld_uniform(jnp.asarray(naive), jnp.asarray(hist))))
-
-    params = init_params(jax.random.PRNGKey(0), cfg)
-    opt = adam(1e-3)
-    state = init_hfl_state(params, opt, args.edges)
-    local = jax.jit(make_hfl_train_step(cfg, opt, sync=False))
-    sync = jax.jit(make_hfl_train_step(cfg, opt, sync=True))
-
-    def edge_batch(assignment):
-        batches = []
-        for e in range(args.edges):
-            members = np.nonzero(assignment[:, e])[0]
-            s = streams[int(members[0])] if len(members) else streams[0]
-            b = s.train_batch(4, 32)
-            batches.append(b)
-        return {
-            k: jnp.stack([jnp.asarray(b[k]) for b in batches]) for k in batches[0]
-        }
-
-    for step_i in range(1, args.steps + 1):
-        fn = sync if step_i % args.T == 0 else local
-        state, m = fn(state, edge_batch(lam))
-        if step_i % args.T == 0 or step_i == 1:
-            print(f"step {step_i:3d} loss={float(m['total_loss']):.3f} "
-                  f"edge_spread={float(m['edge_loss_spread']):.4f} "
-                  f"{'(cloud sync)' if step_i % args.T == 0 else ''}")
-    print("done: cross-edge traffic ran every", args.T, "steps instead of every step")
+    sc = build_scenario(
+        "lm", seed=args.seed, scale=args.scale, n_test_per_class=32,
+        lm_eus=args.eus, lm_edges=args.edges, lm_topics=args.topics,
+    )
+    print(
+        f"LM population: {len(sc.clients)} EUs x ~{len(sc.clients[0].shard)} "
+        f"sequences, {args.topics} topics, model {sc.model_bits / 8e3:.1f} kB"
+    )
+    eara = sc.assign("eara-sca")
+    dba = sc.assign("dba")
+    print(
+        f"edge TOPIC imbalance (total KLD): eara-sca={eara.kld_total:.3f}  "
+        f"dba={dba.kld_total:.3f}  (lower = better-mixed edges)"
+    )
+    res = sc.simulate(eara.lam, cloud_rounds=args.rounds, seed=args.seed,
+                      engine=args.engine)
+    for m in res.history:
+        print(
+            f"cloud round {m.cloud_round}: next-token acc={m.test_acc:.4f} "
+            f"mean local loss={m.mean_local_loss:.3f}"
+        )
+    traffic = sum(res.accountant.eu_traffic_bits().values()) / 8e6
+    print(f"done: {res.accountant.edge_rounds} edge rounds, "
+          f"{traffic:.2f} MB total EU<->edge traffic")
 
 
 if __name__ == "__main__":

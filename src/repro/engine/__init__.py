@@ -1,7 +1,11 @@
 """Scalable batched/async HFL simulation engine.
 
 A second simulation backend alongside ``federated.simulation.HFLSimulation``
-(the readable reference), built for large client counts:
+(the readable reference), built for large client counts.  Every module is
+model-agnostic: the workload is a ``ClientProgram``
+(``federated.programs`` — CNN, MLP, transformer-LM, or anything registered
+there), and the engines only ever touch it through its loss/init hooks and
+flat parameter rows:
 
 ====================  =====================================================
 module                role

@@ -14,8 +14,11 @@ soon as a configurable quorum of its EUs has reported:
     FedAvg and the ``quorum=1.0, staleness_decay=1.0`` corner recovers
     synchronous semantics for single-connectivity assignments (modulo wall
     clock).  A DCA client is dispatched independently per edge — it trains
-    once per membership from that edge's model and pays a full uplink each
-    time, unlike the sync simulators' train-once-multicast semantics;
+    once per membership from that edge's model — but its uplink is charged
+    like the sync simulators': ONE multicast upload (~3% overhead) per
+    dispatch, not a full uplink per membership, and uploads are charged at
+    transmission time (dispatch), so stragglers dropped at the cloud
+    barrier still spent their radio energy;
   * after ``edge_per_cloud`` aggregations an edge reports to the cloud; the
     cloud round closes when every edge has reported (the hierarchy's only
     barrier), and in-flight stragglers are dropped at that barrier.
@@ -47,8 +50,8 @@ from repro.engine.events import EventQueue
 from repro.engine.flatten import BACKENDS, FlatPack, compress_flat_upload, flat_mean
 from repro.engine.store import DeviceShardStore
 from repro.federated.client import FLClient
+from repro.federated.programs import as_program
 from repro.federated.simulation import RoundMetrics, SimResult, evaluate
-from repro.models.cnn1d import CNNConfig, cnn_init
 from repro.utils.tree import tree_size_bytes
 
 
@@ -73,7 +76,7 @@ class AsyncHFLEngine:
         self,
         clients: List[FLClient],
         assignment: np.ndarray,
-        cfg: CNNConfig,
+        program,
         test: Dataset,
         latency: np.ndarray,  # (M, N) per-EU upload latency incl. compute, s
         schedule: HFLSchedule = HFLSchedule(1, 1),
@@ -91,7 +94,7 @@ class AsyncHFLEngine:
             raise ValueError(f"backend must be one of {BACKENDS}, got {backend!r}")
         self.clients = clients
         self.assignment = np.asarray(assignment)
-        self.cfg = cfg
+        self.program = as_program(program)  # bare CNNConfig still accepted
         self.test = test
         self.latency = np.asarray(latency)
         self.schedule = schedule
@@ -102,7 +105,7 @@ class AsyncHFLEngine:
         self.backhaul_s = backhaul_s
         self.backend = backend
         self.compression = compression
-        self.params = cnn_init(jax.random.PRNGKey(seed), cfg)
+        self.params = self.program.init(jax.random.PRNGKey(seed))
         self.pack = FlatPack(self.params)
         self.accountant = CommAccountant(model_bits=tree_size_bytes(self.params) * 8)
         self._uplink_bits = self.accountant.model_bits
@@ -146,7 +149,18 @@ class AsyncHFLEngine:
                     self.schedule.local_steps, tag=(i, j),
                 )
             )
-        trained = run_cohorts(jobs, self.cfg, self.pack, store=self.store)
+        trained = run_cohorts(jobs, self.program, self.pack, store=self.store)
+        # uplink accounting matches the sync simulators' multicast semantics:
+        # a client dispatched to k edges at once (DCA) still trains each
+        # membership separately, but TRANSMITS once on a shared resource
+        # share (paper: ~3% overhead), so it is charged one multicast
+        # uplink per dispatch, not k full uplinks
+        edges_of: Dict[int, int] = {}
+        for i, _ in pairs:
+            edges_of[i] = edges_of.get(i, 0) + 1
+        for i, k in edges_of.items():
+            mc = self.accountant.dca_multicast_overhead if k > 1 else 0.0
+            self.accountant.on_eu_exchange(i, up_bits=self._uplink_bits * (1.0 + mc))
         for (i, j), job in zip(pairs, jobs):
             upd = trained.row((i, j))
             self._losses.append(trained.loss[(i, j)])
@@ -230,7 +244,6 @@ class AsyncHFLEngine:
                 edge = edges[j]
                 if edge.rounds_done >= self.schedule.edge_per_cloud:
                     continue  # late straggler: edge already reported to cloud
-                self.accountant.on_eu_exchange(ev.payload["client"], up_bits=self._uplink_bits)
                 edge.buffer.append(
                     (
                         ev.payload["client"],
@@ -252,7 +265,7 @@ class AsyncHFLEngine:
             )
             self.accountant.on_cloud_sync(n)
             if b % eval_every == 0 or b == cloud_rounds:
-                acc = evaluate(self.pack.unravel(global_row), self.cfg, self.test)
+                acc = evaluate(self.pack.unravel(global_row), self.program, self.test)
                 history.append(
                     RoundMetrics(
                         b, acc, 0.0, float(np.mean(self._losses)) if self._losses else 0.0

@@ -23,8 +23,7 @@ import numpy as np
 
 from repro.engine.flatten import ravel_batched, unravel_batched
 from repro.federated.client import FLClient, _bucket
-from repro.models.cnn1d import CNNConfig, cnn_apply
-from repro.training.loss import softmax_xent
+from repro.federated.programs import ClientProgram
 from repro.training.optimizers import adam
 
 
@@ -80,8 +79,10 @@ def make_job(
     )
 
 
-def _cohort_epoch_body(params, xb, yb, cfg: CNNConfig, n_steps: int, lr: float, impl: str):
-    """params: pytree with leading cohort axis C; xb: (C, n_steps, B, L, Ch).
+def _cohort_epoch_body(
+    params, xb, yb, program: ClientProgram, n_steps: int, lr: float, impl: str
+):
+    """params: pytree with leading cohort axis C; xb: (C, n_steps, B, *feat).
 
     Equivalent to ``vmap(_local_epoch)`` but with the steps-scan OUTSIDE the
     vmap: only the per-step gradient is vmapped, while the Adam update runs
@@ -90,16 +91,18 @@ def _cohort_epoch_body(params, xb, yb, cfg: CNNConfig, n_steps: int, lr: float, 
     the scan avoids shuffling the (C, D)-sized optimizer carry through a
     vmapped scan, which dominates wall clock at large C.
 
-    ``impl`` picks the conv formulation: "gemm" (default in the engines)
+    ``program`` supplies the per-example loss; ``impl`` threads the
+    formulation knob through (for the CNN: "gemm" — the engines' default —
     lowers the vmapped per-client convolutions to batched GEMMs instead of
     the C-group convolution XLA:CPU serializes; "xla" is the PR 1 path,
-    kept for the benchmark baseline.
+    kept for the benchmark baseline.  Single-formulation programs ignore
+    it.)
     """
     opt = adam(lr=lr)
     opt_state = opt.init(params)
 
     def client_loss(p, x, y):
-        return softmax_xent(cnn_apply(p, cfg, x, conv_impl=impl), y)
+        return program.loss(p, x, y, impl=impl)
 
     grad_fn = jax.vmap(jax.value_and_grad(client_loss))
 
@@ -129,8 +132,10 @@ def _cohort_epoch_body(params, xb, yb, cfg: CNNConfig, n_steps: int, lr: float, 
     return params, losses.mean(axis=0)
 
 
-@partial(jax.jit, static_argnames=("cfg", "n_steps", "lr", "impl"), donate_argnums=(0,))
-def _cohort_epoch(params, xb, yb, cfg: CNNConfig, n_steps: int, lr: float, impl: str = "gemm"):
+@partial(jax.jit, static_argnames=("program", "n_steps", "lr", "impl"), donate_argnums=(0,))
+def _cohort_epoch(
+    params, xb, yb, program: ClientProgram, n_steps: int, lr: float, impl: str = "gemm"
+):
     """Tree-major cohort epoch (see ``_cohort_epoch_body``).
 
     The params carry is donated: epochs chain ``params`` through repeated
@@ -138,14 +143,16 @@ def _cohort_epoch(params, xb, yb, cfg: CNNConfig, n_steps: int, lr: float, impl:
     params (and with it the Adam carry) in place instead of
     double-buffering it.
     """
-    return _cohort_epoch_body(params, xb, yb, cfg, n_steps, lr, impl)
+    return _cohort_epoch_body(params, xb, yb, program, n_steps, lr, impl)
 
 
 @partial(
-    jax.jit, static_argnames=("spec", "cfg", "n_steps", "lr", "impl"), donate_argnums=(0,)
+    jax.jit,
+    static_argnames=("spec", "program", "n_steps", "lr", "impl"),
+    donate_argnums=(0,),
 )
 def _cohort_epoch_flat(
-    flat, xb, yb, spec, cfg: CNNConfig, n_steps: int, lr: float, impl: str = "gemm"
+    flat, xb, yb, spec, program: ClientProgram, n_steps: int, lr: float, impl: str = "gemm"
 ):
     """Flat-major cohort epoch: (C, D) in, (C, D) out, one dispatch.
 
@@ -153,10 +160,12 @@ def _cohort_epoch_flat(
     tree unravel/ravel happens INSIDE the jit so the per-leaf slices fuse
     with their consumers instead of materializing between dispatches, and
     the donated (C, D) carry can be updated in place across epochs.
-    ``spec`` is the model's (hashable) ``TreeSpec``.
+    ``spec`` is the model's (hashable) ``TreeSpec``; ``program`` is equally
+    hashable (frozen dataclass), so the jit cache is keyed on program
+    identity and every registered workload shares this one entry point.
     """
     params = unravel_batched(spec, flat)
-    params, loss = _cohort_epoch_body(params, xb, yb, cfg, n_steps, lr, impl)
+    params, loss = _cohort_epoch_body(params, xb, yb, program, n_steps, lr, impl)
     return ravel_batched(params), loss
 
 
@@ -200,11 +209,12 @@ def _stack_starts(jobs: Sequence[LocalJob]) -> "jnp.ndarray":
 
 
 def run_cohorts(
-    jobs: Sequence[LocalJob], cfg: CNNConfig, pack, store=None, impl: str = "gemm"
+    jobs: Sequence[LocalJob], program: ClientProgram, pack, store=None, impl: str = "gemm"
 ) -> CohortResult:
     """Train every job, batching same-shape clients into vmapped cohorts.
 
-    ``pack`` is the model's ``engine.flatten.FlatPack``.  Multi-epoch
+    ``program`` is the clients' ``ClientProgram``; ``pack`` is the matching
+    ``engine.flatten.FlatPack``.  Multi-epoch
     schedules run epoch-by-epoch with the cohort's params carried across
     epochs, matching the reference's sequential-epoch semantics.
 
@@ -240,7 +250,7 @@ def run_cohorts(
             else:
                 xb = jnp.asarray(np.stack([j.client.shard.x[j.idx[e]] for j in members]))
                 yb = jnp.asarray(np.stack([j.client.shard.y[j.idx[e]] for j in members]))
-            params, loss = _cohort_epoch(params, xb, yb, cfg, steps, lr, impl)
+            params, loss = _cohort_epoch(params, xb, yb, program, steps, lr, impl)
         mats.append(pack.ravel_batched(params))
         loss = np.asarray(loss)
         for c, job in enumerate(members):
@@ -282,9 +292,22 @@ class CohortPlan:
     and fills per-group index tensors.  This replaces the per-round
     ``LocalJob``/``make_job`` object churn of the host pipeline (~2x less
     host time per round at M=512).
+
+    The plan is keyed on the clients' ``program``: every client must train
+    the same ``ClientProgram`` (that is what makes the stacked (C, D)
+    cohort rows meaningful), and the engine tags its jitted epoch calls
+    with ``plan.program`` so two engines over different workloads can never
+    share a grouping by accident.
     """
 
-    def __init__(self, clients: Sequence[FLClient]):
+    def __init__(self, clients: Sequence[FLClient], program: ClientProgram | None = None):
+        self.program = program if program is not None else clients[0].program
+        for c in clients:
+            if c.program != self.program:
+                raise ValueError(
+                    f"client {c.cid} trains {c.program.name!r}, plan is for "
+                    f"{self.program.name!r} — cohorts cannot mix programs"
+                )
         self.sizes = np.array([len(c.shard) for c in clients], np.int64)
         self.steps = np.zeros(len(clients), np.int64)
         self._group_key: Dict[int, Tuple] = {}

@@ -52,10 +52,23 @@ _MAX_ONEHOT_SEGMENTS = 32
 
 
 class FlatPack:
-    """Tree <-> flat-row converter bound to one model layout."""
+    """Tree <-> flat-row converter bound to one model layout.
+
+    Works for ANY client program's parameter pytree (CNN dicts, the MLP's
+    dense pairs, the transformer's tuple-of-stacked-blocks), with one
+    requirement checked up front: every leaf must share one dtype.  The
+    flat row is a single concatenated buffer, so mixed-dtype trees would
+    silently promote on ravel and cast back on unravel — exact for the
+    uniform-fp32 programs this repo trains, lossy in general.
+    """
 
     def __init__(self, template_tree):
         self.spec: TreeSpec = tree_spec(template_tree)
+        if len(set(self.spec.dtypes)) > 1:
+            raise ValueError(
+                "FlatPack requires a uniform leaf dtype for an exact "
+                f"ravel/unravel round-trip; got {sorted(set(map(str, self.spec.dtypes)))}"
+            )
 
     @property
     def dim(self) -> int:

@@ -6,9 +6,12 @@ and a fresh host->device upload of the full batch tensor per epoch of
 every round.  At M >= 512 that host loop is the dominant per-round cost
 once training itself is batched.
 
-``DeviceShardStore`` pads all client shards into ONE ``(M, n_max, L, Ch)``
+``DeviceShardStore`` pads all client shards into ONE ``(M, n_max, *feat)``
 device array at engine construction (a one-time cost outside the round
-loop).  Per-step batches are then assembled by a single jitted gather from
+loop).  The feature block is whatever the client program trains on — rank
+and dtype are taken from the shards themselves: ``(L, Ch)`` float32
+signals for the CNN/MLP programs, ``(S,)`` int32 token sequences for the
+LM.  Per-step batches are then assembled by a single jitted gather from
 sample indices: the only host->device traffic per epoch is the small
 ``(C, steps, batch)`` int32 index tensor the RNG stream produces anyway.
 
@@ -37,9 +40,10 @@ MAX_PADDING_RATIO = 16.0
 
 @jax.jit
 def _store_gather(x, y, cids, idx):
-    """x: (M, n_max, L, Ch); y: (M, n_max); cids: (C,); idx: (C, S, B).
+    """x: (M, n_max, *feat); y: (M, n_max); cids: (C,); idx: (C, S, B).
 
-    Returns (C, S, B, L, Ch) batches and (C, S, B) labels in one gather.
+    Returns (C, S, B, *feat) batches and (C, S, B) labels in one gather;
+    the advanced-index broadcast is rank-agnostic over the feature block.
     """
     c = cids[:, None, None]
     return x[c, idx], y[c, idx]
@@ -66,7 +70,8 @@ class DeviceShardStore:
                 break
         if feat is None:  # every shard empty: 1-sample zero store, never read
             feat = shards[0].x.shape[1:]
-        xs = np.zeros((len(shards), n_max) + tuple(feat), np.float32)
+        # feature dtype follows the data: float signals or int token ids
+        xs = np.zeros((len(shards), n_max) + tuple(feat), shards[0].x.dtype)
         ys = np.zeros((len(shards), n_max), np.int32)
         for i, s in enumerate(shards):
             if len(s) == 0:

@@ -2,7 +2,10 @@
 
 Same semantics as ``federated.simulation.HFLSimulation`` — the same RNG
 stream, participation sampling, DCA starts, schedule, and accounting — but
-the hot loop is restructured for scale:
+the hot loop is restructured for scale.  The engine is model-agnostic: it
+trains whatever ``ClientProgram`` (``federated.programs``) the clients
+carry — the paper's CNN, the MLP, or the transformer-LM — through the same
+flat-buffer pipelines:
 
   * local training: one jitted cohort call per same-shape client group
     (``engine.cohort``) instead of one jitted call per client;
@@ -58,13 +61,13 @@ from repro.engine.flatten import (
 )
 from repro.engine.store import DeviceShardStore
 from repro.federated.client import FLClient
+from repro.federated.programs import as_program
 from repro.federated.simulation import (
     RoundMetrics,
     SimResult,
     central_reference_step,
     evaluate,
 )
-from repro.models.cnn1d import CNNConfig, cnn_init
 from repro.utils.tree import tree_size_bytes
 
 PIPELINES = ("device", "host")
@@ -85,7 +88,7 @@ class BatchedSyncEngine:
         self,
         clients: List[FLClient],
         assignment: np.ndarray,
-        cfg: CNNConfig,
+        program,
         test: Dataset,
         schedule: HFLSchedule = HFLSchedule(1, 1),
         seed: int = 0,
@@ -103,12 +106,12 @@ class BatchedSyncEngine:
             raise ValueError(f"backend must be one of {BACKENDS}, got {backend!r}")
         self.clients = clients
         self.assignment = assignment
-        self.cfg = cfg
+        self.program = as_program(program)  # bare CNNConfig still accepted
         self.test = test
         self.schedule = schedule
         self.rng = np.random.default_rng(seed)
         self.upp = upp
-        self.params = cnn_init(jax.random.PRNGKey(seed), cfg)
+        self.params = self.program.init(jax.random.PRNGKey(seed))
         self.backend = backend
         self.compression = compression
         self.pipeline = pipeline
@@ -119,7 +122,7 @@ class BatchedSyncEngine:
             self.central_data = Dataset(
                 np.concatenate([c.shard.x for c in clients], 0),
                 np.concatenate([c.shard.y for c in clients], 0),
-                cfg.n_classes,
+                self.program.n_classes,
             )
             self.central_batch = central_batch
         model_bits = tree_size_bytes(self.params) * 8
@@ -150,7 +153,7 @@ class BatchedSyncEngine:
             np.int64
         )
         self.store = DeviceShardStore(clients) if pipeline == "device" else None
-        self._plan = CohortPlan(clients) if pipeline == "device" else None
+        self._plan = CohortPlan(clients, self.program) if pipeline == "device" else None
 
     def _mean(self, rows: List[jnp.ndarray], weights) -> jnp.ndarray:
         return flat_mean(
@@ -215,7 +218,7 @@ class BatchedSyncEngine:
             for e in range(g.idx.shape[1]):
                 xb, yb = self.store.gather(g.members, g.idx[:, e])
                 flat, loss = _cohort_epoch_flat(
-                    flat, xb, yb, self.pack.spec, self.cfg, g.steps, g.lr
+                    flat, xb, yb, self.pack.spec, self.program, g.steps, g.lr
                 )
             mats.append(flat)
             loss_chunks.append(loss)
@@ -294,7 +297,7 @@ class BatchedSyncEngine:
             )
             jobs.append(make_job(cl, start, self.rng, epochs=self.schedule.local_steps))
             job_edges.append(edges)
-        trained = run_cohorts(jobs, self.cfg, self.pack, impl="xla")
+        trained = run_cohorts(jobs, self.program, self.pack, impl="xla")
         compressing = self.compression is not None and self.compression.kind != "none"
         losses = []
         new_cids: List[List[int]] = [[] for _ in range(n)]
@@ -329,7 +332,8 @@ class BatchedSyncEngine:
 
     def _central_step(self):
         self.central_params = central_reference_step(
-            self.central_params, self.central_data, self.rng, self.central_batch, self.cfg
+            self.central_params, self.central_data, self.rng, self.central_batch,
+            self.program,
         )
 
     def run(self, cloud_rounds: int, eval_every: int = 1) -> SimResult:
@@ -381,7 +385,7 @@ class BatchedSyncEngine:
                     self.pack.unravel(global_row), self.central_params
                 )
             if b % eval_every == 0 or b == cloud_rounds:
-                acc = evaluate(self.pack.unravel(global_row), self.cfg, self.test)
+                acc = evaluate(self.pack.unravel(global_row), self.program, self.test)
                 history.append(
                     RoundMetrics(b, acc, div, float(np.mean(losses)) if losses else 0.0)
                 )

@@ -1,4 +1,13 @@
 from repro.federated.client import FLClient
+from repro.federated.programs import (
+    PROGRAMS,
+    ClientProgram,
+    CNNProgram,
+    LMProgram,
+    MLPProgram,
+    as_program,
+    tiny_lm_config,
+)
 from repro.federated.simulation import (
     HFLSimulation,
     RoundMetrics,
@@ -9,12 +18,19 @@ from repro.federated.simulation import (
 from repro.federated.scenario import Scenario, build_scenario
 
 __all__ = [
+    "CNNProgram",
+    "ClientProgram",
     "FLClient",
     "HFLSimulation",
+    "LMProgram",
+    "MLPProgram",
+    "PROGRAMS",
     "RoundMetrics",
     "Scenario",
     "SimResult",
+    "as_program",
     "build_scenario",
     "centralized_baseline",
     "evaluate",
+    "tiny_lm_config",
 ]

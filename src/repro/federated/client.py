@@ -2,8 +2,12 @@
 
 Clients are stateless across rounds (fresh Adam state per round, the common
 FedAvg convention and the paper's setup: 1 local epoch, batch 10, Adam 1e-3).
-Local updates are jit-compiled once per (steps-bucket) to avoid per-shard
-recompilation; shards are padded by resampling to fill the bucket.
+Local updates are jit-compiled once per (program, steps-bucket) to avoid
+per-shard recompilation; shards are padded by resampling to fill the bucket.
+
+The model itself is a ``ClientProgram`` (``federated.programs``): the client
+only owns the shard and the local-SGD hyperparameters, so the same loop
+trains the paper's CNN, the MLP, or the transformer-LM unchanged.
 """
 from __future__ import annotations
 
@@ -16,8 +20,7 @@ import jax.numpy as jnp
 import numpy as np
 
 from repro.data.synthetic_health import Dataset
-from repro.models.cnn1d import CNNConfig, cnn_apply
-from repro.training.loss import softmax_xent
+from repro.federated.programs import ClientProgram, as_program
 from repro.training.optimizers import adam
 
 _BUCKETS = (1, 2, 4, 8, 16, 32, 64, 128)
@@ -30,9 +33,9 @@ def _bucket(steps: int) -> int:
     return _BUCKETS[-1]
 
 
-@partial(jax.jit, static_argnames=("cfg", "n_steps", "lr"))
-def _local_epoch(params, xb, yb, cfg: CNNConfig, n_steps: int, lr: float):
-    """xb: (n_steps, B, L, C); yb: (n_steps, B). One pass of Adam."""
+@partial(jax.jit, static_argnames=("program", "n_steps", "lr"))
+def _local_epoch(params, xb, yb, program: ClientProgram, n_steps: int, lr: float):
+    """xb: (n_steps, B, *feat); yb: (n_steps, B). One pass of Adam."""
     opt = adam(lr=lr)
     opt_state = opt.init(params)
 
@@ -41,7 +44,7 @@ def _local_epoch(params, xb, yb, cfg: CNNConfig, n_steps: int, lr: float):
         x, y = batch
 
         def loss_fn(p):
-            return softmax_xent(cnn_apply(p, cfg, x), y)
+            return program.loss(p, x, y)
 
         loss, grads = jax.value_and_grad(loss_fn)(params)
         params, opt_state = opt.update(params, grads, opt_state, step)
@@ -59,10 +62,13 @@ class FLClient:
 
     cid: int
     shard: Dataset
-    cfg: CNNConfig
+    program: ClientProgram
     batch_size: int = 10
     lr: float = 1e-3
     max_steps: int = 128
+
+    def __post_init__(self):
+        self.program = as_program(self.program)  # bare CNNConfig still works
 
     @property
     def data_size(self) -> int:
@@ -87,6 +93,6 @@ class FLClient:
             idx = idx[:need].reshape(steps, self.batch_size)
             xb = jnp.asarray(self.shard.x[idx])
             yb = jnp.asarray(self.shard.y[idx])
-            params, l = _local_epoch(params, xb, yb, self.cfg, steps, self.lr)
+            params, l = _local_epoch(params, xb, yb, self.program, steps, self.lr)
             loss = float(l)
         return params, loss

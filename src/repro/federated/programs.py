@@ -1,0 +1,280 @@
+"""Model-agnostic client programs: what one EU trains, behind one interface.
+
+The paper targets "a generic class of machine learning models that are
+trained using gradient-descent-based schemes", but until PR 3 every engine
+layer imported ``cnn_apply``/``CNNConfig`` directly.  A ``ClientProgram``
+bundles everything the HFL machinery needs to know about a workload:
+
+  * ``init(key) -> params``       — fresh parameter pytree (any structure;
+                                    the engines flatten it through
+                                    ``engine.flatten.FlatPack``);
+  * ``apply(params, x) -> logits``— forward pass on a feature batch;
+  * ``loss(params, x, y)``        — mean per-example training loss (the
+                                    quantity ``jax.value_and_grad`` sees in
+                                    the cohort step and the reference
+                                    ``_local_epoch``);
+  * ``metric(params, x, y)``      — mean per-example eval metric in [0, 1]
+                                    (classification accuracy / next-token
+                                    accuracy), consumed by ``evaluate``;
+  * feature/label specs           — ``feat_shape`` / ``feat_dtype`` pin the
+                                    ``DeviceShardStore`` layout (float
+                                    signals for the CNN/MLP, int32 token
+                                    sequences for the LM), ``n_classes`` is
+                                    the label/topic alphabet the KLD-aware
+                                    assignment balances over.
+
+Programs are FROZEN dataclasses: they are hashable by value, so they ride
+through ``jax.jit`` as static arguments and equal configs share one
+compiled program (no cache churn when a program is re-created).
+
+``PROGRAMS`` (a ``utils.registry.Registry``) maps names to factories —
+``"cnn"`` (the paper's 1-D CNN, both ``conv_impl`` formulations), ``"mlp"``
+(flattened-feature classifier built from ``models.modules.dense``), and
+``"lm"`` (a small causal transformer over ``models.transformer``).  New
+workloads register a factory and immediately run under every engine,
+pipeline, and compression path.
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Tuple
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.models.cnn1d import HEARTBEAT_CNN, CNNConfig, cnn_apply, cnn_init
+from repro.models.config import ModelConfig
+from repro.models.modules import dense, dense_init
+from repro.models.transformer import forward as transformer_forward
+from repro.models.transformer import init_params as transformer_init
+from repro.training.loss import accuracy, lm_loss, softmax_xent
+from repro.utils.registry import Registry
+
+PROGRAMS = Registry("client_program")
+
+
+@dataclasses.dataclass(frozen=True)
+class ClientProgram:
+    """Base class; subclasses add frozen config fields and override hooks.
+
+    ``impl`` threads the engines' formulation knob through to programs that
+    have more than one numerically-distinct forward (the CNN's "xla" conv
+    vs the cohort step's batched-GEMM "gemm" form); programs with a single
+    formulation ignore it.  ``impl=None`` means the program's default.
+    """
+
+    @property
+    def name(self) -> str:
+        raise NotImplementedError
+
+    # -- model ----------------------------------------------------------------
+    def init(self, key):
+        raise NotImplementedError
+
+    def apply(self, params, x, *, impl: str | None = None):
+        raise NotImplementedError
+
+    def loss(self, params, x, y, *, impl: str | None = None):
+        """Mean training loss of a batch; the default is classifier xent."""
+        return softmax_xent(self.apply(params, x, impl=impl), y)
+
+    def metric(self, params, x, y):
+        """Mean per-example eval metric (default: classification accuracy)."""
+        return accuracy(self.apply(params, x), y)
+
+    # -- data specs -----------------------------------------------------------
+    @property
+    def feat_shape(self) -> Tuple[int, ...]:
+        raise NotImplementedError
+
+    @property
+    def feat_dtype(self):
+        return np.float32
+
+    @property
+    def n_classes(self) -> int:
+        raise NotImplementedError
+
+
+@dataclasses.dataclass(frozen=True)
+class CNNProgram(ClientProgram):
+    """The paper's 1-D CNN classifier (``models.cnn1d``).
+
+    ``impl`` selects the conv formulation: ``"xla"`` (default,
+    ``lax.conv_general_dilated`` — the reference simulator's path) or
+    ``"gemm"`` (window-concat matmuls, the vmapped cohort-step form).
+    """
+
+    cfg: CNNConfig = HEARTBEAT_CNN
+
+    @property
+    def name(self) -> str:
+        return "cnn"
+
+    def init(self, key):
+        return cnn_init(key, self.cfg)
+
+    def apply(self, params, x, *, impl: str | None = None):
+        return cnn_apply(params, self.cfg, x, conv_impl=impl or "xla")
+
+    @property
+    def feat_shape(self) -> Tuple[int, ...]:
+        return (self.cfg.seq_len, self.cfg.in_channels)
+
+    @property
+    def n_classes(self) -> int:
+        return self.cfg.n_classes
+
+
+@dataclasses.dataclass(frozen=True)
+class MLPProgram(ClientProgram):
+    """Flattened-feature MLP classifier: dense -> gelu -> dense.
+
+    Runs on the same ``(L, Ch)`` float shards as the CNN (the forward
+    flattens), so every CNN scenario doubles as an MLP scenario.
+    """
+
+    feat: Tuple[int, ...] = (187, 1)
+    classes: int = 5
+    hidden: int = 64
+
+    @property
+    def name(self) -> str:
+        return "mlp"
+
+    @property
+    def d_in(self) -> int:
+        return int(np.prod(self.feat))
+
+    def init(self, key):
+        k1, k2 = jax.random.split(key)
+        return {
+            "fc1": dense_init(k1, self.d_in, self.hidden, jnp.float32, bias=True),
+            "fc2": dense_init(k2, self.hidden, self.classes, jnp.float32, bias=True),
+        }
+
+    def apply(self, params, x, *, impl: str | None = None):
+        del impl  # single formulation
+        h = x.reshape(x.shape[0], -1)
+        h = jax.nn.gelu(dense(params["fc1"], h))
+        return dense(params["fc2"], h)
+
+    @property
+    def feat_shape(self) -> Tuple[int, ...]:
+        return tuple(self.feat)
+
+    @property
+    def n_classes(self) -> int:
+        return self.classes
+
+
+def tiny_lm_config(
+    vocab_size: int = 128,
+    seq_len: int = 32,
+    d_model: int = 32,
+    n_layers: int = 2,
+    n_heads: int = 2,
+    d_ff: int = 64,
+) -> ModelConfig:
+    """A federated-IoT-sized causal transformer (~10k params at defaults).
+
+    fp32 + tied embeddings: FL aggregation averages the flat parameter
+    rows, so reduced-precision drift would break the engines' host/device
+    parity guarantees for no memory win at this scale.
+    """
+    return ModelConfig(
+        name=f"lm-tiny-v{vocab_size}-d{d_model}",
+        family="dense",
+        n_layers=n_layers,
+        d_model=d_model,
+        n_heads=n_heads,
+        n_kv_heads=n_heads,
+        d_ff=d_ff,
+        vocab_size=vocab_size,
+        act="gelu",
+        tie_embeddings=True,
+        max_seq=seq_len,
+        dtype="float32",
+    )
+
+
+@dataclasses.dataclass(frozen=True)
+class LMProgram(ClientProgram):
+    """Small causal transformer-LM (``models.transformer``) on token shards.
+
+    Shards hold ``(N, seq_len)`` int32 token sequences; the training signal
+    is next-token prediction on the sequence itself, so the Dataset label
+    ``y`` carries the sequence's TOPIC id instead — that is what gives the
+    KLD-aware assignment an imbalance to exploit (``n_classes`` = topics).
+    """
+
+    cfg: ModelConfig = dataclasses.field(default_factory=tiny_lm_config)
+    seq_len: int = 32
+    n_topics: int = 4
+
+    @property
+    def name(self) -> str:
+        return "lm"
+
+    def init(self, key):
+        return transformer_init(key, self.cfg)
+
+    def apply(self, params, x, *, impl: str | None = None):
+        del impl  # single formulation
+        logits, _ = transformer_forward(params, self.cfg, x)
+        return logits
+
+    def loss(self, params, x, y, *, impl: str | None = None):
+        del y  # topic label: assignment-time signal only
+        return lm_loss(self.apply(params, x, impl=impl), x, shift=True)
+
+    def metric(self, params, x, y):
+        """Next-token accuracy (labels are the input shifted by one)."""
+        del y
+        logits = self.apply(params, x)
+        return accuracy(logits[:, :-1], x[:, 1:])
+
+    @property
+    def feat_shape(self) -> Tuple[int, ...]:
+        return (self.seq_len,)
+
+    @property
+    def feat_dtype(self):
+        return np.int32
+
+    @property
+    def n_classes(self) -> int:
+        return self.n_topics
+
+
+def as_program(obj) -> ClientProgram:
+    """Coerce legacy call sites: a bare ``CNNConfig`` still works everywhere
+    a program is expected (engines, ``evaluate``, ``FLClient``)."""
+    if isinstance(obj, ClientProgram):
+        return obj
+    if isinstance(obj, CNNConfig):
+        return CNNProgram(obj)
+    raise TypeError(
+        f"expected a ClientProgram (or CNNConfig), got {type(obj).__name__}"
+    )
+
+
+@PROGRAMS.register("cnn")
+def _cnn_program(cfg: CNNConfig = HEARTBEAT_CNN) -> CNNProgram:
+    return CNNProgram(cfg)
+
+
+@PROGRAMS.register("mlp")
+def _mlp_program(
+    feat: Tuple[int, ...] = (187, 1), n_classes: int = 5, hidden: int = 64
+) -> MLPProgram:
+    return MLPProgram(feat=tuple(feat), classes=n_classes, hidden=hidden)
+
+
+@PROGRAMS.register("lm")
+def _lm_program(
+    vocab_size: int = 128, seq_len: int = 32, n_topics: int = 4, **cfg_kw
+) -> LMProgram:
+    cfg = tiny_lm_config(vocab_size=vocab_size, seq_len=seq_len, **cfg_kw)
+    return LMProgram(cfg=cfg, seq_len=seq_len, n_topics=n_topics)

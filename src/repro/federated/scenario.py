@@ -4,17 +4,27 @@ Encapsulates the paper's two setups:
   * Heartbeat: 5 classes, 5 edges, 18 EUs (Table 3 edge distribution)
   * Seizure:   3 classes, 3 edges, 13 EUs (Table 2 edge distribution)
 and exposes every assignment strategy for comparison.
+
+``model=`` picks the client workload (``federated.programs`` registry):
+  * ``"cnn"`` — the paper's 1-D CNN on the synthetic ECG/EEG shards
+    (default; byte-identical to the pre-program builder);
+  * ``"mlp"`` — a flattened-feature MLP classifier on the SAME shards, so
+    every paper scenario doubles as an MLP workload;
+  * ``"lm"``  — a small causal transformer-LM on topic-skewed token-stream
+    shards (``data.lm_stream``); sequence TOPICS play the role of classes,
+    so the KLD-aware assignment still has imbalance to exploit.
 """
 from __future__ import annotations
 
 import dataclasses
-from typing import Dict, List, Optional
+from typing import List, Optional
 
 import jax
 import numpy as np
 
 from repro.core.assignment import AssignmentResult, dba_assignment, eara, random_assignment
 from repro.core.hfl import HFLSchedule
+from repro.data.lm_stream import TokenStream
 from repro.data.partition import (
     TABLE2_SEIZURE,
     TABLE3_HEARTBEAT,
@@ -23,8 +33,15 @@ from repro.data.partition import (
 )
 from repro.data.synthetic_health import Dataset, heartbeat_like, seizure_like
 from repro.federated.client import FLClient
+from repro.federated.programs import (
+    ClientProgram,
+    CNNProgram,
+    LMProgram,
+    MLPProgram,
+    tiny_lm_config,
+)
 from repro.federated.simulation import HFLSimulation, SimResult, centralized_baseline
-from repro.models.cnn1d import HEARTBEAT_CNN, SEIZURE_CNN, CNNConfig, cnn_init
+from repro.models.cnn1d import HEARTBEAT_CNN, SEIZURE_CNN
 from repro.utils.tree import tree_size_bytes
 from repro.wireless.channel import WirelessParams, build_cost_matrices, sample_topology
 
@@ -32,7 +49,7 @@ from repro.wireless.channel import WirelessParams, build_cost_matrices, sample_t
 @dataclasses.dataclass
 class Scenario:
     name: str
-    cfg: CNNConfig
+    program: ClientProgram
     clients: List[FLClient]
     test: Dataset
     class_counts: np.ndarray  # (M, K)
@@ -41,6 +58,15 @@ class Scenario:
     wp: WirelessParams
     model_bits: float
     init_edge: np.ndarray
+
+    @property
+    def cfg(self):
+        """Legacy alias: the bare ``CNNConfig`` for CNN scenarios (pre-PR 3
+        call sites passed that into engines; ``as_program`` coerces it
+        back), otherwise the program itself — an LM's inner ``ModelConfig``
+        would NOT coerce, so non-CNN scenarios must hand engines a real
+        program."""
+        return self.program.cfg if isinstance(self.program, CNNProgram) else self.program
 
     @property
     def n_edges(self) -> int:
@@ -97,7 +123,7 @@ class Scenario:
             sim = HFLSimulation(
                 self.clients,
                 assignment,
-                self.cfg,
+                self.program,
                 self.test,
                 schedule=schedule,
                 seed=seed,
@@ -116,7 +142,7 @@ class Scenario:
             sim = BatchedSyncEngine(
                 self.clients,
                 assignment,
-                self.cfg,
+                self.program,
                 self.test,
                 schedule=schedule,
                 seed=seed,
@@ -139,7 +165,7 @@ class Scenario:
             sim = AsyncHFLEngine(
                 self.clients,
                 assignment,
-                self.cfg,
+                self.program,
                 self.test,
                 latency=self.cost.latency,
                 schedule=schedule,
@@ -156,7 +182,7 @@ class Scenario:
     def centralized(self, rounds: int, seed: int = 0, eval_every: int = 1):
         batch = 10 * self.n_edges  # paper: local batch x n_edges (50 / 30)
         return centralized_baseline(
-            self.clients, self.cfg, self.test, rounds, batch=batch, seed=seed,
+            self.clients, self.program, self.test, rounds, batch=batch, seed=seed,
             eval_every=eval_every,
         )
 
@@ -170,13 +196,42 @@ def _eus_per_edge(n_edges: int, n_eus: int) -> List[int]:
 def build_scenario(
     dataset: str = "heartbeat",
     *,
+    model: str = "cnn",
     seed: int = 0,
     scale: float = 1.0,
     mean_dist: float = 300.0,
     n_test_per_class: int = 300,
     wp: Optional[WirelessParams] = None,
+    lm_eus: int = 12,
+    lm_edges: int = 4,
+    lm_topics: int = 4,
+    lm_seq_len: int = 32,
+    lm_vocab: int = 128,
 ) -> Scenario:
-    """Construct the paper's experimental setup with synthetic data."""
+    """Construct an experimental setup with synthetic data.
+
+    ``dataset`` picks the shards ("heartbeat" | "seizure" | "lm"),
+    ``model`` the client program ("cnn" | "mlp" | "lm").  ``dataset="lm"``
+    implies ``model="lm"`` and vice versa — token streams only make sense
+    under the LM program.  The ``lm_*`` knobs size the LM population;
+    ``scale`` scales sequences-per-EU there just as it scales samples in
+    the health setups.
+    """
+    if dataset == "lm" or model == "lm":
+        if model not in ("cnn", "lm"):  # "cnn" is just the unset default
+            raise ValueError(f"dataset='lm' requires model='lm', got {model!r}")
+        return _build_lm_scenario(
+            seed=seed,
+            scale=scale,
+            mean_dist=mean_dist,
+            n_test_per_class=n_test_per_class,
+            wp=wp,
+            n_eus=lm_eus,
+            n_edges=lm_edges,
+            n_topics=lm_topics,
+            seq_len=lm_seq_len,
+            vocab=lm_vocab,
+        )
     rng = np.random.default_rng(seed)
     if dataset == "heartbeat":
         table, n_eus, cnn = TABLE3_HEARTBEAT, 18, HEARTBEAT_CNN
@@ -193,17 +248,23 @@ def build_scenario(
     train = maker(rng, counts.sum(axis=0))
     shards = split_dataset_by_counts(rng, train, counts)
     test = maker(rng, np.full(k, n_test_per_class))
-    clients = [FLClient(i, shards[i], cnn) for i in range(n_eus)]
+    if model == "cnn":
+        program: ClientProgram = CNNProgram(cnn)
+    elif model == "mlp":
+        program = MLPProgram(feat=(cnn.seq_len, cnn.in_channels), classes=k)
+    else:
+        raise ValueError(f"unknown model {model!r} (cnn | mlp | lm)")
+    clients = [FLClient(i, shards[i], program) for i in range(n_eus)]
     wp = wp or WirelessParams()
     topo = sample_topology(
         jax.random.PRNGKey(seed), n_eus, n_edges, mean_dist=mean_dist,
         dataset_sizes=counts.sum(axis=1),
     )
-    model_bits = tree_size_bytes(cnn_init(jax.random.PRNGKey(0), cnn)) * 8
+    model_bits = tree_size_bytes(program.init(jax.random.PRNGKey(0))) * 8
     cost = build_cost_matrices(topo, model_bits, wp)
     return Scenario(
-        name=dataset,
-        cfg=cnn,
+        name=f"{dataset}" if model == "cnn" else f"{dataset}-{model}",
+        program=program,
         clients=clients,
         test=test,
         class_counts=counts,
@@ -212,4 +273,85 @@ def build_scenario(
         wp=wp,
         model_bits=model_bits,
         init_edge=init_edge,
+    )
+
+
+def _build_lm_scenario(
+    *,
+    seed: int,
+    scale: float,
+    mean_dist: float,
+    n_test_per_class: int,
+    wp: Optional[WirelessParams],
+    n_eus: int,
+    n_edges: int,
+    n_topics: int,
+    seq_len: int,
+    vocab: int,
+) -> Scenario:
+    """Topic-skewed token-stream population for the transformer-LM program.
+
+    Each EU's shard is dominated by one Markov TOPIC (the ``lm_stream``
+    transition-matrix families) with a sprinkle of the others — the LM
+    counterpart of the paper's per-EU dominant-class imbalance, recorded in
+    ``class_counts`` so EARA balances edge TOPIC mixtures exactly as it
+    balances edge class mixtures in the health setups.
+    """
+    rng = np.random.default_rng(seed)
+    base = max(1, int(round(40 * scale)))
+    # dominant topic gets ~8x the sideline topics' sequence counts
+    counts = rng.integers(0, base + 1, (n_eus, n_topics)).astype(np.int64)
+    dom = rng.integers(0, n_topics, n_eus)
+    counts[np.arange(n_eus), dom] += 8 * base
+    streams = [TokenStream(vocab, seed=seed, topic=t) for t in range(n_topics)]
+    shards = []
+    for i in range(n_eus):
+        xs, ys = [], []
+        for t in range(n_topics):
+            c = int(counts[i, t])
+            if c == 0:
+                continue
+            xs.append(streams[t].batch(c, seq_len))
+            ys.append(np.full((c,), t, np.int32))
+        x = np.concatenate(xs, 0)
+        y = np.concatenate(ys, 0)
+        perm = rng.permutation(len(y))
+        shards.append(Dataset(x[perm], y[perm], n_classes=n_topics))
+    # fresh streams for the test set so it never replays training state
+    test_streams = [
+        TokenStream(vocab, seed=seed + 7919, topic=t) for t in range(n_topics)
+    ]
+    test = Dataset(
+        np.concatenate([s.batch(n_test_per_class, seq_len) for s in test_streams], 0),
+        np.concatenate(
+            [np.full((n_test_per_class,), t, np.int32) for t in range(n_topics)], 0
+        ),
+        n_classes=n_topics,
+    )
+    program = LMProgram(
+        cfg=tiny_lm_config(vocab_size=vocab, seq_len=seq_len),
+        seq_len=seq_len,
+        n_topics=n_topics,
+    )
+    clients = [FLClient(i, shards[i], program) for i in range(n_eus)]
+    wp = wp or WirelessParams()
+    topo = sample_topology(
+        jax.random.PRNGKey(seed), n_eus, n_edges, mean_dist=mean_dist,
+        dataset_sizes=counts.sum(axis=1),
+    )
+    model_bits = tree_size_bytes(program.init(jax.random.PRNGKey(0))) * 8
+    cost = build_cost_matrices(topo, model_bits, wp)
+    return Scenario(
+        name="lm",
+        program=program,
+        clients=clients,
+        test=test,
+        class_counts=counts,
+        topo=topo,
+        cost=cost,
+        wp=wp,
+        model_bits=model_bits,
+        # no Table-2/3 edge pools here; the "initial edge" is each EU's
+        # nearest edge (a valid edge INDEX, unlike the dominant-topic id)
+        init_edge=np.asarray(topo.dist).argmin(axis=1),
     )

@@ -18,8 +18,7 @@ from repro.core.compression import CompressionSpec
 from repro.core.hfl import CommAccountant, HFLSchedule, WallClock, cloud_aggregate, edge_aggregate, weight_divergence
 from repro.data.synthetic_health import Dataset
 from repro.federated.client import FLClient, _local_epoch
-from repro.models.cnn1d import CNNConfig, cnn_apply, cnn_init
-from repro.training.loss import accuracy
+from repro.federated.programs import as_program
 from repro.utils.tree import tree_add, tree_size_bytes, tree_sub
 
 
@@ -48,27 +47,32 @@ class SimResult:
         return self.history[-1].test_acc if self.history else 0.0
 
 
-def central_reference_step(params, data: Dataset, rng, batch: int, cfg: CNNConfig):
+def central_reference_step(params, data: Dataset, rng, batch: int, program):
     """One mini-epoch of the virtual centralized model (divergence ref, eq. 17).
 
     Shared by the reference simulator and the batched engine so the two
-    divergence baselines cannot drift apart.
+    divergence baselines cannot drift apart.  ``program`` may be a
+    ``ClientProgram`` or a bare ``CNNConfig`` (coerced).
     """
+    program = as_program(program)
     n = len(data)
     steps = max(1, min(128, n // batch))
     idx = rng.permutation(n)[: steps * batch].reshape(steps, batch)
     xb = jnp.asarray(data.x[idx])
     yb = jnp.asarray(data.y[idx])
-    params, _ = _local_epoch(params, xb, yb, cfg, steps, 1e-3)
+    params, _ = _local_epoch(params, xb, yb, program, steps, 1e-3)
     return params
 
 
-def evaluate(params, cfg: CNNConfig, test: Dataset, batch: int = 512) -> float:
+def evaluate(params, program, test: Dataset, batch: int = 512) -> float:
+    """Weighted mean of ``program.metric`` over the test set (classification
+    accuracy for the CNN/MLP, next-token accuracy for the LM)."""
+    program = as_program(program)
     accs, ns = [], []
     for i in range(0, len(test), batch):
         x = jnp.asarray(test.x[i : i + batch])
         y = jnp.asarray(test.y[i : i + batch])
-        accs.append(float(accuracy(cnn_apply(params, cfg, x), y)) * len(y))
+        accs.append(float(program.metric(params, x, y)) * len(y))
         ns.append(len(y))
     return float(np.sum(accs) / np.sum(ns))
 
@@ -80,7 +84,7 @@ class HFLSimulation:
         self,
         clients: List[FLClient],
         assignment: np.ndarray,
-        cfg: CNNConfig,
+        program,
         test: Dataset,
         schedule: HFLSchedule = HFLSchedule(1, 1),
         seed: int = 0,
@@ -92,19 +96,19 @@ class HFLSimulation:
     ):
         self.clients = clients
         self.assignment = assignment
-        self.cfg = cfg
+        self.program = as_program(program)
         self.test = test
         self.schedule = schedule
         self.rng = np.random.default_rng(seed)
         self.upp = upp
-        self.params = cnn_init(jax.random.PRNGKey(seed), cfg)
+        self.params = self.program.init(jax.random.PRNGKey(seed))
         self.track_divergence = track_divergence
         if track_divergence:
             self.central_params = jax.tree.map(lambda x: x, self.params)
             self.central_data = Dataset(
                 np.concatenate([c.shard.x for c in clients], 0),
                 np.concatenate([c.shard.y for c in clients], 0),
-                cfg.n_classes,
+                self.program.n_classes,
             )
             self.central_batch = central_batch
         model_bits = tree_size_bytes(self.params) * 8
@@ -163,7 +167,8 @@ class HFLSimulation:
 
     def _central_step(self):
         self.central_params = central_reference_step(
-            self.central_params, self.central_data, self.rng, self.central_batch, self.cfg
+            self.central_params, self.central_data, self.rng, self.central_batch,
+            self.program,
         )
 
     def run(self, cloud_rounds: int, eval_every: int = 1) -> SimResult:
@@ -189,7 +194,7 @@ class HFLSimulation:
                     self._central_step()
                 div = weight_divergence(global_params, self.central_params)
             if b % eval_every == 0 or b == cloud_rounds:
-                acc = evaluate(global_params, self.cfg, self.test)
+                acc = evaluate(global_params, self.program, self.test)
                 history.append(
                     RoundMetrics(b, acc, div, float(np.mean(losses)) if losses else 0.0)
                 )
@@ -199,7 +204,7 @@ class HFLSimulation:
 
 def centralized_baseline(
     clients: List[FLClient],
-    cfg: CNNConfig,
+    program,
     test: Dataset,
     rounds: int,
     batch: int = 50,
@@ -207,20 +212,21 @@ def centralized_baseline(
     eval_every: int = 1,
 ) -> List[RoundMetrics]:
     """The paper's benchmark: all data pooled at one server (batch 50/30)."""
+    program = as_program(program)
     rng = np.random.default_rng(seed)
     data = Dataset(
         np.concatenate([c.shard.x for c in clients], 0),
         np.concatenate([c.shard.y for c in clients], 0),
-        cfg.n_classes,
+        program.n_classes,
     )
-    params = cnn_init(jax.random.PRNGKey(seed), cfg)
+    params = program.init(jax.random.PRNGKey(seed))
     history = []
     n = len(data)
     for r in range(1, rounds + 1):
         steps = max(1, min(128, n // batch))
         idx = rng.permutation(n)[: steps * batch].reshape(steps, batch)
         xb, yb = jnp.asarray(data.x[idx]), jnp.asarray(data.y[idx])
-        params, loss = _local_epoch(params, xb, yb, cfg, steps, 1e-3)
+        params, loss = _local_epoch(params, xb, yb, program, steps, 1e-3)
         if r % eval_every == 0 or r == rounds:
-            history.append(RoundMetrics(r, evaluate(params, cfg, test), 0.0, float(loss)))
+            history.append(RoundMetrics(r, evaluate(params, program, test), 0.0, float(loss)))
     return history

@@ -42,6 +42,26 @@ def test_assignment_strategies_ordering(scenario):
     assert plus.kld_total <= sca.kld_total + 1e-9
 
 
+def test_eara_dca_ordering_fig4_quickmode():
+    """The exact fig4 quick-mode configuration that used to WARN (DCA's
+    relaxed-LP secondary landing behind SCA at 2% data): each secondary is
+    now gated on the exact P1 KLD objective, so EARA-DCA <= EARA-SCA is a
+    strict, deterministic ordering at every scale and subset."""
+    for dataset in ("seizure", "heartbeat"):
+        for seed in (0, 1):
+            sc = build_scenario(dataset, scale=0.02, seed=seed, mean_dist=100,
+                                n_test_per_class=10)
+            sca = sc.assign("eara-sca")
+            dca = sc.assign("eara-dca")
+            assert dca.kld_total <= sca.kld_total + 1e-6, (dataset, seed)
+            # secondaries stay thresholded DCA rows: <= 2 edges per EU, and
+            # every EU with a feasible edge keeps at least its primary
+            assert np.all(dca.lam.sum(axis=1) <= 2)
+            assert np.all(
+                dca.lam.sum(axis=1) >= sc.cost.feasible.any(axis=1).astype(int)
+            )
+
+
 def test_simulation_improves_accuracy(scenario):
     sc = scenario
     a = sc.assign("eara-sca")
