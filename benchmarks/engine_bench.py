@@ -15,10 +15,14 @@ Compares, at M in {18, 128, 512, 2048} EUs on one cloud round:
   * ``async``        — ``AsyncHFLEngine`` with a 75% quorum.
 
 ``--model`` (or ``main(model=...)``) picks the client program: ``cnn``
-(default), ``mlp``, or ``lm`` — the engines are model-agnostic, so the same
-four paths run any registered ``ClientProgram``; every emitted mark records
-the program name.  The full suite (``benchmarks.run``) runs the CNN sizes
-plus one MLP scale point so CI tracks at least one non-CNN trajectory.
+(default), ``mlp``, ``lm``, ``moe``, ``mamba``, or ``rwkv`` — the engines
+are model-agnostic, so the same four paths run any registered
+``ClientProgram``; every emitted mark records the program name.  The
+sequence models (lm/moe/mamba/rwkv) share one token-shard population
+layout, so their rows compare workloads on identical data.  The full suite
+(``benchmarks.run``) runs the CNN sizes plus one MLP scale point so CI
+tracks at least one non-CNN trajectory; single-model sweeps land in
+``BENCH_engine_<model>.json``.
 
 The CNN workload is the dispatch-bound IoT regime the engine exists for: a
 micro 1-D CNN (seq 64, ~4k params) and small local shards, so per-client
@@ -46,7 +50,19 @@ from repro.data.synthetic_health import Dataset, heartbeat_like
 from repro.data.partition import split_dataset_by_counts
 from repro.engine import AsyncHFLEngine, BatchedSyncEngine
 from repro.federated.client import FLClient
-from repro.federated.programs import CNNProgram, LMProgram, MLPProgram, tiny_lm_config
+from repro.federated.programs import (
+    SEQUENCE_PROGRAMS,
+    CNNProgram,
+    LMProgram,
+    MambaProgram,
+    MLPProgram,
+    MoEProgram,
+    tiny_lm_config,
+    tiny_mamba_config,
+    tiny_moe_config,
+    tiny_rwkv_config,
+    RWKVProgram,
+)
 from repro.federated.simulation import HFLSimulation
 from repro.models.cnn1d import CNNConfig, HEARTBEAT_CNN
 
@@ -57,6 +73,7 @@ LM_SEQ, LM_VOCAB, LM_TOPICS = 16, 64, 4
 
 
 def _program(model: str):
+    seq_kw = dict(seq_len=LM_SEQ, n_topics=LM_TOPICS)
     if model == "cnn":
         return CNNProgram(CFG)
     if model == "mlp":  # micro MLP on the same micro-CNN shards
@@ -65,15 +82,27 @@ def _program(model: str):
     if model == "lm":  # micro causal transformer on token shards
         cfg = tiny_lm_config(vocab_size=LM_VOCAB, seq_len=LM_SEQ, d_model=16,
                              n_layers=2, n_heads=2, d_ff=32)
-        return LMProgram(cfg=cfg, seq_len=LM_SEQ, n_topics=LM_TOPICS)
-    raise ValueError(f"unknown model {model!r} (cnn | mlp | lm)")
+        return LMProgram(cfg=cfg, **seq_kw)
+    if model == "moe":  # micro top-k-routed MoE LM, dense-gated dispatch
+        cfg = tiny_moe_config(vocab_size=LM_VOCAB, seq_len=LM_SEQ, d_model=16,
+                              n_layers=2, n_heads=2, d_ff=16, n_experts=4, top_k=2)
+        return MoEProgram(cfg=cfg, **seq_kw)
+    if model == "mamba":  # micro hybrid attn+mamba LM
+        cfg = tiny_mamba_config(vocab_size=LM_VOCAB, seq_len=LM_SEQ, d_model=16,
+                                n_layers=2, n_heads=2, d_ff=32, d_state=4)
+        return MambaProgram(cfg=cfg, **seq_kw)
+    if model == "rwkv":  # micro RWKV-6 LM
+        cfg = tiny_rwkv_config(vocab_size=LM_VOCAB, seq_len=LM_SEQ, d_model=16,
+                               n_layers=2, d_ff=32, head_size=8)
+        return RWKVProgram(cfg=cfg, **seq_kw)
+    raise ValueError(f"unknown model {model!r} (cnn | mlp | {' | '.join(SEQUENCE_PROGRAMS)})")
 
 
 def _make_population(m: int, n_edges: int, seed: int = 0, model: str = "cnn"):
     """M clients with small imbalanced shards + round-robin edge assignment."""
     rng = np.random.default_rng(seed)
     program = _program(model)
-    if model == "lm":
+    if model in SEQUENCE_PROGRAMS:
         counts = rng.integers(1, 3, (m, LM_TOPICS))
         streams = [TokenStream(LM_VOCAB, seed=seed, topic=t) for t in range(LM_TOPICS)]
         shards = []
@@ -172,7 +201,16 @@ def main(model: Optional[str] = None) -> None:
         bench_scale(128, 8, model="mlp")
         dump_json("BENCH_engine.json", start)
     else:
-        sizes = {"cnn": [18, 128, 512, 2048], "mlp": [18, 128, 512], "lm": [18, 128]}
+        sizes = {
+            "cnn": [18, 128, 512, 2048],
+            "mlp": [18, 128, 512],
+            "lm": [18, 128],
+            # the heavy sequence models stay at the IoT population size in
+            # quick mode (CI); BENCH_FULL=1 adds the batching-regime point
+            "moe": [18] if QUICK else [18, 128],
+            "mamba": [18] if QUICK else [18, 128],
+            "rwkv": [18] if QUICK else [18, 128],
+        }
         for m in sizes[model]:
             bench_scale(m, 8 if m > 18 else 5, model=model)
         # single-model sweeps land in their own file so they never clobber
@@ -184,7 +222,8 @@ if __name__ == "__main__":
     import argparse
 
     ap = argparse.ArgumentParser()
-    ap.add_argument("--model", default=None, choices=["cnn", "mlp", "lm"],
+    ap.add_argument("--model", default=None,
+                    choices=["cnn", "mlp", "lm", "moe", "mamba", "rwkv"],
                     help="bench one program's scale sweep (default: CNN suite + MLP point)")
     args = ap.parse_args()
     print("name,us_per_call,derived")

@@ -2,14 +2,16 @@
 workload, end to end.
 
 Builds the topic-skewed token-stream population (``build_scenario(model=
-"lm")``): each EU's shard is dominated by one Markov topic, the LM
+...)``): each EU's shard is dominated by one Markov topic, the LM
 counterpart of the paper's per-EU class imbalance.  EARA assigns EUs to
 edges by their TOPIC histograms (same KLD objective, topics = classes),
-then the batched sync engine trains the small causal transformer-LM
-through the device-resident round pipeline — the exact same engine code
+then the batched sync engine trains the chosen sequence model — the dense
+transformer-LM, the top-k-routed MoE, the hybrid attn+Mamba, or RWKV-6 —
+through the device-resident round pipeline, the exact same engine code
 that runs the paper's CNN.
 
   PYTHONPATH=src python examples/hfl_lm_training.py --rounds 3 --scale 0.1
+  PYTHONPATH=src python examples/hfl_lm_training.py --model moe --rounds 2
 """
 import argparse
 
@@ -18,6 +20,8 @@ from repro.federated import build_scenario
 
 def main() -> None:
     ap = argparse.ArgumentParser()
+    ap.add_argument("--model", default="lm", choices=["lm", "moe", "mamba", "rwkv"],
+                    help="sequence program to train")
     ap.add_argument("--rounds", type=int, default=3, help="cloud rounds")
     ap.add_argument("--scale", type=float, default=0.1, help="sequences-per-EU scale")
     ap.add_argument("--eus", type=int, default=12)
@@ -28,12 +32,13 @@ def main() -> None:
     args = ap.parse_args()
 
     sc = build_scenario(
-        "lm", seed=args.seed, scale=args.scale, n_test_per_class=32,
+        model=args.model, seed=args.seed, scale=args.scale, n_test_per_class=32,
         lm_eus=args.eus, lm_edges=args.edges, lm_topics=args.topics,
     )
     print(
-        f"LM population: {len(sc.clients)} EUs x ~{len(sc.clients[0].shard)} "
-        f"sequences, {args.topics} topics, model {sc.model_bits / 8e3:.1f} kB"
+        f"{args.model} population: {len(sc.clients)} EUs x "
+        f"~{len(sc.clients[0].shard)} sequences, {args.topics} topics, "
+        f"model {sc.model_bits / 8e3:.1f} kB"
     )
     eara = sc.assign("eara-sca")
     dba = sc.assign("dba")

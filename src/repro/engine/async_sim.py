@@ -70,7 +70,29 @@ class _EdgeState:
 
 
 class AsyncHFLEngine:
-    """Heap-scheduled async counterpart of :class:`BatchedSyncEngine`."""
+    """Heap-scheduled async counterpart of :class:`BatchedSyncEngine`.
+
+    Knobs (constructor):
+
+    * ``program`` — any ``ClientProgram`` (``federated.PROGRAMS``: "cnn",
+      "mlp", "lm", "moe", "mamba", "rwkv", or a "fedsgd" wrapper); a bare
+      ``CNNConfig`` is coerced.
+    * ``latency`` — (M, N) per-EU upload latency in seconds (drives the
+      event clock; usually ``scenario.cost.latency``).
+    * ``quorum`` — fraction of an edge's members that must report before
+      it aggregates, in (0, 1]; ``1.0`` waits for everyone.
+    * ``staleness_decay`` — weight multiplier per edge-model version an
+      upload is behind (``1.0`` = no decay; FedAsync-style down-weighting
+      below 1).
+    * ``backend`` — ``"pallas"`` | ``"reference"`` aggregation path.
+    * ``compression`` — ``None`` | ``CompressionSpec``; per-(client, edge)
+      error feedback, accountant counts compressed bits.  Takes precedence
+      over the program's own uplink quantization.
+
+    Per-client heterogeneous hyperparameters (``lr``, ``batch_size``,
+    ``local_epochs``) are honored exactly as in the sync engines — each
+    dispatch trains the client with its own tuple.
+    """
 
     def __init__(
         self,
@@ -113,6 +135,9 @@ class AsyncHFLEngine:
             # bits() on the flat (D,) layout the engine actually compresses
             # (one global top-k), not the per-leaf tree the reference uses
             self._uplink_bits = compression.bits(jnp.zeros((self.pack.dim,), jnp.float32))
+        else:
+            # program-level uplink semantics (FedSGD gradient payloads)
+            self._uplink_bits = self.program.uplink_bits(self.accountant.model_bits)
         self._errors: Dict[Tuple[int, int], object] = {}
         self.queue = EventQueue()
         self._losses: List[float] = []
@@ -161,12 +186,17 @@ class AsyncHFLEngine:
         for i, k in edges_of.items():
             mc = self.accountant.dca_multicast_overhead if k > 1 else 0.0
             self.accountant.on_eu_exchange(i, up_bits=self._uplink_bits * (1.0 + mc))
+        compressing = self.compression is not None and self.compression.kind != "none"
+        quantizing = not compressing and self.program.quantizes_upload
         for (i, j), job in zip(pairs, jobs):
             upd = trained.row((i, j))
             self._losses.append(trained.loss[(i, j)])
-            upd = compress_flat_upload(
-                self.compression, self._errors, (i, j), job.start_flat, upd
-            )
+            if quantizing:
+                upd = self.program.quantize_upload(job.start_flat, upd)
+            else:
+                upd = compress_flat_upload(
+                    self.compression, self._errors, (i, j), job.start_flat, upd
+                )
             self.accountant.on_eu_exchange(i, down_bits=self.accountant.model_bits)
             self.queue.push(
                 self.queue.now + float(self.latency[i, j]),

@@ -2,9 +2,11 @@
 
 The reference simulator trains M clients with M sequential jitted calls; at
 M=512 the per-call dispatch and per-client conversions dominate wall clock.
-Here clients whose padded shard shape agrees — same steps bucket, batch
-size, and learning rate — are stacked into a leading *cohort* axis and
-trained by ONE jitted vmapped-gradient call per step.
+Here clients whose padded shard shape agrees — same steps bucket, local
+epoch count, batch size, and learning rate — are stacked into a leading
+*cohort* axis and trained by ONE jitted vmapped-gradient call per step, so
+per-client heterogeneous hyperparameters cost one cohort per distinct
+tuple rather than a recompile per client.
 
 Batch-index sampling intentionally replicates ``FLClient.local_update``
 draw-for-draw (permutation, then resample-padding) so that the sync engine
@@ -22,9 +24,8 @@ import jax.numpy as jnp
 import numpy as np
 
 from repro.engine.flatten import ravel_batched, unravel_batched
-from repro.federated.client import FLClient, _bucket
+from repro.federated.client import FLClient
 from repro.federated.programs import ClientProgram
-from repro.training.optimizers import adam
 
 
 @dataclasses.dataclass
@@ -47,8 +48,12 @@ class LocalJob:
             self.tag = self.client.cid
 
     @property
-    def key(self) -> Tuple[int, int, float]:
-        return (self.steps, self.client.batch_size, self.client.lr)
+    def key(self) -> Tuple[int, int, int, float]:
+        """Cohort grouping key: clients stack into one vmapped call only when
+        their padded step count, epoch count, batch size, AND learning rate
+        agree — the full per-client hyperparameter tuple, so heterogeneous
+        populations split into one fixed-shape cohort per distinct tuple."""
+        return (self.steps, len(self.idx), self.client.batch_size, self.client.lr)
 
 
 def draw_batch_indices(
@@ -68,11 +73,14 @@ def draw_batch_indices(
 def make_job(
     client: FLClient, start_flat, rng: np.random.Generator, epochs: int, tag=None
 ) -> LocalJob:
+    """Build one client's round job.  ``epochs`` is the schedule default;
+    the client's own ``local_epochs`` / the program's ``single_step`` clamp
+    override it (same resolution as ``FLClient.local_update``)."""
     n = len(client.shard)
     if n == 0:
         return LocalJob(client, start_flat, [], 0, tag=tag)
-    steps = max(1, min(client.max_steps, int(np.ceil(n / client.batch_size))))
-    steps = _bucket(steps)
+    steps = client.plan_steps()
+    epochs = client.epochs_for(epochs)
     return LocalJob(
         client, start_flat, draw_batch_indices(rng, n, steps, client.batch_size, epochs),
         steps, tag=tag,
@@ -91,14 +99,18 @@ def _cohort_epoch_body(
     the scan avoids shuffling the (C, D)-sized optimizer carry through a
     vmapped scan, which dominates wall clock at large C.
 
-    ``program`` supplies the per-example loss; ``impl`` threads the
+    ``program`` supplies the per-example loss AND the local optimizer
+    (``make_optimizer``: Adam for the FedAvg programs, plain SGD for the
+    FedSGD wrapper — the optimizer update is elementwise either way, so the
+    per-client arithmetic stays bit-identical to ``_local_epoch``);
+    ``impl`` threads the
     formulation knob through (for the CNN: "gemm" — the engines' default —
     lowers the vmapped per-client convolutions to batched GEMMs instead of
     the C-group convolution XLA:CPU serializes; "xla" is the PR 1 path,
     kept for the benchmark baseline.  Single-formulation programs ignore
     it.)
     """
-    opt = adam(lr=lr)
+    opt = program.make_optimizer(lr)
     opt_state = opt.init(params)
 
     def client_loss(p, x, y):
@@ -235,10 +247,9 @@ def run_cohorts(
     index: Dict[int, int] = {}
     loss_of: Dict[int, float] = {}
     offset = 0
-    for (steps, batch, lr), members in groups.items():
+    for (steps, epochs, batch, lr), members in groups.items():
         params = pack.unravel_batched(_stack_starts(members))
         loss = jnp.zeros((len(members),), jnp.float32)
-        epochs = len(members[0].idx)
         cids = (
             np.asarray([j.client.cid for j in members], np.int64)
             if store is not None
@@ -279,17 +290,28 @@ class _PlanGroup:
     batch: int
     lr: float
 
+    @property
+    def epochs(self) -> int:
+        return self.idx.shape[1]
+
 
 class CohortPlan:
     """Static cohort grouping for the device pipeline.
 
-    Which cohort a client falls into depends only on its shard size and
-    hyperparameters, so the grouping (and each client's padded step count)
-    is computed ONCE at engine construction.  Per round, :meth:`draw` only
-    consumes the numpy RNG stream — draw-for-draw like
-    ``FLClient.local_update`` and in global client order, which is what
-    keeps fixed-seed device-pipeline runs on the reference trajectory —
-    and fills per-group index tensors.  This replaces the per-round
+    Which cohort a client falls into depends only on its shard size and its
+    hyperparameters — the full (steps, local-epochs, batch-size, lr) tuple,
+    so a HETEROGENEOUS population (per-client ``lr`` / ``batch_size`` /
+    ``local_epochs``) splits into one fixed-shape cohort per distinct
+    tuple while every cohort still trains in one vmapped dispatch.  The
+    grouping (and each client's padded step count) is computed ONCE at
+    engine construction; only the epoch count of clients that FOLLOW the
+    schedule (``local_epochs=None``) is resolved at draw time.
+
+    Per round, :meth:`draw` only consumes the numpy RNG stream —
+    draw-for-draw like ``FLClient.local_update`` and in global client
+    order, which is what keeps fixed-seed device-pipeline runs on the
+    reference trajectory regardless of how clients are grouped — and fills
+    per-group index tensors.  This replaces the per-round
     ``LocalJob``/``make_job`` object churn of the host pipeline (~2x less
     host time per round at M=512).
 
@@ -310,23 +332,34 @@ class CohortPlan:
                 )
         self.sizes = np.array([len(c.shard) for c in clients], np.int64)
         self.steps = np.zeros(len(clients), np.int64)
+        # per-client schedule override (None = follow the schedule's epochs)
+        self._epochs_override: List[int | None] = [c.local_epochs for c in clients]
+        self._single_step = self.program.single_step
         self._group_key: Dict[int, Tuple] = {}
         for i, c in enumerate(clients):
-            n = self.sizes[i]
-            if n == 0:
+            if self.sizes[i] == 0:
                 continue
-            steps = _bucket(max(1, min(c.max_steps, int(np.ceil(n / c.batch_size)))))
-            self.steps[i] = steps
-            self._group_key[i] = (steps, c.batch_size, c.lr)
+            self.steps[i] = c.plan_steps()
+            self._group_key[i] = (int(self.steps[i]), c.batch_size, c.lr)
+
+    def _epochs_of(self, i: int, schedule_epochs: int) -> int:
+        if self._single_step:
+            return 1
+        e = self._epochs_override[i]
+        return e if e is not None else schedule_epochs
 
     def draw(
         self, rng: np.random.Generator, active: np.ndarray, epochs: int
     ) -> Tuple[List[_PlanGroup], np.ndarray]:
         """Returns (groups, passthrough) for the ``active`` clients.
 
-        ``passthrough`` lists active clients with empty shards (they train
-        zero steps and upload their start row).  RNG consumption replicates
-        ``draw_batch_indices`` per active client, in client order.
+        ``epochs`` is the schedule's ``local_steps`` — clients with their
+        own ``local_epochs`` (or a ``single_step`` program) deviate from
+        it and land in their own cohorts.  ``passthrough`` lists active
+        clients with empty shards (they train zero steps and upload their
+        start row).  RNG consumption replicates ``draw_batch_indices`` per
+        active client, in client order, each client drawing ITS epoch
+        count — exactly the reference simulator's stream.
         """
         members: Dict[Tuple, List[int]] = {}
         passthrough: List[int] = []
@@ -334,16 +367,17 @@ class CohortPlan:
             if self.sizes[i] == 0:
                 passthrough.append(int(i))
             else:
-                members.setdefault(self._group_key[int(i)], []).append(int(i))
+                key = self._group_key[int(i)] + (self._epochs_of(int(i), epochs),)
+                members.setdefault(key, []).append(int(i))
         groups = [
             _PlanGroup(
                 members=np.asarray(ids, np.int64),
-                idx=np.zeros((len(ids), epochs, steps, batch), np.int32),
+                idx=np.zeros((len(ids), e, steps, batch), np.int32),
                 steps=steps,
                 batch=batch,
                 lr=lr,
             )
-            for (steps, batch, lr), ids in members.items()
+            for (steps, batch, lr, e), ids in members.items()
         ]
         slot = {}
         for g in groups:
@@ -356,7 +390,7 @@ class CohortPlan:
             g, c = slot[int(i)]
             n = int(self.sizes[i])
             need = g.steps * g.batch
-            for e in range(epochs):
+            for e in range(g.epochs):
                 idx = rng.permutation(n)
                 if need > n:  # pad by resampling
                     idx = np.concatenate([idx, rng.integers(0, n, need - n)])

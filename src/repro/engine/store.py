@@ -50,7 +50,16 @@ def _store_gather(x, y, cids, idx):
 
 
 class DeviceShardStore:
-    """All client shards padded into one device-resident array pair."""
+    """All client shards padded into one device-resident array pair.
+
+    ``clients`` is a sequence of ``FLClient``-like objects ordered by
+    ``cid`` (checked — :meth:`gather` indexes by cid).  The feature block's
+    rank and dtype follow the shards themselves, which must agree across
+    clients: ``(L, Ch)`` float32 signals for the CNN/MLP programs, ``(S,)``
+    int32 token sequences for the sequence programs (lm/moe/mamba/rwkv) —
+    any uniform layout a ``ClientProgram.feat_shape``/``feat_dtype``
+    describes works.  Labels are always int32.
+    """
 
     def __init__(self, clients: Sequence):
         if not clients:

@@ -82,7 +82,31 @@ def _segment_agg_keep(upd, seg_ids, weights, has, prev, n_segments: int, backend
 
 
 class BatchedSyncEngine:
-    """Drop-in replacement for ``HFLSimulation`` with cohort batching."""
+    """Drop-in replacement for ``HFLSimulation`` with cohort batching.
+
+    Knobs (constructor):
+
+    * ``program`` — any ``ClientProgram`` (``federated.PROGRAMS``: "cnn",
+      "mlp", "lm", "moe", "mamba", "rwkv", or a "fedsgd" wrapper); a bare
+      ``CNNConfig`` is coerced for legacy call sites.  The program picks
+      the local optimizer and (FedSGD) the uplink payload.
+    * ``pipeline`` — ``"device"`` (default: shard store + fused segment
+      aggregation, O(1) dispatches per round) | ``"host"`` (the PR 1
+      host-major loop, kept as benchmark baseline).
+    * ``backend`` — flat-buffer aggregation path: ``"pallas"`` (kernels;
+      tiny-N and off-TPU calls route to jitted contractions) |
+      ``"reference"`` (plain-XLA contractions).
+    * ``compression`` — ``None`` | ``CompressionSpec(kind="topk" |
+      "ternary" | "none", ...)``; applied to the flat update delta with
+      per-client error feedback, and the accountant then counts
+      ``compression.bits``.  Takes precedence over the program's own
+      uplink quantization.
+    * ``upp`` — per-round client participation probability in (0, 1].
+
+    Clients may carry heterogeneous hyperparameters (``lr``,
+    ``batch_size``, ``local_epochs``, ``max_steps``): the cohort plan
+    groups same-tuple clients so shapes stay fixed per group.
+    """
 
     def __init__(
         self,
@@ -134,6 +158,10 @@ class BatchedSyncEngine:
             # bits() on the flat (D,) layout the engine actually compresses
             # (one global top-k), not the per-leaf tree the reference uses
             self._uplink_bits = compression.bits(jnp.zeros((self.pack.dim,), jnp.float32))
+        else:
+            # program-level uplink semantics (FedSGD gradient payloads;
+            # model_bits for everything else, the accountant's default)
+            self._uplink_bits = self.program.uplink_bits(model_bits)
         # static round structure: the (client, edge) membership pairs, in
         # client-major order.  Participation varies per round but travels in
         # the segment WEIGHTS, so every device program keeps a fixed shape.
@@ -235,19 +263,26 @@ class BatchedSyncEngine:
             else (mats[0] if mats else jnp.zeros((1, self.pack.dim), jnp.float32))
         )
         compressing = self.compression is not None and self.compression.kind != "none"
-        if compressing and len(job_cids):
+        quantizing = not compressing and self.program.quantizes_upload
+        if (compressing or quantizing) and len(job_cids):
             start_rows = starts_for(job_cids)
             trained_rows = upd_matrix[jnp.asarray(row_of[job_cids], jnp.int32)]
-            rows = []
-            for k, i in enumerate(job_cids):
-                rows.append(
-                    compress_flat_upload(
-                        self.compression, self._errors, int(i),
-                        start_rows[k], trained_rows[k],
+            if quantizing:
+                # program-level upload transform (FedSGD fp16 gradients):
+                # one batched op over the (C, D) matrices, no per-row state
+                upd_matrix = self.program.quantize_upload(start_rows, trained_rows)
+                row_of[job_cids] = np.arange(len(job_cids))
+            else:
+                rows = []
+                for k, i in enumerate(job_cids):
+                    rows.append(
+                        compress_flat_upload(
+                            self.compression, self._errors, int(i),
+                            start_rows[k], trained_rows[k],
+                        )
                     )
-                )
-                row_of[i] = k
-            upd_matrix = jnp.stack(rows)
+                    row_of[i] = k
+                upd_matrix = jnp.stack(rows)
         if len(job_cids):
             # every edge's FedAvg in ONE segment call over the pair matrix
             part_pairs = participating[self._pair_clients]
@@ -299,6 +334,8 @@ class BatchedSyncEngine:
             job_edges.append(edges)
         trained = run_cohorts(jobs, self.program, self.pack, impl="xla")
         compressing = self.compression is not None and self.compression.kind != "none"
+        quantizing = not compressing and self.program.quantizes_upload
+        transforming = compressing or quantizing
         losses = []
         new_cids: List[List[int]] = [[] for _ in range(n)]
         new_rows: List[List[jnp.ndarray]] = [[] for _ in range(n)]
@@ -310,16 +347,18 @@ class BatchedSyncEngine:
                 row = compress_flat_upload(
                     self.compression, self._errors, cid, job.start_flat, trained.row(cid)
                 )
+            elif quantizing:
+                row = self.program.quantize_upload(job.start_flat, trained.row(cid))
             for j in edges:
                 new_cids[j].append(cid)
-                if compressing:
+                if transforming:
                     new_rows[j].append(row)
                 new_sizes[j].append(job.client.data_size)
         for j in range(n):
             if not new_cids[j]:
                 continue
-            # uncompressed fast path: one gather from the cohort matrix
-            mat = jnp.stack(new_rows[j]) if compressing else trained.gather(new_cids[j])
+            # untransformed fast path: one gather from the cohort matrix
+            mat = jnp.stack(new_rows[j]) if transforming else trained.gather(new_cids[j])
             edge_rows[j] = flat_mean(
                 mat, np.asarray(new_sizes[j], np.float32), backend=self.backend
             )

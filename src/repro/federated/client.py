@@ -1,19 +1,30 @@
 """Federated client: local training on a private shard (paper eq. 4-5).
 
-Clients are stateless across rounds (fresh Adam state per round, the common
-FedAvg convention and the paper's setup: 1 local epoch, batch 10, Adam 1e-3).
-Local updates are jit-compiled once per (program, steps-bucket) to avoid
-per-shard recompilation; shards are padded by resampling to fill the bucket.
+Clients are stateless across rounds (fresh optimizer state per round, the
+common FedAvg convention and the paper's setup: 1 local epoch, batch 10,
+Adam 1e-3).  Local updates are jit-compiled once per (program, steps-bucket)
+to avoid per-shard recompilation; shards are padded by resampling to fill
+the bucket.
 
 The model itself is a ``ClientProgram`` (``federated.programs``): the client
 only owns the shard and the local-SGD hyperparameters, so the same loop
-trains the paper's CNN, the MLP, or the transformer-LM unchanged.
+trains the paper's CNN, the MLP, or any of the sequence LMs unchanged.  The
+program also picks the local optimizer (``make_optimizer``; Adam for the
+FedAvg programs, plain SGD for FedSGD) and may clamp local work to a single
+gradient step (``single_step``).
+
+Hyperparameters are PER CLIENT: ``lr``, ``batch_size``, ``max_steps``, and
+``local_epochs`` (None = follow the schedule's ``local_steps``) may differ
+across the population — the realistic heterogeneous-IoT regime.  The
+batched engines group same-(steps, epochs, batch, lr) clients into cohorts
+(``engine.cohort.CohortPlan``), so heterogeneity costs one extra cohort per
+distinct hyperparameter tuple, never a recompile per client.
 """
 from __future__ import annotations
 
 import dataclasses
 from functools import partial
-from typing import Dict, Tuple
+from typing import Dict, Optional, Tuple
 
 import jax
 import jax.numpy as jnp
@@ -21,7 +32,6 @@ import numpy as np
 
 from repro.data.synthetic_health import Dataset
 from repro.federated.programs import ClientProgram, as_program
-from repro.training.optimizers import adam
 
 _BUCKETS = (1, 2, 4, 8, 16, 32, 64, 128)
 
@@ -35,8 +45,9 @@ def _bucket(steps: int) -> int:
 
 @partial(jax.jit, static_argnames=("program", "n_steps", "lr"))
 def _local_epoch(params, xb, yb, program: ClientProgram, n_steps: int, lr: float):
-    """xb: (n_steps, B, *feat); yb: (n_steps, B). One pass of Adam."""
-    opt = adam(lr=lr)
+    """xb: (n_steps, B, *feat); yb: (n_steps, B). One optimizer pass
+    (``program.make_optimizer``: Adam for FedAvg programs, SGD for FedSGD)."""
+    opt = program.make_optimizer(lr)
     opt_state = opt.init(params)
 
     def body(carry, batch):
@@ -58,7 +69,12 @@ def _local_epoch(params, xb, yb, program: ClientProgram, n_steps: int, lr: float
 
 @dataclasses.dataclass
 class FLClient:
-    """One EU with its local dataset shard."""
+    """One EU with its local dataset shard and its OWN hyperparameters.
+
+    ``local_epochs=None`` follows the schedule's ``local_steps``; setting it
+    per client creates heterogeneous-effort populations (the engines cohort
+    clients by the full (steps, epochs, batch, lr) tuple).
+    """
 
     cid: int
     shard: Dataset
@@ -66,9 +82,12 @@ class FLClient:
     batch_size: int = 10
     lr: float = 1e-3
     max_steps: int = 128
+    local_epochs: Optional[int] = None
 
     def __post_init__(self):
         self.program = as_program(self.program)  # bare CNNConfig still works
+        if self.local_epochs is not None and self.local_epochs < 1:
+            raise ValueError(f"local_epochs must be >= 1, got {self.local_epochs}")
 
     @property
     def data_size(self) -> int:
@@ -77,13 +96,38 @@ class FLClient:
     def class_counts(self) -> np.ndarray:
         return np.bincount(self.shard.y, minlength=self.shard.n_classes)
 
+    # -- local-work shape (shared by the reference loop and the cohort plans) --
+    def plan_steps(self) -> int:
+        """Bucketed steps one local epoch runs on this shard (0 = empty).
+
+        A ``single_step`` program (FedSGD) always runs exactly one step.
+        """
+        n = len(self.shard)
+        if n == 0:
+            return 0
+        if self.program.single_step:
+            return 1
+        return _bucket(max(1, min(self.max_steps, int(np.ceil(n / self.batch_size)))))
+
+    def epochs_for(self, schedule_epochs: int) -> int:
+        """Local epochs this round: the client override, clamped to one for
+        ``single_step`` programs, otherwise the schedule's ``local_steps``."""
+        if self.program.single_step:
+            return 1
+        return self.local_epochs if self.local_epochs is not None else schedule_epochs
+
     def local_update(self, params, rng: np.random.Generator, epochs: int = 1) -> Tuple[Dict, float]:
-        """Run `epochs` local epochs; returns (new_params, mean_loss)."""
+        """Run local training; returns (new_params, mean_loss).
+
+        ``epochs`` is the schedule default — the client's own
+        ``local_epochs`` (and the program's ``single_step``) override it,
+        exactly as the batched engines resolve it.
+        """
         n = len(self.shard)
         if n == 0:
             return params, 0.0
-        steps = max(1, min(self.max_steps, int(np.ceil(n / self.batch_size))))
-        steps = _bucket(steps)
+        steps = self.plan_steps()
+        epochs = self.epochs_for(epochs)
         loss = 0.0
         for _ in range(epochs):
             idx = rng.permutation(n)

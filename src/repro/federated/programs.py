@@ -19,19 +19,43 @@ bundles everything the HFL machinery needs to know about a workload:
   * feature/label specs           — ``feat_shape`` / ``feat_dtype`` pin the
                                     ``DeviceShardStore`` layout (float
                                     signals for the CNN/MLP, int32 token
-                                    sequences for the LM), ``n_classes`` is
-                                    the label/topic alphabet the KLD-aware
-                                    assignment balances over.
+                                    sequences for the sequence programs),
+                                    ``n_classes`` is the label/topic
+                                    alphabet the KLD-aware assignment
+                                    balances over;
+  * local-SGD semantics           — ``make_optimizer(lr)`` picks the local
+                                    optimizer (Adam for the paper's FedAvg
+                                    programs, plain SGD for FedSGD),
+                                    ``single_step`` forces one gradient
+                                    step per round (FedSGD);
+  * uplink semantics              — ``uplink_bits(model_bits)`` is what one
+                                    EU->edge upload costs the accountant
+                                    and ``quantize_upload(start, trained)``
+                                    transforms the uploaded update (the
+                                    FedSGD wrapper casts the gradient to
+                                    fp16 when ``grad_bits=16``).
 
 Programs are FROZEN dataclasses: they are hashable by value, so they ride
 through ``jax.jit`` as static arguments and equal configs share one
 compiled program (no cache churn when a program is re-created).
 
-``PROGRAMS`` (a ``utils.registry.Registry``) maps names to factories —
-``"cnn"`` (the paper's 1-D CNN, both ``conv_impl`` formulations), ``"mlp"``
-(flattened-feature classifier built from ``models.modules.dense``), and
-``"lm"`` (a small causal transformer over ``models.transformer``).  New
-workloads register a factory and immediately run under every engine,
+``PROGRAMS`` (a ``utils.registry.Registry``) maps names to factories:
+
+  ======== ==========================================================
+  name     workload
+  ======== ==========================================================
+  "cnn"    the paper's 1-D CNN (both ``conv_impl`` formulations)
+  "mlp"    flattened-feature classifier (``models.modules.dense``)
+  "lm"     small causal transformer-LM (``models.transformer``)
+  "moe"    mixture-of-experts LM — dense-gated top-k routing
+           (``models.moe.moe_mlp``), router aux losses in the loss
+  "mamba"  hybrid attention + Mamba (S6) LM (``models.mamba``)
+  "rwkv"   RWKV-6 linear-attention LM (``models.rwkv``)
+  "fedsgd" wrapper around any of the above: single SGD step per
+           round, gradient uplink (``base="cnn"``, ``grad_bits=32``)
+  ======== ==========================================================
+
+New workloads register a factory and immediately run under every engine,
 pipeline, and compression path.
 """
 from __future__ import annotations
@@ -44,14 +68,19 @@ import jax.numpy as jnp
 import numpy as np
 
 from repro.models.cnn1d import HEARTBEAT_CNN, CNNConfig, cnn_apply, cnn_init
-from repro.models.config import ModelConfig
+from repro.models.config import ModelConfig, MoEConfig, RWKVConfig, SSMConfig
 from repro.models.modules import dense, dense_init
 from repro.models.transformer import forward as transformer_forward
 from repro.models.transformer import init_params as transformer_init
 from repro.training.loss import accuracy, lm_loss, softmax_xent
+from repro.training.optimizers import Optimizer, adam, sgd
 from repro.utils.registry import Registry
 
 PROGRAMS = Registry("client_program")
+
+# program names that train on (S,) int32 token shards (build_scenario routes
+# these to the topic-skewed token-stream population)
+SEQUENCE_PROGRAMS = ("lm", "moe", "mamba", "rwkv")
 
 
 @dataclasses.dataclass(frozen=True)
@@ -59,9 +88,29 @@ class ClientProgram:
     """Base class; subclasses add frozen config fields and override hooks.
 
     ``impl`` threads the engines' formulation knob through to programs that
-    have more than one numerically-distinct forward (the CNN's "xla" conv
-    vs the cohort step's batched-GEMM "gemm" form); programs with a single
-    formulation ignore it.  ``impl=None`` means the program's default.
+    have more than one numerically-distinct forward (the CNN's ``"xla"``
+    conv vs the cohort step's batched-GEMM ``"gemm"`` form); programs with
+    a single formulation ignore it.  ``impl=None`` means the program's
+    default.
+
+    Local-SGD hooks (consumed by ``federated.client._local_epoch``,
+    ``engine.cohort``, and both engines):
+
+      * ``make_optimizer(lr)`` — the per-round local optimizer; default
+        ``adam(lr)`` (the paper's setup: fresh Adam state each round).
+      * ``single_step`` — True forces ONE gradient step per round (steps
+        and epochs both clamp to 1), the FedSGD regime.
+
+    Uplink hooks (consumed by the engines' and the reference simulator's
+    accounting; an explicit ``CompressionSpec`` takes precedence over
+    both):
+
+      * ``uplink_bits(model_bits)`` — bits one EU->edge upload costs.
+      * ``quantizes_upload`` / ``quantize_upload(start, trained)`` — when
+        the program transmits a reduced-precision update, the transform is
+        APPLIED (not just accounted): ``quantize_upload`` works leaf-wise,
+        so it accepts both parameter pytrees (reference simulator) and
+        flat ``(D,)`` rows (engines).
     """
 
     @property
@@ -82,6 +131,31 @@ class ClientProgram:
     def metric(self, params, x, y):
         """Mean per-example eval metric (default: classification accuracy)."""
         return accuracy(self.apply(params, x), y)
+
+    # -- local-SGD semantics ---------------------------------------------------
+    def make_optimizer(self, lr: float) -> Optimizer:
+        """Local optimizer for one round (fresh state per round)."""
+        return adam(lr=lr)
+
+    @property
+    def single_step(self) -> bool:
+        """True: one gradient step per round (FedSGD); steps/epochs clamp to 1."""
+        return False
+
+    # -- uplink semantics ------------------------------------------------------
+    def uplink_bits(self, model_bits: float) -> float:
+        """Bits one EU->edge upload costs (default: the full model)."""
+        return model_bits
+
+    @property
+    def quantizes_upload(self) -> bool:
+        return False
+
+    def quantize_upload(self, start, trained):
+        """Transform the uploaded update; identity by default.  Leaf-wise, so
+        callers may pass parameter pytrees or flat ``(D,)`` rows."""
+        del start
+        return trained
 
     # -- data specs -----------------------------------------------------------
     @property
@@ -169,6 +243,9 @@ class MLPProgram(ClientProgram):
         return self.classes
 
 
+# ---------------------------------------------------------------------------
+# sequence programs: token-shard LMs over models.transformer
+# ---------------------------------------------------------------------------
 def tiny_lm_config(
     vocab_size: int = 128,
     seq_len: int = 32,
@@ -199,23 +276,130 @@ def tiny_lm_config(
     )
 
 
+def tiny_moe_config(
+    vocab_size: int = 128,
+    seq_len: int = 32,
+    d_model: int = 32,
+    n_layers: int = 2,
+    n_heads: int = 2,
+    d_ff: int = 32,
+    n_experts: int = 4,
+    top_k: int = 2,
+) -> ModelConfig:
+    """Mixture-of-experts causal LM sized for federated IoT simulation.
+
+    Every layer's FFN is a top-k-routed expert bank (``models.moe``).  At
+    cohort-step token counts the assembly uses the DENSE einsum dispatch
+    (``moe_mlp``): the (tokens, experts) combine matrix is zero outside the
+    top-k but the einsums touch every expert with STATIC shapes, so the
+    vmapped cohort epoch never sees data-dependent shapes — the property
+    that lets the MoE ride the fixed-shape device pipeline unchanged.
+    """
+    return ModelConfig(
+        name=f"moe-tiny-v{vocab_size}-d{d_model}-e{n_experts}",
+        family="moe",
+        n_layers=n_layers,
+        d_model=d_model,
+        n_heads=n_heads,
+        n_kv_heads=n_heads,
+        d_ff=d_ff,
+        vocab_size=vocab_size,
+        moe=MoEConfig(n_experts=n_experts, top_k=top_k),
+        tie_embeddings=True,
+        max_seq=seq_len,
+        dtype="float32",
+    )
+
+
+def tiny_mamba_config(
+    vocab_size: int = 128,
+    seq_len: int = 32,
+    d_model: int = 32,
+    n_layers: int = 2,
+    n_heads: int = 2,
+    d_ff: int = 64,
+    d_state: int = 8,
+    d_conv: int = 4,
+    expand: int = 2,
+) -> ModelConfig:
+    """Jamba-style hybrid LM: attention layer 0, Mamba (S6) mixers after.
+
+    ``n_layers`` must be a multiple of the hybrid block (here the whole
+    stack is one block, so exactly one attention layer anchors the
+    selective-state-space mixers — the minimal hybrid the assembly
+    supports).  The recurrent state stays internal to the chunked
+    associative scan, so the FL layers see an ordinary (B, S) -> logits
+    forward.
+    """
+    return ModelConfig(
+        name=f"mamba-tiny-v{vocab_size}-d{d_model}",
+        family="hybrid",
+        n_layers=n_layers,
+        d_model=d_model,
+        n_heads=n_heads,
+        n_kv_heads=n_heads,
+        d_ff=d_ff,
+        vocab_size=vocab_size,
+        ssm=SSMConfig(d_state=d_state, d_conv=d_conv, expand=expand),
+        hybrid_block=n_layers,
+        act="gelu",
+        tie_embeddings=True,
+        max_seq=seq_len,
+        dtype="float32",
+    )
+
+
+def tiny_rwkv_config(
+    vocab_size: int = 128,
+    seq_len: int = 32,
+    d_model: int = 32,
+    n_layers: int = 2,
+    d_ff: int = 64,
+    head_size: int = 16,
+) -> ModelConfig:
+    """RWKV-6 "Finch" LM: linear attention with data-dependent decay.
+
+    ``d_model`` must be a multiple of ``head_size``.  Like the Mamba
+    config, the chunked recurrence is an implementation detail of the
+    mixer — the program interface is a plain token-in/logits-out forward.
+    """
+    return ModelConfig(
+        name=f"rwkv-tiny-v{vocab_size}-d{d_model}",
+        family="ssm",
+        n_layers=n_layers,
+        d_model=d_model,
+        n_heads=max(1, d_model // head_size),
+        n_kv_heads=max(1, d_model // head_size),
+        d_ff=d_ff,
+        vocab_size=vocab_size,
+        rwkv=RWKVConfig(head_size=head_size),
+        act="gelu",
+        tie_embeddings=True,
+        max_seq=seq_len,
+        dtype="float32",
+    )
+
+
 @dataclasses.dataclass(frozen=True)
-class LMProgram(ClientProgram):
-    """Small causal transformer-LM (``models.transformer``) on token shards.
+class SequenceProgram(ClientProgram):
+    """Shared base for token-sequence LM programs (``models.transformer``).
 
     Shards hold ``(N, seq_len)`` int32 token sequences; the training signal
     is next-token prediction on the sequence itself, so the Dataset label
     ``y`` carries the sequence's TOPIC id instead — that is what gives the
     KLD-aware assignment an imbalance to exploit (``n_classes`` = topics).
+
+    Sequence-state plumbing: the Mamba / RWKV recurrences and the MoE
+    router run INSIDE ``transformer.forward`` with static shapes, so the
+    cohort-vmapped loss, the ``DeviceShardStore`` gather, and the FlatPack
+    flat rows are identical in structure across all sequence programs —
+    subclasses only choose the ``ModelConfig`` family and (for MoE) add
+    auxiliary loss terms via ``_aux_loss``.
     """
 
     cfg: ModelConfig = dataclasses.field(default_factory=tiny_lm_config)
     seq_len: int = 32
     n_topics: int = 4
-
-    @property
-    def name(self) -> str:
-        return "lm"
 
     def init(self, key):
         return transformer_init(key, self.cfg)
@@ -225,9 +409,17 @@ class LMProgram(ClientProgram):
         logits, _ = transformer_forward(params, self.cfg, x)
         return logits
 
+    def _aux_loss(self, aux):
+        """Auxiliary loss terms from the forward's aux dict; None = none."""
+        del aux
+        return None
+
     def loss(self, params, x, y, *, impl: str | None = None):
-        del y  # topic label: assignment-time signal only
-        return lm_loss(self.apply(params, x, impl=impl), x, shift=True)
+        del y, impl  # topic label: assignment-time signal only
+        logits, aux = transformer_forward(params, self.cfg, x)
+        base = lm_loss(logits, x, shift=True)
+        extra = self._aux_loss(aux)
+        return base if extra is None else base + extra
 
     def metric(self, params, x, y):
         """Next-token accuracy (labels are the input shifted by one)."""
@@ -246,6 +438,163 @@ class LMProgram(ClientProgram):
     @property
     def n_classes(self) -> int:
         return self.n_topics
+
+
+@dataclasses.dataclass(frozen=True)
+class LMProgram(SequenceProgram):
+    """Small causal dense-transformer LM on token shards."""
+
+    @property
+    def name(self) -> str:
+        return "lm"
+
+
+@dataclasses.dataclass(frozen=True)
+class MoEProgram(SequenceProgram):
+    """Mixture-of-experts LM: top-k softmax routing, dense-gated dispatch.
+
+    The dense einsum dispatch (``models.moe.moe_mlp``) keeps every shape
+    static under the cohort vmap — routing sparsity lives in the VALUES of
+    the (tokens, experts) combine matrix, never in shapes.  The router's
+    Switch-style load-balance loss and z-loss are added to the next-token
+    loss (``aux_weight`` / ``z_weight``), so router health travels with
+    the federated updates exactly like any other parameter gradient.
+    """
+
+    cfg: ModelConfig = dataclasses.field(default_factory=tiny_moe_config)
+    aux_weight: float = 1e-2
+    z_weight: float = 1e-3
+
+    @property
+    def name(self) -> str:
+        return "moe"
+
+    def _aux_loss(self, aux):
+        return self.aux_weight * aux["moe_aux"] + self.z_weight * aux["moe_z"]
+
+
+@dataclasses.dataclass(frozen=True)
+class MambaProgram(SequenceProgram):
+    """Hybrid attention + Mamba (S6) LM (``models.mamba``).
+
+    The selective-scan recurrent state is produced and consumed inside the
+    chunked associative scan of each mixer, so rounds exchange ONLY model
+    parameters — recurrent state never crosses the FL boundary.
+    """
+
+    cfg: ModelConfig = dataclasses.field(default_factory=tiny_mamba_config)
+
+    @property
+    def name(self) -> str:
+        return "mamba"
+
+
+@dataclasses.dataclass(frozen=True)
+class RWKVProgram(SequenceProgram):
+    """RWKV-6 linear-attention LM (``models.rwkv``).
+
+    Chunked matmul-form recurrence with a carried per-head state matrix;
+    like Mamba, the state is internal to the forward so the FL machinery
+    sees a stateless (B, S) -> logits program.
+    """
+
+    cfg: ModelConfig = dataclasses.field(default_factory=tiny_rwkv_config)
+
+    @property
+    def name(self) -> str:
+        return "rwkv"
+
+
+# ---------------------------------------------------------------------------
+# FedSGD wrapper
+# ---------------------------------------------------------------------------
+@dataclasses.dataclass(frozen=True)
+class FedSGDProgram(ClientProgram):
+    """FedSGD variant of any base program: ONE plain-SGD step per round.
+
+    Classic FedSGD (McMahan et al. '17's E=1 corner): each participating
+    EU computes a single mini-batch gradient from the edge model and the
+    edge averages the resulting one-step updates — equivalent to averaging
+    the gradients themselves.  Concretely the wrapper
+
+      * clamps local work to one gradient step (``single_step``: the
+        engines' steps AND epochs both become 1, whatever the schedule or
+        the client's ``local_epochs`` say);
+      * replaces the per-round Adam of the FedAvg programs with plain SGD
+        (``make_optimizer`` -> ``sgd(lr)``), so the uploaded delta IS
+        ``-lr * gradient``;
+      * accounts the uplink as a gradient payload: ``grad_bits`` bits per
+        parameter (32 = exact; 16 casts the delta through fp16 — actually
+        applied to the update, not just accounted, so the trajectory
+        honestly includes the quantization error).
+
+    ``grad_bits`` accepts 32 or 16.  An explicit ``CompressionSpec`` on
+    the simulation overrides both the quantization and the accounting.
+    """
+
+    base: ClientProgram = dataclasses.field(default_factory=CNNProgram)
+    grad_bits: int = 32
+
+    def __post_init__(self):
+        if self.grad_bits not in (16, 32):
+            raise ValueError(f"grad_bits must be 16 or 32, got {self.grad_bits}")
+        if isinstance(self.base, FedSGDProgram):
+            raise TypeError("FedSGDProgram cannot wrap another FedSGDProgram")
+
+    @property
+    def name(self) -> str:
+        return f"fedsgd-{self.base.name}"
+
+    # -- delegate the model itself --------------------------------------------
+    def init(self, key):
+        return self.base.init(key)
+
+    def apply(self, params, x, *, impl: str | None = None):
+        return self.base.apply(params, x, impl=impl)
+
+    def loss(self, params, x, y, *, impl: str | None = None):
+        return self.base.loss(params, x, y, impl=impl)
+
+    def metric(self, params, x, y):
+        return self.base.metric(params, x, y)
+
+    @property
+    def feat_shape(self) -> Tuple[int, ...]:
+        return self.base.feat_shape
+
+    @property
+    def feat_dtype(self):
+        return self.base.feat_dtype
+
+    @property
+    def n_classes(self) -> int:
+        return self.base.n_classes
+
+    # -- FedSGD semantics ------------------------------------------------------
+    @property
+    def single_step(self) -> bool:
+        return True
+
+    def make_optimizer(self, lr: float) -> Optimizer:
+        return sgd(lr=lr)
+
+    def uplink_bits(self, model_bits: float) -> float:
+        return model_bits * (self.grad_bits / 32.0)
+
+    @property
+    def quantizes_upload(self) -> bool:
+        return self.grad_bits < 32
+
+    def quantize_upload(self, start, trained):
+        """fp16 round-trip on the update delta (leaf-wise: works on trees
+        and flat rows alike); exact passthrough at ``grad_bits=32``."""
+        if self.grad_bits >= 32:
+            return trained
+        return jax.tree.map(
+            lambda s, t: s + (t - s).astype(jnp.float16).astype(t.dtype),
+            start,
+            trained,
+        )
 
 
 def as_program(obj) -> ClientProgram:
@@ -278,3 +627,43 @@ def _lm_program(
 ) -> LMProgram:
     cfg = tiny_lm_config(vocab_size=vocab_size, seq_len=seq_len, **cfg_kw)
     return LMProgram(cfg=cfg, seq_len=seq_len, n_topics=n_topics)
+
+
+@PROGRAMS.register("moe")
+def _moe_program(
+    vocab_size: int = 128,
+    seq_len: int = 32,
+    n_topics: int = 4,
+    aux_weight: float = 1e-2,
+    z_weight: float = 1e-3,
+    **cfg_kw,
+) -> MoEProgram:
+    cfg = tiny_moe_config(vocab_size=vocab_size, seq_len=seq_len, **cfg_kw)
+    return MoEProgram(
+        cfg=cfg, seq_len=seq_len, n_topics=n_topics,
+        aux_weight=aux_weight, z_weight=z_weight,
+    )
+
+
+@PROGRAMS.register("mamba")
+def _mamba_program(
+    vocab_size: int = 128, seq_len: int = 32, n_topics: int = 4, **cfg_kw
+) -> MambaProgram:
+    cfg = tiny_mamba_config(vocab_size=vocab_size, seq_len=seq_len, **cfg_kw)
+    return MambaProgram(cfg=cfg, seq_len=seq_len, n_topics=n_topics)
+
+
+@PROGRAMS.register("rwkv")
+def _rwkv_program(
+    vocab_size: int = 128, seq_len: int = 32, n_topics: int = 4, **cfg_kw
+) -> RWKVProgram:
+    cfg = tiny_rwkv_config(vocab_size=vocab_size, seq_len=seq_len, **cfg_kw)
+    return RWKVProgram(cfg=cfg, seq_len=seq_len, n_topics=n_topics)
+
+
+@PROGRAMS.register("fedsgd")
+def _fedsgd_program(
+    base: str = "cnn", grad_bits: int = 32, **base_kw
+) -> FedSGDProgram:
+    """Wrap any registered base program: ``PROGRAMS.get("fedsgd")(base="mlp")``."""
+    return FedSGDProgram(base=PROGRAMS.get(base)(**base_kw), grad_bits=grad_bits)

@@ -10,14 +10,21 @@ and exposes every assignment strategy for comparison.
     (default; byte-identical to the pre-program builder);
   * ``"mlp"`` — a flattened-feature MLP classifier on the SAME shards, so
     every paper scenario doubles as an MLP workload;
-  * ``"lm"``  — a small causal transformer-LM on topic-skewed token-stream
-    shards (``data.lm_stream``); sequence TOPICS play the role of classes,
-    so the KLD-aware assignment still has imbalance to exploit.
+  * ``"lm"`` / ``"moe"`` / ``"mamba"`` / ``"rwkv"`` — sequence LMs
+    (dense transformer / mixture-of-experts / hybrid attn+Mamba / RWKV-6)
+    on topic-skewed token-stream shards (``data.lm_stream``); sequence
+    TOPICS play the role of classes, so the KLD-aware assignment still has
+    imbalance to exploit.
+
+``fedsgd=True`` wraps the chosen program in ``FedSGDProgram`` (one plain
+SGD step per round, gradient uplink accounting); ``hparams=`` assigns
+per-EU hyperparameter overrides (heterogeneous ``lr`` / ``batch_size`` /
+``local_epochs`` / ``max_steps`` populations).
 """
 from __future__ import annotations
 
 import dataclasses
-from typing import List, Optional
+from typing import List, Mapping, Optional, Sequence
 
 import jax
 import numpy as np
@@ -34,11 +41,12 @@ from repro.data.partition import (
 from repro.data.synthetic_health import Dataset, heartbeat_like, seizure_like
 from repro.federated.client import FLClient
 from repro.federated.programs import (
+    PROGRAMS,
+    SEQUENCE_PROGRAMS,
     ClientProgram,
     CNNProgram,
-    LMProgram,
+    FedSGDProgram,
     MLPProgram,
-    tiny_lm_config,
 )
 from repro.federated.simulation import HFLSimulation, SimResult, centralized_baseline
 from repro.models.cnn1d import HEARTBEAT_CNN, SEIZURE_CNN
@@ -113,11 +121,19 @@ class Scenario:
         engine:   "reference" — the sequential readable simulator;
                   "sync"      — batched cohorts + flat-buffer aggregation,
                                 same semantics as the reference;
-                  "async"     — event-driven staleness-weighted engine.
+                  "async"     — event-driven staleness-weighted engine
+                                (extra knobs: ``staleness_decay`` in
+                                [0, 1], ``quorum`` in (0, 1]).
         backend:  aggregation path for the engines ("pallas" | "reference").
         pipeline: sync-engine round pipeline ("device" — fixed-shape
                   segment-kernel programs, shard store; "host" — the PR 1
                   host-major loop).
+        compression: None | ``core.compression.CompressionSpec`` (kinds
+                  "topk" | "ternary" | "none") applied to uplinks with
+                  error feedback; the accountant then counts compressed
+                  bits.  Overrides any program-level uplink quantization
+                  (FedSGD ``grad_bits=16``).
+        upp:      per-round client participation probability in (0, 1].
         """
         if engine == "reference":
             sim = HFLSimulation(
@@ -193,10 +209,40 @@ def _eus_per_edge(n_edges: int, n_eus: int) -> List[int]:
     return [base + (1 if j < extra else 0) for j in range(n_edges)]
 
 
+def _hparam_kwargs(
+    hparams: Optional[Sequence[Optional[Mapping]]], n_eus: int
+) -> List[dict]:
+    """Validate per-EU hyperparameter overrides into FLClient kwargs.
+
+    Overrides are passed to the ``FLClient`` CONSTRUCTOR (not set after the
+    fact), so ``__post_init__`` validation applies to them too.
+    """
+    if hparams is None:
+        return [{}] * n_eus
+    if len(hparams) != n_eus:
+        raise ValueError(
+            f"hparams must have one entry per EU ({n_eus}), got {len(hparams)}"
+        )
+    allowed = {"lr", "batch_size", "local_epochs", "max_steps"}
+    out = []
+    for hp in hparams:
+        hp = dict(hp or {})
+        unknown = set(hp) - allowed
+        if unknown:
+            raise ValueError(
+                f"unknown hyperparameters {sorted(unknown)}; allowed: {sorted(allowed)}"
+            )
+        out.append(hp)
+    return out
+
+
 def build_scenario(
     dataset: str = "heartbeat",
     *,
     model: str = "cnn",
+    fedsgd: bool = False,
+    grad_bits: int = 32,
+    hparams: Optional[Sequence[Optional[Mapping]]] = None,
     seed: int = 0,
     scale: float = 1.0,
     mean_dist: float = 300.0,
@@ -210,17 +256,38 @@ def build_scenario(
 ) -> Scenario:
     """Construct an experimental setup with synthetic data.
 
-    ``dataset`` picks the shards ("heartbeat" | "seizure" | "lm"),
-    ``model`` the client program ("cnn" | "mlp" | "lm").  ``dataset="lm"``
-    implies ``model="lm"`` and vice versa — token streams only make sense
-    under the LM program.  The ``lm_*`` knobs size the LM population;
-    ``scale`` scales sequences-per-EU there just as it scales samples in
-    the health setups.
+    ``dataset`` picks the shards ("heartbeat" | "seizure" | "lm"), ``model``
+    the client program:
+
+      * ``"cnn"`` | ``"mlp"`` — classifiers on the synthetic health shards;
+      * ``"lm"`` | ``"moe"`` | ``"mamba"`` | ``"rwkv"`` — sequence LMs on
+        the topic-skewed token-stream population (``dataset="lm"`` implied;
+        conversely ``dataset="lm"`` defaults the model to ``"lm"``).
+
+    ``fedsgd=True`` wraps the chosen program in ``FedSGDProgram`` — one
+    plain-SGD step per round and gradient-payload uplink accounting
+    (``grad_bits`` = 32 exact | 16 fp16-cast gradients).
+
+    ``hparams`` (optional) is one mapping per EU (or None entries) of
+    ``FLClient`` overrides — ``lr`` | ``batch_size`` | ``local_epochs`` |
+    ``max_steps`` — building heterogeneous-hyperparameter populations; the
+    engines cohort clients by the resulting tuples.
+
+    The ``lm_*`` knobs size the sequence-model population; ``scale``
+    scales sequences-per-EU there just as it scales samples in the health
+    setups.
     """
-    if dataset == "lm" or model == "lm":
-        if model not in ("cnn", "lm"):  # "cnn" is just the unset default
-            raise ValueError(f"dataset='lm' requires model='lm', got {model!r}")
+    seq_model = model in SEQUENCE_PROGRAMS
+    if dataset == "lm" or seq_model:
+        if not seq_model and model != "cnn":  # "cnn" is just the unset default
+            raise ValueError(
+                f"dataset='lm' requires a sequence model {SEQUENCE_PROGRAMS}, got {model!r}"
+            )
         return _build_lm_scenario(
+            model=model if seq_model else "lm",
+            fedsgd=fedsgd,
+            grad_bits=grad_bits,
+            hparams=hparams,
             seed=seed,
             scale=scale,
             mean_dist=mean_dist,
@@ -253,8 +320,13 @@ def build_scenario(
     elif model == "mlp":
         program = MLPProgram(feat=(cnn.seq_len, cnn.in_channels), classes=k)
     else:
-        raise ValueError(f"unknown model {model!r} (cnn | mlp | lm)")
-    clients = [FLClient(i, shards[i], program) for i in range(n_eus)]
+        raise ValueError(
+            f"unknown model {model!r} (cnn | mlp | {' | '.join(SEQUENCE_PROGRAMS)})"
+        )
+    if fedsgd:
+        program = FedSGDProgram(base=program, grad_bits=grad_bits)
+    kw = _hparam_kwargs(hparams, n_eus)
+    clients = [FLClient(i, shards[i], program, **kw[i]) for i in range(n_eus)]
     wp = wp or WirelessParams()
     topo = sample_topology(
         jax.random.PRNGKey(seed), n_eus, n_edges, mean_dist=mean_dist,
@@ -263,7 +335,7 @@ def build_scenario(
     model_bits = tree_size_bytes(program.init(jax.random.PRNGKey(0))) * 8
     cost = build_cost_matrices(topo, model_bits, wp)
     return Scenario(
-        name=f"{dataset}" if model == "cnn" else f"{dataset}-{model}",
+        name=f"{dataset}" if program.name == "cnn" else f"{dataset}-{program.name}",
         program=program,
         clients=clients,
         test=test,
@@ -278,6 +350,10 @@ def build_scenario(
 
 def _build_lm_scenario(
     *,
+    model: str,
+    fedsgd: bool,
+    grad_bits: int,
+    hparams: Optional[Sequence[Optional[Mapping]]],
     seed: int,
     scale: float,
     mean_dist: float,
@@ -289,13 +365,16 @@ def _build_lm_scenario(
     seq_len: int,
     vocab: int,
 ) -> Scenario:
-    """Topic-skewed token-stream population for the transformer-LM program.
+    """Topic-skewed token-stream population for the sequence programs
+    (dense LM / MoE / Mamba / RWKV — ``model`` picks which).
 
     Each EU's shard is dominated by one Markov TOPIC (the ``lm_stream``
     transition-matrix families) with a sprinkle of the others — the LM
     counterpart of the paper's per-EU dominant-class imbalance, recorded in
     ``class_counts`` so EARA balances edge TOPIC mixtures exactly as it
-    balances edge class mixtures in the health setups.
+    balances edge class mixtures in the health setups.  The shard layout is
+    identical for every sequence program ((N, seq_len) int32), so the SAME
+    population compares workloads apples-to-apples.
     """
     rng = np.random.default_rng(seed)
     base = max(1, int(round(40 * scale)))
@@ -328,12 +407,15 @@ def _build_lm_scenario(
         ),
         n_classes=n_topics,
     )
-    program = LMProgram(
-        cfg=tiny_lm_config(vocab_size=vocab, seq_len=seq_len),
-        seq_len=seq_len,
-        n_topics=n_topics,
+    # the registry factories build the tiny IoT-sized config per model, so
+    # a newly registered sequence program is reachable here for free
+    program: ClientProgram = PROGRAMS.get(model)(
+        vocab_size=vocab, seq_len=seq_len, n_topics=n_topics
     )
-    clients = [FLClient(i, shards[i], program) for i in range(n_eus)]
+    if fedsgd:
+        program = FedSGDProgram(base=program, grad_bits=grad_bits)
+    kw = _hparam_kwargs(hparams, n_eus)
+    clients = [FLClient(i, shards[i], program, **kw[i]) for i in range(n_eus)]
     wp = wp or WirelessParams()
     topo = sample_topology(
         jax.random.PRNGKey(seed), n_eus, n_edges, mean_dist=mean_dist,
@@ -342,7 +424,7 @@ def _build_lm_scenario(
     model_bits = tree_size_bytes(program.init(jax.random.PRNGKey(0))) * 8
     cost = build_cost_matrices(topo, model_bits, wp)
     return Scenario(
-        name="lm",
+        name=program.name,
         program=program,
         clients=clients,
         test=test,

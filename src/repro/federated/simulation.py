@@ -121,11 +121,17 @@ class HFLSimulation:
         self._comp_errors: Dict[int, object] = {}
         if compression is not None and compression.kind != "none":
             self._uplink_bits = compression.bits(self.params)
+        else:
+            # program-level uplink semantics (FedSGD gradient payloads;
+            # model_bits for everything else, the accountant's default)
+            self._uplink_bits = self.program.uplink_bits(model_bits)
 
     def _compress_upload(self, cid: int, start, trained):
-        """Apply the spec to the EU's model delta with per-EU error feedback."""
+        """Apply the spec to the EU's model delta with per-EU error feedback;
+        with no spec, fall back to the program's own upload transform
+        (FedSGD fp16 gradients; identity for everything else)."""
         if self.compression is None or self.compression.kind == "none":
-            return trained
+            return self.program.quantize_upload(start, trained)
         delta = tree_sub(trained, start)
         sparse, err = self.compression.apply(delta, self._comp_errors.get(cid))
         self._comp_errors[cid] = err

@@ -59,7 +59,16 @@ def hier_segment_aggregate(
     interpret: Optional[bool] = None,
 ) -> jnp.ndarray:
     """updates: (N, D); seg_ids, weights: (N,). Returns (n_segments, D) of
-    per-segment weighted averages; empty segments return zeros."""
+    per-segment weighted averages; empty segments return zeros.
+
+    Knobs: ``block`` — VMEM tile width over D (clamped to D; D is padded
+    to a multiple so any D works); ``interpret`` — ``True`` runs the
+    Pallas interpreter (correctness oracle, any backend), ``False``
+    forces hardware lowering (TPU), ``None`` (default) auto-selects:
+    hardware on TPU, interpreter elsewhere.  Callers that want speed
+    off-TPU should route through ``engine.flatten.flat_segment_mean``,
+    which picks the ``segment_sum`` formulation instead.
+    """
     n, d = updates.shape
     if n == 0 or d == 0:
         return jnp.zeros((n_segments, d), updates.dtype)

@@ -1,6 +1,9 @@
 """ClientProgram abstraction tests: registry, per-program FlatPack
 round-trips, store dtype handling, MLP host/device/reference equivalence,
-LM end-to-end smoke, and the async multicast-uplink accounting."""
+sequence-program (LM/MoE/Mamba/RWKV) end-to-end smokes and pipeline parity,
+FedSGD single-step semantics + gradient uplink accounting, heterogeneous
+per-client hyperparameters (cohort grouping, mixed-vs-solo bit identity,
+RNG parity), and the async multicast-uplink accounting."""
 import jax
 import jax.numpy as jnp
 import numpy as np
@@ -9,16 +12,24 @@ import pytest
 from repro.core.hfl import HFLSchedule
 from repro.data.synthetic_health import Dataset
 from repro.engine import AsyncHFLEngine, BatchedSyncEngine, DeviceShardStore, FlatPack
-from repro.engine.cohort import CohortPlan
+from repro.engine.cohort import CohortPlan, LocalJob, run_cohorts
 from repro.federated import build_scenario
 from repro.federated.client import FLClient
 from repro.federated.programs import (
     PROGRAMS,
+    SEQUENCE_PROGRAMS,
     CNNProgram,
+    FedSGDProgram,
     LMProgram,
+    MambaProgram,
     MLPProgram,
+    MoEProgram,
+    RWKVProgram,
     as_program,
     tiny_lm_config,
+    tiny_mamba_config,
+    tiny_moe_config,
+    tiny_rwkv_config,
 )
 from repro.models.cnn1d import HEARTBEAT_CNN, CNNConfig
 
@@ -33,16 +44,41 @@ def _programs():
             seq_len=8,
             n_topics=3,
         ),
+        MoEProgram(
+            cfg=tiny_moe_config(vocab_size=32, seq_len=8, d_model=8, n_layers=2,
+                                n_heads=2, d_ff=8, n_experts=4, top_k=2),
+            seq_len=8,
+            n_topics=3,
+        ),
+        MambaProgram(
+            cfg=tiny_mamba_config(vocab_size=32, seq_len=8, d_model=16, n_layers=2,
+                                  n_heads=2, d_ff=16, d_state=4),
+            seq_len=8,
+            n_topics=3,
+        ),
+        RWKVProgram(
+            cfg=tiny_rwkv_config(vocab_size=32, seq_len=8, d_model=16, n_layers=2,
+                                 d_ff=16, head_size=8),
+            seq_len=8,
+            n_topics=3,
+        ),
+        FedSGDProgram(base=MLPProgram(feat=(32, 1), classes=3, hidden=8), grad_bits=16),
     ]
 
 
 # -- registry ---------------------------------------------------------------
 def test_registry_has_all_programs():
-    assert {"cnn", "mlp", "lm"} <= set(PROGRAMS.names())
+    assert {"cnn", "mlp", "lm", "moe", "mamba", "rwkv", "fedsgd"} <= set(PROGRAMS.names())
     assert PROGRAMS.get("cnn")().name == "cnn"
     assert PROGRAMS.get("mlp")(feat=(10, 2), n_classes=4).n_classes == 4
     lm = PROGRAMS.get("lm")(vocab_size=64, seq_len=16, n_topics=3)
     assert lm.feat_dtype == np.int32 and lm.feat_shape == (16,)
+    for name in ("moe", "mamba", "rwkv"):
+        p = PROGRAMS.get(name)(vocab_size=64, seq_len=16, n_topics=3)
+        assert p.name == name
+        assert p.feat_dtype == np.int32 and p.feat_shape == (16,) and p.n_classes == 3
+    fs = PROGRAMS.get("fedsgd")(base="mlp", feat=(10, 2), n_classes=4)
+    assert fs.name == "fedsgd-mlp" and fs.single_step and fs.n_classes == 4
 
 
 def test_as_program_coerces_cnn_config():
@@ -265,6 +301,261 @@ def _tiny_population(dual: bool):
     return program, clients, test, asn
 
 
+# -- MoE / Mamba / RWKV: end-to-end on every pipeline -------------------------
+@pytest.fixture(scope="module", params=("moe", "mamba", "rwkv"))
+def seq_model_runs(request):
+    """One tiny topic-skewed scenario per sequence model, simulated 2 cloud
+    rounds on sync-device, sync-host, and async.  Module-scoped per model so
+    the (compile-heavy) runs happen once and every assertion reuses them."""
+    model = request.param
+    sc = build_scenario(model=model, scale=0.04, seed=0, n_test_per_class=6,
+                        lm_eus=5, lm_edges=2, lm_topics=3, lm_seq_len=16,
+                        lm_vocab=64)
+    a = sc.assign("eara-sca")
+    runs = {
+        "device": sc.simulate(a.lam, cloud_rounds=2, seed=3, engine="sync",
+                              pipeline="device"),
+        "host": sc.simulate(a.lam, cloud_rounds=2, seed=3, engine="sync",
+                            pipeline="host"),
+        "async": sc.simulate(a.lam, cloud_rounds=2, seed=3, engine="async"),
+    }
+    return model, sc, runs
+
+
+def test_seq_program_scenario_wiring(seq_model_runs):
+    model, sc, _ = seq_model_runs
+    assert sc.program.name == model and sc.name == model
+    assert sc.program.feat_dtype == np.int32
+    assert sc.class_counts.shape == (5, 3)
+    # topic skew present: the imbalance EARA needs
+    frac = sc.class_counts.max(axis=1) / sc.class_counts.sum(axis=1)
+    assert (frac > 0.5).all()
+
+
+@pytest.mark.parametrize("engine", ["device", "host", "async"])
+def test_seq_program_trains_two_rounds(seq_model_runs, engine):
+    """Acceptance bar: >= 2 cloud rounds on both sync pipelines AND the
+    async engine with finite, non-degenerate loss for every new program."""
+    model, sc, runs = seq_model_runs
+    res = runs[engine]
+    assert len(res.history) == 2
+    for m in res.history:
+        assert 0.0 <= m.test_acc <= 1.0
+        assert np.isfinite(m.mean_local_loss) and m.mean_local_loss > 0.0
+    assert res.accountant.cloud_rounds == 2
+
+
+def test_seq_program_host_vs_device_parity(seq_model_runs):
+    """The sequence programs have a single formulation, so host and device
+    pipelines share every jitted epoch computation — metrics must agree to
+    float tolerance (same bar as the MLP parity tests)."""
+    _, _, runs = seq_model_runs
+    host, dev = runs["host"], runs["device"]
+    for mh, md in zip(host.history, dev.history):
+        assert md.test_acc == pytest.approx(mh.test_acc, abs=1e-6)
+        assert md.mean_local_loss == pytest.approx(mh.mean_local_loss, abs=1e-5)
+    assert dev.accountant.eu_traffic_bits() == host.accountant.eu_traffic_bits()
+
+
+# -- FedSGD: single-step semantics + gradient uplink accounting ---------------
+def _fedsgd_population(grad_bits: int):
+    rng = np.random.default_rng(1)
+    program = FedSGDProgram(base=MLPProgram(feat=(8, 1), classes=2, hidden=4),
+                            grad_bits=grad_bits)
+    clients = [
+        FLClient(i, Dataset(rng.normal(size=(6, 8, 1)).astype(np.float32),
+                            rng.integers(0, 2, 6).astype(np.int32), 2), program)
+        for i in range(4)
+    ]
+    test = Dataset(rng.normal(size=(8, 8, 1)).astype(np.float32),
+                   rng.integers(0, 2, 8).astype(np.int32), 2)
+    asn = np.zeros((4, 2))
+    asn[np.arange(4), np.arange(4) % 2] = 1.0
+    return program, clients, test, asn
+
+
+def test_fedsgd_takes_one_sgd_step():
+    """The wrapper's whole contract: whatever the schedule or the client's
+    local_epochs say, local work is ONE plain-SGD step — the uploaded
+    delta is exactly -lr * grad on the drawn batch."""
+    program, clients, test, asn = _fedsgd_population(grad_bits=32)
+    clients[0].local_epochs = 3  # must be overridden by single_step
+    assert all(c.plan_steps() == 1 for c in clients)
+    assert clients[0].epochs_for(5) == 1
+    start = program.init(jax.random.PRNGKey(7))
+    rng = np.random.default_rng(0)
+    rng2 = np.random.default_rng(0)
+    upd, _ = clients[0].local_update(start, rng, epochs=5)
+    # replicate the single draw and take the step by hand
+    n = len(clients[0].shard)
+    idx = rng2.permutation(n)
+    need = clients[0].batch_size
+    if need > n:
+        idx = np.concatenate([idx, rng2.integers(0, n, need - n)])
+    idx = idx[:need]
+    x = jnp.asarray(clients[0].shard.x[idx])
+    y = jnp.asarray(clients[0].shard.y[idx])
+    grads = jax.grad(lambda p: program.loss(p, x, y))(start)
+    for leaf_u, leaf_s, leaf_g in zip(
+        jax.tree.leaves(upd), jax.tree.leaves(start), jax.tree.leaves(grads)
+    ):
+        np.testing.assert_allclose(
+            np.asarray(leaf_u), np.asarray(leaf_s) - clients[0].lr * np.asarray(leaf_g),
+            atol=1e-7,
+        )
+
+
+@pytest.mark.parametrize("grad_bits", [32, 16])
+def test_fedsgd_gradient_uplink_accounting(grad_bits):
+    """Distinct uplink accounting: the EU->edge payload is a gradient at
+    grad_bits per parameter (downlink stays a full model broadcast), and
+    the engines agree with the reference simulator on both the bits and
+    the trajectory."""
+    from repro.federated.simulation import HFLSimulation
+
+    program, clients, test, asn = _fedsgd_population(grad_bits)
+    ref = HFLSimulation(clients, asn, program, test, seed=0)
+    r_ref = ref.run(2)
+    eng = BatchedSyncEngine(clients, asn, program, test, seed=0)
+    r_eng = eng.run(2)
+    bits = eng.accountant.model_bits
+    for i in range(len(clients)):
+        assert eng.accountant.eu_bits_up[i] == pytest.approx(
+            2 * bits * grad_bits / 32.0
+        )
+        assert eng.accountant.eu_bits_down[i] == pytest.approx(2 * bits)
+    assert ref.accountant.eu_bits_up == pytest.approx(eng.accountant.eu_bits_up)
+    for mr, me in zip(r_ref.history, r_eng.history):
+        assert me.test_acc == pytest.approx(mr.test_acc, abs=1e-6)
+        assert me.mean_local_loss == pytest.approx(mr.mean_local_loss, abs=1e-5)
+
+
+def test_fedsgd_fp16_quantization_is_applied():
+    """grad_bits=16 must CHANGE the uploaded update (fp16 cast applied, not
+    just accounted) while grad_bits=32 is an exact passthrough."""
+    program16 = FedSGDProgram(base=MLPProgram(feat=(4, 1), classes=2, hidden=2),
+                              grad_bits=16)
+    start = jnp.zeros((5,), jnp.float32)
+    trained = jnp.asarray([1.0, 1e-9, -2.5, 3.0e-8, 0.1], jnp.float32)
+    q = program16.quantize_upload(start, trained)
+    np.testing.assert_array_equal(
+        np.asarray(q), np.asarray(trained.astype(jnp.float16).astype(jnp.float32))
+    )
+    program32 = FedSGDProgram(base=program16.base, grad_bits=32)
+    assert program32.quantize_upload(start, trained) is trained
+    with pytest.raises(ValueError):
+        FedSGDProgram(base=program16.base, grad_bits=8)
+    with pytest.raises(TypeError):
+        FedSGDProgram(base=program16)
+
+
+# -- heterogeneous per-client hyperparameters --------------------------------
+def _hetero_clients(program, rng, sizes, hparams):
+    clients = []
+    for i, (n, hp) in enumerate(zip(sizes, hparams)):
+        shard = Dataset(rng.normal(size=(n, 16, 1)).astype(np.float32),
+                        rng.integers(0, 3, n).astype(np.int32), 3)
+        clients.append(FLClient(i, shard, program, **hp))
+    return clients
+
+
+def test_cohort_plan_groups_by_hparam_tuple():
+    """Clients split into one fixed-shape cohort per distinct
+    (steps, batch, lr, epochs) tuple; draws stay in global client order."""
+    rng = np.random.default_rng(0)
+    program = MLPProgram(feat=(16, 1), classes=3, hidden=4)
+    hps = [dict(lr=1e-3), dict(lr=1e-3), dict(lr=5e-3, local_epochs=2),
+           dict(lr=5e-3, local_epochs=2), dict(lr=1e-3)]
+    clients = _hetero_clients(program, rng, [8] * 5, hps)
+    plan = CohortPlan(clients)
+    groups, passthrough = plan.draw(np.random.default_rng(1), np.ones(5, bool), 1)
+    assert len(passthrough) == 0
+    by_members = {tuple(g.members): g for g in groups}
+    assert set(by_members) == {(0, 1, 4), (2, 3)}
+    g_a, g_b = by_members[(0, 1, 4)], by_members[(2, 3)]
+    assert g_a.lr == 1e-3 and g_a.epochs == 1 and g_a.idx.shape == (3, 1, 1, 10)
+    assert g_b.lr == 5e-3 and g_b.epochs == 2 and g_b.idx.shape == (2, 2, 1, 10)
+
+
+def test_mixed_hparam_cohorts_bit_identical_to_solo():
+    """Acceptance bar: a mixed-hyperparameter cohort batch produces
+    BIT-identical trained rows to running each hyperparameter group alone
+    (same starts, same drawn indices) — grouping isolates the groups'
+    computations exactly."""
+    rng = np.random.default_rng(0)
+    program = MLPProgram(feat=(16, 1), classes=3, hidden=4)
+    hps = [dict(lr=1e-3)] * 2 + [dict(lr=5e-3, local_epochs=2)] * 2
+    clients = _hetero_clients(program, rng, [8] * 4, hps)
+    pack = FlatPack(program.init(jax.random.PRNGKey(0)))
+    start = pack.ravel(program.init(jax.random.PRNGKey(1)))
+
+    def jobs_for(cs):
+        # fixed per-client index draws so mixed and solo see identical data
+        out = []
+        for c in cs:
+            epochs = c.epochs_for(1)
+            idx = [np.random.default_rng(100 + c.cid).integers(0, 8, (1, 10))
+                   for _ in range(epochs)]
+            out.append(LocalJob(c, start, idx, steps=1))
+        return out
+
+    mixed = run_cohorts(jobs_for(clients), program, pack)
+    solo_a = run_cohorts(jobs_for(clients[:2]), program, pack)
+    solo_b = run_cohorts(jobs_for(clients[2:]), program, pack)
+    for c in clients[:2]:
+        np.testing.assert_array_equal(
+            np.asarray(mixed.row(c.cid)), np.asarray(solo_a.row(c.cid))
+        )
+    for c in clients[2:]:
+        np.testing.assert_array_equal(
+            np.asarray(mixed.row(c.cid)), np.asarray(solo_b.row(c.cid))
+        )
+    assert mixed.loss == {**solo_a.loss, **solo_b.loss}
+
+
+def test_hetero_explicit_defaults_match_homogeneous_rng_parity():
+    """RNG-parity pin: setting local_epochs explicitly to the schedule's
+    value must leave the device-pipeline trajectory BIT-identical to the
+    homogeneous run (the grouping key changes, the RNG stream must not)."""
+    sc_kw = dict(scale=0.02, seed=0, n_test_per_class=10)
+    base = build_scenario("heartbeat", model="mlp", **sc_kw)
+    hp = [dict(local_epochs=2)] * len(base.clients)
+    explicit = build_scenario("heartbeat", model="mlp", hparams=hp, **sc_kw)
+    a = base.assign("eara-sca")
+    kw = dict(cloud_rounds=2, schedule=HFLSchedule(2, 1), seed=5, engine="sync")
+    r_base = base.simulate(a.lam, **kw)
+    r_expl = explicit.simulate(a.lam, **kw)
+    for la, lb in zip(jax.tree.leaves(r_base.final_params),
+                      jax.tree.leaves(r_expl.final_params)):
+        np.testing.assert_array_equal(np.asarray(la), np.asarray(lb))
+
+
+def test_hetero_hparams_engine_matches_reference():
+    """Two distinct (lr, local-epochs) groups: the batched engines must
+    reproduce the reference simulator's trajectory (the reference trains
+    each client sequentially with its own hyperparameters, so this parity
+    IS the per-group-correctness guarantee end to end)."""
+    m = 18
+    hp = [dict(lr=1e-3, local_epochs=1)] * (m // 2) + \
+         [dict(lr=5e-4, local_epochs=2)] * (m - m // 2)
+    sc = build_scenario("heartbeat", model="mlp", hparams=hp, scale=0.02,
+                        seed=0, n_test_per_class=10)
+    assert {(c.lr, c.local_epochs) for c in sc.clients} == {(1e-3, 1), (5e-4, 2)}
+    a = sc.assign("eara-sca")
+    ref = sc.simulate(a.lam, cloud_rounds=2, seed=0)
+    runs = {
+        pipeline: sc.simulate(a.lam, cloud_rounds=2, seed=0, engine="sync",
+                              pipeline=pipeline)
+        for pipeline in ("host", "device")
+    }
+    for res in runs.values():
+        for mr, me in zip(ref.history, res.history):
+            assert me.test_acc == pytest.approx(mr.test_acc, abs=1e-6)
+            assert me.mean_local_loss == pytest.approx(mr.mean_local_loss, abs=1e-5)
+        assert res.accountant.eu_traffic_bits() == ref.accountant.eu_traffic_bits()
+
+
+# -- async accounting: multicast per dispatch --------------------------------
 @pytest.mark.parametrize("dual", [False, True])
 def test_async_uplink_matches_sync_multicast_accounting(dual):
     """One multicast uplink per client per dispatch: under dual-connectivity

@@ -1,0 +1,83 @@
+"""Markdown link checker for the repo's docs (CI docs job).
+
+Scans the given markdown files (default: README.md, ROADMAP.md, docs/*.md)
+for inline links/images and verifies every RELATIVE target resolves to a
+file or directory in the working tree (``#anchors`` are stripped; anchors
+within the same file are checked against the file's headings).  External
+``http(s)``/``mailto`` links are intentionally NOT fetched — CI must not
+flake on third-party outages — but their syntax is still parsed.
+
+Also verifies that inline code references of the form ```path/to/file.py```
+that LOOK like repo paths exist, so docs cannot point at renamed modules.
+
+Exit code 0 = clean, 1 = broken links (each printed as file:line).
+
+  python tools/check_docs.py [FILES...]
+"""
+from __future__ import annotations
+
+import re
+import sys
+from pathlib import Path
+
+ROOT = Path(__file__).resolve().parent.parent
+
+LINK_RE = re.compile(r"!?\[[^\]]*\]\(([^)\s]+)(?:\s+\"[^\"]*\")?\)")
+# `src/...` / `docs/...` / `benchmarks/...` style inline-code path mentions
+CODE_PATH_RE = re.compile(
+    r"`((?:src|docs|tests|benchmarks|examples|tools)/[A-Za-z0-9_./-]+\.[a-z]+)`"
+)
+HEADING_RE = re.compile(r"^#{1,6}\s+(.*)$", re.MULTILINE)
+
+
+def _anchor_of(heading: str) -> str:
+    """GitHub-style anchor: lowercase, spaces->dashes, drop punctuation."""
+    a = heading.strip().lower()
+    a = re.sub(r"[`*_~]", "", a)
+    a = re.sub(r"[^\w\- ]", "", a)
+    return a.replace(" ", "-")
+
+
+def check_file(md: Path) -> list[str]:
+    errors: list[str] = []
+    text = md.read_text(encoding="utf-8")
+    anchors = {_anchor_of(h) for h in HEADING_RE.findall(text)}
+    for lineno, line in enumerate(text.splitlines(), 1):
+        for m in LINK_RE.finditer(line):
+            target = m.group(1)
+            if target.startswith(("http://", "https://", "mailto:")):
+                continue
+            if target.startswith("#"):
+                if target[1:] not in anchors:
+                    errors.append(f"{md}:{lineno}: missing anchor {target!r}")
+                continue
+            path_part = target.split("#", 1)[0]
+            resolved = (md.parent / path_part).resolve()
+            if not resolved.exists():
+                errors.append(f"{md}:{lineno}: broken link {target!r}")
+        for m in CODE_PATH_RE.finditer(line):
+            if not (ROOT / m.group(1)).exists():
+                errors.append(f"{md}:{lineno}: missing path `{m.group(1)}`")
+    return errors
+
+
+def main(argv: list[str]) -> int:
+    if argv:
+        files = [Path(a) for a in argv]
+    else:
+        files = [ROOT / "README.md", ROOT / "ROADMAP.md"]
+        files += sorted((ROOT / "docs").glob("*.md"))
+    missing = [f for f in files if not f.exists()]
+    errors = [f"{f}: file not found" for f in missing]
+    for f in files:
+        if f.exists():
+            errors += check_file(f)
+    for e in errors:
+        print(e)
+    print(f"checked {len(files) - len(missing)} files: "
+          f"{'OK' if not errors else f'{len(errors)} problem(s)'}")
+    return 1 if errors else 0
+
+
+if __name__ == "__main__":
+    raise SystemExit(main(sys.argv[1:]))
