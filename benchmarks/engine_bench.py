@@ -15,11 +15,15 @@ Compares, at M in {18, 128, 512, 2048} EUs on one cloud round:
   * ``async``        — ``AsyncHFLEngine`` with a 75% quorum.
 
 ``--model`` (or ``main(model=...)``) picks the client program: ``cnn``
-(default), ``mlp``, ``lm``, ``moe``, ``mamba``, or ``rwkv`` — the engines
-are model-agnostic, so the same four paths run any registered
+(default), ``mlp``, ``lm``, ``moe``, ``mamba``, ``rwkv``, or ``mix`` — the
+engines are model-agnostic, so the same four paths run any registered
 ``ClientProgram``; every emitted mark records the program name.  The
 sequence models (lm/moe/mamba/rwkv) share one token-shard population
-layout, so their rows compare workloads on identical data.  The full suite
+layout, so their rows compare workloads on identical data.  ``mix`` is the
+heterogeneous-MODEL population (half micro-CNN, half micro-MLP EUs with a
+per-edge public shard): it times the distillation aggregation layer —
+per-group cohorts, per-group segment FedAvg, and the per-cloud-round KD
+fuse — against the ``HeteroHFLSimulation`` reference loop.  The full suite
 (``benchmarks.run``) runs the CNN sizes plus one MLP scale point so CI
 tracks at least one non-CNN trajectory; single-model sweeps land in
 ``BENCH_engine_<model>.json``.
@@ -48,7 +52,7 @@ from repro.core.hfl import HFLSchedule
 from repro.data.lm_stream import TokenStream
 from repro.data.synthetic_health import Dataset, heartbeat_like
 from repro.data.partition import split_dataset_by_counts
-from repro.engine import AsyncHFLEngine, BatchedSyncEngine
+from repro.engine import AsyncHFLEngine, BatchedSyncEngine, DistillSpec
 from repro.federated.client import FLClient
 from repro.federated.programs import (
     SEQUENCE_PROGRAMS,
@@ -63,7 +67,7 @@ from repro.federated.programs import (
     tiny_rwkv_config,
     RWKVProgram,
 )
-from repro.federated.simulation import HFLSimulation
+from repro.federated.simulation import HeteroHFLSimulation, HFLSimulation
 from repro.models.cnn1d import CNNConfig, HEARTBEAT_CNN
 
 MICRO_CNN = CNNConfig(in_channels=1, n_classes=5, seq_len=64, c1=8, c2=8, hidden=16)
@@ -99,9 +103,16 @@ def _program(model: str):
 
 
 def _make_population(m: int, n_edges: int, seed: int = 0, model: str = "cnn"):
-    """M clients with small imbalanced shards + round-robin edge assignment."""
+    """M clients with small imbalanced shards + round-robin edge assignment.
+
+    Returns ``(clients, assignment, test, latency, program, public)``;
+    ``public`` (one small Dataset per edge) is None except for ``mix``, the
+    heterogeneous-model population (first half micro-CNN EUs, second half
+    micro-MLP) whose engines fuse by distillation on it.
+    """
     rng = np.random.default_rng(seed)
-    program = _program(model)
+    public = None
+    program = _program("cnn" if model == "mix" else model)
     if model in SEQUENCE_PROGRAMS:
         counts = rng.integers(1, 3, (m, LM_TOPICS))
         streams = [TokenStream(LM_VOCAB, seed=seed, topic=t) for t in range(LM_TOPICS)]
@@ -125,11 +136,21 @@ def _make_population(m: int, n_edges: int, seed: int = 0, model: str = "cnn"):
         shards = split_dataset_by_counts(rng, train, counts)
         test = heartbeat_like(rng, np.full(k, 10))
         test.x = test.x[:, : CFG.seq_len, : CFG.in_channels]
-    clients = [FLClient(i, shards[i], program) for i in range(m)]
+        if model == "mix":  # per-edge public pools for the distillation fuse
+            public = []
+            for _ in range(n_edges):
+                pub = heartbeat_like(rng, np.full(k, 3))
+                pub.x = pub.x[:, : CFG.seq_len, : CFG.in_channels]
+                public.append(pub)
+    per_eu = [program] * m
+    if model == "mix":  # capability skew: strong half CNN, weak half MLP
+        mlp = _program("mlp")
+        per_eu = [program if i < m // 2 else mlp for i in range(m)]
+    clients = [FLClient(i, shards[i], per_eu[i]) for i in range(m)]
     assignment = np.zeros((m, n_edges))
     assignment[np.arange(m), np.arange(m) % n_edges] = 1.0
     latency = rng.uniform(0.01, 0.2, (m, n_edges))
-    return clients, assignment, test, latency, program
+    return clients, assignment, test, latency, program, public
 
 
 def _time_interleaved(makers: Dict[str, object], repeats: int = 3) -> Dict[str, float]:
@@ -151,27 +172,40 @@ def _time_interleaved(makers: Dict[str, object], repeats: int = 3) -> Dict[str, 
 
 
 def bench_scale(m: int, n_edges: int, model: str = "cnn") -> Dict[str, Optional[float]]:
-    clients, assignment, test, latency, program = _make_population(m, n_edges, model=model)
+    clients, assignment, test, latency, program, public = _make_population(
+        m, n_edges, model=model
+    )
     mk = dict(program=program, test=test, schedule=HFLSchedule(1, 1), seed=0)
+    kd = dict(public_shards=public, distill=DistillSpec()) if public else {}
     tag = "" if model == "cnn" else f"{model}_"  # cnn names stay PR-comparable
 
     makers = {
-        "host": lambda: BatchedSyncEngine(clients, assignment, pipeline="host", **mk),
-        "device": lambda: BatchedSyncEngine(clients, assignment, pipeline="device", **mk),
+        "host": lambda: BatchedSyncEngine(
+            clients, assignment, pipeline="host", **kd, **mk
+        ),
+        "device": lambda: BatchedSyncEngine(
+            clients, assignment, pipeline="device", **kd, **mk
+        ),
         "async": lambda: AsyncHFLEngine(
-            clients, assignment, latency=latency, quorum=0.75, **mk
+            clients, assignment, latency=latency, quorum=0.75, **kd, **mk
         ),
     }
     # the sequential per-client loop is the baseline everywhere it is
     # feasible; at M >= 2048 its dispatch loop takes minutes per round, so
     # quick mode (CI) skips it and anchors ratios on the PR 1 engine
     if m < 2048 or not QUICK:
-        makers["loop"] = lambda: HFLSimulation(clients, assignment, **mk)
+        if model == "mix":
+            makers["loop"] = lambda: HeteroHFLSimulation(
+                clients, assignment, test, schedule=HFLSchedule(1, 1), seed=0,
+                public=public, distill=DistillSpec(),
+            )
+        else:
+            makers["loop"] = lambda: HFLSimulation(clients, assignment, **mk)
     t = _time_interleaved(makers)
     t_ref = t.get("loop")
     t_host, t_dev, t_async = t["host"], t["device"], t["async"]
 
-    prog = f"program={program.name}"
+    prog = f"program={'mix(cnn+mlp)' if model == 'mix' else program.name}"
     if t_ref is not None:
         emit(f"engine_sync_loop_{tag}m{m}", t_ref * 1e6,
              f"{m / t_ref:.1f} clients/sec {prog}")
@@ -210,6 +244,7 @@ def main(model: Optional[str] = None) -> None:
             "moe": [18] if QUICK else [18, 128],
             "mamba": [18] if QUICK else [18, 128],
             "rwkv": [18] if QUICK else [18, 128],
+            "mix": [18, 128] if QUICK else [18, 128, 512],
         }
         for m in sizes[model]:
             bench_scale(m, 8 if m > 18 else 5, model=model)
@@ -223,8 +258,10 @@ if __name__ == "__main__":
 
     ap = argparse.ArgumentParser()
     ap.add_argument("--model", default=None,
-                    choices=["cnn", "mlp", "lm", "moe", "mamba", "rwkv"],
-                    help="bench one program's scale sweep (default: CNN suite + MLP point)")
+                    choices=["cnn", "mlp", "lm", "moe", "mamba", "rwkv", "mix"],
+                    help="bench one program's scale sweep (default: CNN suite "
+                         "+ MLP point; 'mix' = cnn+mlp hetero population with "
+                         "the distillation fuse)")
     args = ap.parse_args()
     print("name,us_per_call,derived")
     main(model=args.model)

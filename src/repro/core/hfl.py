@@ -72,12 +72,25 @@ class CommAccountant:
     eu_bits_down: Dict[int, float] = dataclasses.field(default_factory=dict)
     edge_cloud_bits: float = 0.0
 
-    def on_edge_sync(self, assignment: np.ndarray, uplink_bits: "float | None" = None) -> None:
+    def on_edge_sync(
+        self,
+        assignment: np.ndarray,
+        uplink_bits: "float | None" = None,
+        downlink_bits: "float | None" = None,
+        count_round: bool = True,
+    ) -> None:
         """One synchronous edge round.  ``uplink_bits`` overrides the per-EU
         upload payload (e.g. a ``CompressionSpec.bits`` figure); the downlink
-        stays a full model broadcast."""
-        self.edge_rounds += 1
+        stays a full model broadcast unless ``downlink_bits`` overrides it
+        (heterogeneous-model federation: an EU only downloads ITS
+        architecture's model, so the hetero layers charge each program group
+        with its own payload via one masked call per group —
+        ``count_round=False`` on all but the first so the round is still
+        counted once)."""
+        if count_round:
+            self.edge_rounds += 1
         payload = self.model_bits if uplink_bits is None else uplink_bits
+        down_payload = self.model_bits if downlink_bits is None else downlink_bits
         for i in range(assignment.shape[0]):
             edges = np.nonzero(assignment[i])[0]
             if len(edges) == 0:
@@ -85,7 +98,7 @@ class CommAccountant:
             up = payload * (
                 1.0 + (self.dca_multicast_overhead if len(edges) > 1 else 0.0)
             )
-            down = self.model_bits * len(edges)
+            down = down_payload * len(edges)
             self.eu_bits_up[i] = self.eu_bits_up.get(i, 0.0) + up
             self.eu_bits_down[i] = self.eu_bits_down.get(i, 0.0) + down
 
@@ -101,9 +114,13 @@ class CommAccountant:
     def on_edge_round(self) -> None:
         self.edge_rounds += 1
 
-    def on_cloud_sync(self, n_edges: int) -> None:
+    def on_cloud_sync(self, n_edges: int, bits: "float | None" = None) -> None:
+        """``bits`` overrides the per-edge one-way payload (hetero-model
+        hierarchies ship every architecture's model, so the payload is the
+        SUM of the group model sizes)."""
         self.cloud_rounds += 1
-        self.edge_cloud_bits += 2.0 * self.model_bits * n_edges
+        payload = self.model_bits if bits is None else bits
+        self.edge_cloud_bits += 2.0 * payload * n_edges
 
     def eu_traffic_bits(self) -> Dict[int, float]:
         keys = set(self.eu_bits_up) | set(self.eu_bits_down)

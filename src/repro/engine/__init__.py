@@ -31,12 +31,26 @@ module                role
 ``async_sim``         ``AsyncHFLEngine`` — event-driven uploads, quorum
                       edge aggregation, staleness-decayed weighting; edge
                       models also live in one (E, D) matrix
+``distill``           distillation aggregation for heterogeneous-MODEL
+                      populations: per-architecture FedAvg stays flat, and
+                      each edge's group models are fused by ensemble logit
+                      distillation on a device-resident public shard
+                      (``DistillSpec``, ``distill_fuse_flat``)
 ====================  =====================================================
 
-Select via ``Scenario.simulate(..., engine="sync"|"async")``.
+Select via ``Scenario.simulate(..., engine="sync"|"async")``; mixed-model
+populations come from ``build_scenario(model_mix={...})``.
 """
 from repro.engine.async_sim import AsyncHFLEngine
-from repro.engine.cohort import LocalJob, draw_batch_indices, make_job, run_cohorts
+from repro.engine.cohort import LocalJob, draw_batch_indices, make_job, pack_for, run_cohorts
+from repro.engine.distill import (
+    DistillSpec,
+    distill_edge,
+    distill_fuse_flat,
+    draw_public_batches,
+    kd_loss,
+    soft_targets,
+)
 from repro.engine.events import Event, EventQueue
 from repro.engine.flatten import BACKENDS, FlatPack, flat_mean, flat_segment_mean
 from repro.engine.store import DeviceShardStore
@@ -47,14 +61,21 @@ __all__ = [
     "BACKENDS",
     "BatchedSyncEngine",
     "DeviceShardStore",
+    "DistillSpec",
     "Event",
     "EventQueue",
     "FlatPack",
     "LocalJob",
     "PIPELINES",
+    "distill_edge",
+    "distill_fuse_flat",
     "draw_batch_indices",
+    "draw_public_batches",
     "flat_mean",
     "flat_segment_mean",
+    "kd_loss",
     "make_job",
+    "pack_for",
     "run_cohorts",
+    "soft_targets",
 ]

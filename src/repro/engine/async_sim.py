@@ -45,13 +45,25 @@ import numpy as np
 from repro.core.compression import CompressionSpec
 from repro.core.hfl import CommAccountant, HFLSchedule
 from repro.data.synthetic_health import Dataset
-from repro.engine.cohort import LocalJob, make_job, run_cohorts
+from repro.engine.cohort import LocalJob, build_group_state, make_job, run_cohorts
+from repro.engine.distill import (
+    DistillSpec,
+    check_distillable,
+    check_public_shards,
+    distill_fuse_flat,
+    draw_public_batches,
+)
 from repro.engine.events import EventQueue
 from repro.engine.flatten import BACKENDS, FlatPack, compress_flat_upload, flat_mean
 from repro.engine.store import DeviceShardStore
 from repro.federated.client import FLClient
-from repro.federated.programs import as_program
-from repro.federated.simulation import RoundMetrics, SimResult, evaluate
+from repro.federated.programs import as_program, group_edge_sizes
+from repro.federated.simulation import (
+    RoundMetrics,
+    SimResult,
+    evaluate,
+    hetero_final_params,
+)
 from repro.utils.tree import tree_size_bytes
 
 
@@ -92,6 +104,13 @@ class AsyncHFLEngine:
     Per-client heterogeneous hyperparameters (``lr``, ``batch_size``,
     ``local_epochs``) are honored exactly as in the sync engines — each
     dispatch trains the client with its own tuple.
+
+    Heterogeneous-model populations work too: clients carrying different
+    programs split into architecture groups with one (E, D_g) edge matrix
+    each, quorum flushes aggregate within groups, and — given
+    ``public_shards`` + ``distill`` — the cloud barrier fuses each edge's
+    group models by logit distillation before the per-group cloud
+    reduction (``engine.distill``).
     """
 
     def __init__(
@@ -109,6 +128,8 @@ class AsyncHFLEngine:
         backhaul_s: float = 0.05,
         backend: str = "pallas",
         compression: Optional[CompressionSpec] = None,
+        public_shards: Optional[List[Dataset]] = None,
+        distill: Optional[DistillSpec] = None,
     ):
         if not (0.0 < quorum <= 1.0):
             raise ValueError(f"quorum must be in (0, 1], got {quorum}")
@@ -129,20 +150,26 @@ class AsyncHFLEngine:
         self.compression = compression
         self.params = self.program.init(jax.random.PRNGKey(seed))
         self.pack = FlatPack(self.params)
+        # architecture groups (heterogeneous-model federation): one edge
+        # matrix, pack, and payload per distinct client program
+        gs = build_group_state(
+            clients, self.program, self.params, self.pack, seed, compression
+        )
+        self.groups, self.group_of = gs.programs, gs.group_of
+        self.group_params, self.packs = gs.params, gs.packs
+        self._group_bits, self._uplink_bits = gs.bits, gs.uplink_bits
+        self.distill = distill if len(self.groups) > 1 else None
+        self.public_store = None
+        if self.distill is not None:
+            check_public_shards(public_shards, self.assignment.shape[1])
+            check_distillable(self.groups)
+            self.public_store = DeviceShardStore.from_shards(public_shards)
         self.accountant = CommAccountant(model_bits=tree_size_bytes(self.params) * 8)
-        self._uplink_bits = self.accountant.model_bits
-        if compression is not None and compression.kind != "none":
-            # bits() on the flat (D,) layout the engine actually compresses
-            # (one global top-k), not the per-leaf tree the reference uses
-            self._uplink_bits = compression.bits(jnp.zeros((self.pack.dim,), jnp.float32))
-        else:
-            # program-level uplink semantics (FedSGD gradient payloads)
-            self._uplink_bits = self.program.uplink_bits(self.accountant.model_bits)
         self._errors: Dict[Tuple[int, int], object] = {}
         self.queue = EventQueue()
         self._losses: List[float] = []
-        # edge models as one (E, D) device matrix (see _EdgeState)
-        self._edge_mat: Optional[jnp.ndarray] = None
+        # per-group edge models, each one (E, D_g) device matrix (_EdgeState)
+        self._edge_mats: Optional[List[jnp.ndarray]] = None
         # None when shard sizes are skewed enough that padding would cost
         # more memory than the device gather saves; run_cohorts then falls
         # back to host batch stacking
@@ -164,13 +191,14 @@ class AsyncHFLEngine:
         """
         pairs = sorted(pairs)
         jobs: List[LocalJob] = []
-        row_cache: Dict[int, jnp.ndarray] = {}  # one edge-matrix read per edge
+        row_cache: Dict[Tuple[int, int], jnp.ndarray] = {}  # one read per (group, edge)
         for i, j in pairs:
-            if j not in row_cache:
-                row_cache[j] = self._edge_mat[j]
+            g = int(self.group_of[i])
+            if (g, j) not in row_cache:
+                row_cache[(g, j)] = self._edge_mats[g][j]
             jobs.append(
                 make_job(
-                    self.clients[i], row_cache[j], self.rng,
+                    self.clients[i], row_cache[(g, j)], self.rng,
                     self.schedule.local_steps, tag=(i, j),
                 )
             )
@@ -185,19 +213,22 @@ class AsyncHFLEngine:
             edges_of[i] = edges_of.get(i, 0) + 1
         for i, k in edges_of.items():
             mc = self.accountant.dca_multicast_overhead if k > 1 else 0.0
-            self.accountant.on_eu_exchange(i, up_bits=self._uplink_bits * (1.0 + mc))
+            bits = self._uplink_bits[int(self.group_of[i])]
+            self.accountant.on_eu_exchange(i, up_bits=bits * (1.0 + mc))
         compressing = self.compression is not None and self.compression.kind != "none"
-        quantizing = not compressing and self.program.quantizes_upload
         for (i, j), job in zip(pairs, jobs):
             upd = trained.row((i, j))
             self._losses.append(trained.loss[(i, j)])
-            if quantizing:
-                upd = self.program.quantize_upload(job.start_flat, upd)
+            program = self.clients[i].program
+            if not compressing and program.quantizes_upload:
+                upd = program.quantize_upload(job.start_flat, upd)
             else:
                 upd = compress_flat_upload(
                     self.compression, self._errors, (i, j), job.start_flat, upd
                 )
-            self.accountant.on_eu_exchange(i, down_bits=self.accountant.model_bits)
+            self.accountant.on_eu_exchange(
+                i, down_bits=self._group_bits[int(self.group_of[i])]
+            )
             self.queue.push(
                 self.queue.now + float(self.latency[i, j]),
                 "upload",
@@ -211,23 +242,41 @@ class AsyncHFLEngine:
         return max(1, int(np.ceil(self.quorum * len(edge.members))))
 
     def _edge_aggregate(self, j: int, edge: _EdgeState) -> List[Tuple[int, int]]:
-        """Staleness-weighted aggregation; returns (client, edge) redispatches."""
-        rows, weights, reporters = [], [], []
-        for i, row, size, birth in sorted(edge.buffer, key=lambda b: b[0]):
-            staleness = edge.version - birth
-            rows.append(row)
-            weights.append(max(size, 1.0) * self.staleness_decay ** staleness)
-            reporters.append(i)
-        # the current edge model stands in for the EUs that have not reported
-        missing = [i for i in edge.members if i not in set(reporters)]
-        anchor_w = float(sum(max(self.clients[i].data_size, 1.0) for i in missing))
-        if anchor_w > 0:
-            rows = [self._edge_mat[j]] + rows
-            weights = [anchor_w] + weights
-        # quorum flushes average 1-3 rows; flat_mean routes these tiny-N
-        # calls to a jitted contraction, so varying buffer sizes do not
-        # compile a fresh pallas kernel per shape
-        self._edge_mat = self._edge_mat.at[j].set(self._mean(rows, weights))
+        """Staleness-weighted aggregation; returns (client, edge) redispatches.
+
+        Group-aware: buffered uploads are averaged WITHIN each architecture
+        group (a CNN row cannot average with an MLP row), each group's
+        current edge model anchoring for that group's unreported members.
+        The quorum itself counts reporters across every group — the edge
+        flushes when enough of its EUs answered, whatever they train.
+        """
+        all_reporters = []
+        for g in range(len(self.groups)):
+            rows, weights, reporters = [], [], []
+            for i, row, size, birth in sorted(edge.buffer, key=lambda b: b[0]):
+                if int(self.group_of[i]) != g:
+                    continue
+                staleness = edge.version - birth
+                rows.append(row)
+                weights.append(max(size, 1.0) * self.staleness_decay ** staleness)
+                reporters.append(i)
+            if not rows:
+                continue  # nothing from this architecture: its model stands
+            # the current edge model stands in for the EUs that have not
+            # reported (of this group)
+            missing = [
+                i for i in edge.members
+                if int(self.group_of[i]) == g and i not in set(reporters)
+            ]
+            anchor_w = float(sum(max(self.clients[i].data_size, 1.0) for i in missing))
+            if anchor_w > 0:
+                rows = [self._edge_mats[g][j]] + rows
+                weights = [anchor_w] + weights
+            # quorum flushes average 1-3 rows; flat_mean routes these tiny-N
+            # calls to a jitted contraction, so varying buffer sizes do not
+            # compile a fresh pallas kernel per shape
+            self._edge_mats[g] = self._edge_mats[g].at[j].set(self._mean(rows, weights))
+            all_reporters += reporters
         edge.version += 1
         edge.rounds_done += 1
         edge.buffer = []
@@ -235,24 +284,25 @@ class AsyncHFLEngine:
         if edge.rounds_done >= self.schedule.edge_per_cloud:
             edge.done_time = self.queue.now
             return []
-        return [(i, j) for i in reporters]
+        return [(i, j) for i in sorted(all_reporters)]
 
     # -- main loop ------------------------------------------------------------
     def run(self, cloud_rounds: int, eval_every: int = 1) -> SimResult:
         m, n = self.assignment.shape
+        n_groups = len(self.groups)
         history: List[RoundMetrics] = []
-        global_row = self.pack.ravel(self.params)
-        edge_sizes = [
-            sum(c.data_size for i, c in enumerate(self.clients) if self.assignment[i, j])
-            for j in range(n)
-        ]
+        global_rows = [pk.ravel(t) for pk, t in zip(self.packs, self.group_params)]
+        edge_sizes = group_edge_sizes(self.clients, self.assignment, self.group_of)
+        cloud_bits = None if n_groups == 1 else float(sum(self._group_bits))
         for b in range(1, cloud_rounds + 1):
             self._losses = []
             participating = self.rng.random(m) < self.upp
             if not participating.any():
                 participating[self.rng.integers(0, m)] = True
-            # every edge starts the cloud round from the global model
-            self._edge_mat = jnp.broadcast_to(global_row, (n, global_row.shape[0]))
+            # every edge starts the cloud round from its group's global model
+            self._edge_mats = [
+                jnp.broadcast_to(row, (n, row.shape[0])) for row in global_rows
+            ]
             edges: Dict[int, _EdgeState] = {}
             pairs: List[Tuple[int, int]] = []
             for j in range(n):
@@ -287,21 +337,49 @@ class AsyncHFLEngine:
             # cloud barrier: all edges reported; drop in-flight stragglers
             self.queue.clear()
             self.queue.now = max(e.done_time for e in edges.values()) + self.backhaul_s
-            # cloud FedAvg straight off the (E, D) matrix: static shape
-            global_row = flat_mean(
-                self._edge_mat,
-                np.asarray([max(s, 1) for s in edge_sizes], np.float32),
-                backend=self.backend,
-            )
-            self.accountant.on_cloud_sync(n)
+            if self.distill is not None:
+                # fuse each edge's per-group models on its public shard
+                # before the cloud reduces per group (edge-local: costs no
+                # EU traffic, only the barrier's wall-clock headroom)
+                idx = draw_public_batches(self.rng, self.public_store.sizes, self.distill)
+                xb = self.public_store.gather(np.arange(n), idx)[0]
+                self._edge_mats, _ = distill_fuse_flat(
+                    self.groups, [pk.spec for pk in self.packs],
+                    self._edge_mats, xb, self.distill,
+                )
+            # cloud FedAvg straight off the (E, D) matrices: static shape,
+            # one reduction per architecture group
+            global_rows = [
+                flat_mean(
+                    self._edge_mats[g],
+                    np.asarray(edge_sizes[g], np.float32),
+                    backend=self.backend,
+                )
+                for g in range(n_groups)
+            ]
+            self.accountant.on_cloud_sync(n, bits=cloud_bits)
             if b % eval_every == 0 or b == cloud_rounds:
-                acc = evaluate(self.pack.unravel(global_row), self.program, self.test)
+                acc = float(
+                    np.mean(
+                        [
+                            evaluate(
+                                self.packs[g].unravel(global_rows[g]),
+                                self.groups[g],
+                                self.test,
+                            )
+                            for g in range(n_groups)
+                        ]
+                    )
+                )
                 history.append(
                     RoundMetrics(
                         b, acc, 0.0, float(np.mean(self._losses)) if self._losses else 0.0
                     )
                 )
-        self.params = self.pack.unravel(global_row)
+        trees = [pk.unravel(row) for pk, row in zip(self.packs, global_rows)]
+        self.params = (
+            trees[0] if n_groups == 1 else hetero_final_params(self.groups, trees)
+        )
         return SimResult(
             history, self.accountant, self.params, wall_seconds=self.queue.now
         )

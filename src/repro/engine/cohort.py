@@ -23,9 +23,83 @@ import jax
 import jax.numpy as jnp
 import numpy as np
 
-from repro.engine.flatten import ravel_batched, unravel_batched
+from repro.engine.flatten import FlatPack, ravel_batched, unravel_batched
 from repro.federated.client import FLClient
-from repro.federated.programs import ClientProgram
+from repro.federated.programs import ClientProgram, group_clients
+from repro.utils.tree import tree_size_bytes
+
+# FlatPack is architecture-determined (the spec depends only on the program,
+# not on parameter values), so one cached pack per program serves every
+# caller that meets a program through a client rather than a constructor arg
+# (mixed-program cohorts in run_cohorts, the hetero engines' group packs).
+_PACKS: Dict[ClientProgram, FlatPack] = {}
+
+
+def pack_for(program: ClientProgram) -> FlatPack:
+    pack = _PACKS.get(program)
+    if pack is None:
+        pack = FlatPack(program.init(jax.random.PRNGKey(0)))
+        _PACKS[program] = pack
+    return pack
+
+
+@dataclasses.dataclass
+class GroupState:
+    """Per-architecture-group engine state (heterogeneous-model federation).
+
+    One entry per distinct client program, in first-appearance order:
+    parameter trees, flat packs, model bits, and the per-EU uplink payload
+    (an explicit ``CompressionSpec`` priced on each group's own flat
+    layout, else the program's ``uplink_bits``).  Built identically by the
+    sync and async engines through :func:`build_group_state`, so the two
+    cannot drift apart.
+    """
+
+    programs: List[ClientProgram]
+    group_of: np.ndarray  # (M,) client -> group index
+    params: List  # per-group parameter trees
+    packs: List[FlatPack]
+    bits: List[float]  # per-group model bits
+    uplink_bits: List[float]  # per-group EU->edge upload payload
+
+
+def build_group_state(
+    clients, program: ClientProgram, params, pack: FlatPack, seed: int, compression=None
+) -> GroupState:
+    """Partition ``clients`` by program and build each group's state.
+
+    ``program``/``params``/``pack`` are the engine's primary objects — the
+    primary group REUSES them (that identity is what keeps homogeneous
+    runs bit-identical to the single-group engines); other groups init
+    from the same seed.  A constructor program no client trains is
+    refused: the accounting defaults (downlink/cloud payloads) would
+    silently follow an unused model.
+    """
+    programs, group_of = group_clients(clients, fallback=program)
+    if clients and program not in programs:
+        raise ValueError(
+            f"engine program {program.name!r} matches none of the clients' "
+            f"programs {[p.name for p in programs]}"
+        )
+    group_params = [
+        params if p == program else p.init(jax.random.PRNGKey(seed))
+        for p in programs
+    ]
+    packs = [
+        pack if p == program else FlatPack(t)
+        for p, t in zip(programs, group_params)
+    ]
+    bits = [tree_size_bytes(t) * 8 for t in group_params]
+    if compression is not None and compression.kind != "none":
+        # bits() on the flat (D_g,) layout the engines actually compress
+        # (one global top-k), not the per-leaf tree the reference uses
+        uplink = [
+            compression.bits(jnp.zeros((pk.dim,), jnp.float32)) for pk in packs
+        ]
+    else:
+        # program-level uplink semantics (FedSGD gradient payloads)
+        uplink = [p.uplink_bits(b) for p, b in zip(programs, bits)]
+    return GroupState(programs, group_of, group_params, packs, bits, uplink)
 
 
 @dataclasses.dataclass
@@ -48,12 +122,20 @@ class LocalJob:
             self.tag = self.client.cid
 
     @property
-    def key(self) -> Tuple[int, int, int, float]:
+    def key(self) -> Tuple:
         """Cohort grouping key: clients stack into one vmapped call only when
-        their padded step count, epoch count, batch size, AND learning rate
-        agree — the full per-client hyperparameter tuple, so heterogeneous
-        populations split into one fixed-shape cohort per distinct tuple."""
-        return (self.steps, len(self.idx), self.client.batch_size, self.client.lr)
+        their PROGRAM, padded step count, epoch count, batch size, AND
+        learning rate agree — program identity leads the tuple because a
+        heterogeneous-model population must never stack two architectures'
+        (C, D) rows, and within one architecture heterogeneous
+        hyperparameters still split into one fixed-shape cohort each."""
+        return (
+            self.client.program,
+            self.steps,
+            len(self.idx),
+            self.client.batch_size,
+            self.client.lr,
+        )
 
 
 def draw_batch_indices(
@@ -183,18 +265,40 @@ def _cohort_epoch_flat(
 
 @dataclasses.dataclass
 class CohortResult:
-    """Trained rows for one ``run_cohorts`` call, gather-friendly."""
+    """Trained rows for one ``run_cohorts`` call, gather-friendly.
 
-    matrix: "jnp.ndarray"  # (P, D) — one trained flat row per job
-    index: Dict[object, int]  # job tag (default cid) -> row number in matrix
+    Rows live in one (P_b, D_b) BLOCK per distinct program — flat rows of
+    different architectures have different widths, so a mixed-program call
+    cannot put every job in one matrix.  Homogeneous calls (the common
+    case) produce exactly one block, exposed as :attr:`matrix`.
+    """
+
+    blocks: List["jnp.ndarray"]  # per-program (P_b, D_b) trained rows
+    index: Dict[object, Tuple[int, int]]  # job tag -> (block, row)
     loss: Dict[object, float]
 
+    @property
+    def matrix(self) -> "jnp.ndarray":
+        """The single block of a homogeneous call (legacy alias)."""
+        if len(self.blocks) != 1:
+            raise ValueError(
+                f"CohortResult holds {len(self.blocks)} program blocks; "
+                "use row()/gather() for mixed-program results"
+            )
+        return self.blocks[0]
+
     def row(self, tag) -> "jnp.ndarray":
-        return self.matrix[self.index[tag]]
+        b, r = self.index[tag]
+        return self.blocks[b][r]
 
     def gather(self, tags: Sequence) -> "jnp.ndarray":
-        """(len(tags), D) sub-matrix in one device gather."""
-        return self.matrix[np.asarray([self.index[t] for t in tags])]
+        """(len(tags), D) sub-matrix in one device gather.  All tags must
+        share one program block (callers aggregate per architecture)."""
+        where = [self.index[t] for t in tags]
+        bs = {b for b, _ in where}
+        if len(bs) > 1:
+            raise ValueError("gather() tags span program blocks")
+        return self.blocks[bs.pop()][np.asarray([r for _, r in where])]
 
 
 def _stack_starts(jobs: Sequence[LocalJob]) -> "jnp.ndarray":
@@ -225,10 +329,13 @@ def run_cohorts(
 ) -> CohortResult:
     """Train every job, batching same-shape clients into vmapped cohorts.
 
-    ``program`` is the clients' ``ClientProgram``; ``pack`` is the matching
-    ``engine.flatten.FlatPack``.  Multi-epoch
-    schedules run epoch-by-epoch with the cohort's params carried across
-    epochs, matching the reference's sequential-epoch semantics.
+    ``program``/``pack`` are the PRIMARY program and its
+    ``engine.flatten.FlatPack`` — jobs whose clients carry a different
+    program (heterogeneous-model populations) train with their own
+    program's pack (``pack_for``) and land in their own result block.
+    Multi-epoch schedules run epoch-by-epoch with the cohort's params
+    carried across epochs, matching the reference's sequential-epoch
+    semantics.
 
     ``store`` (optional): a ``DeviceShardStore``; per-epoch batches are
     gathered on device from the padded shard array (uploading only the
@@ -236,19 +343,27 @@ def run_cohorts(
     host every epoch.  ``impl`` is the conv formulation for the cohort
     step ("gemm" | "xla", see ``_cohort_epoch_body``).
     """
+    program = program if program is not None else jobs[0].client.program
+
+    def pack_of(prog):
+        return pack if (prog == program and pack is not None) else pack_for(prog)
+
     groups: Dict[Tuple, List[LocalJob]] = {}
-    passthrough: List[LocalJob] = []
+    passthrough: Dict[ClientProgram, List[LocalJob]] = {}
+    block_of: Dict[ClientProgram, int] = {}
     for job in jobs:
+        block_of.setdefault(job.client.program, len(block_of))
         if job.steps == 0:  # empty shard: params pass through untouched
-            passthrough.append(job)
+            passthrough.setdefault(job.client.program, []).append(job)
             continue
         groups.setdefault(job.key, []).append(job)
-    mats: List[jnp.ndarray] = []
-    index: Dict[int, int] = {}
-    loss_of: Dict[int, float] = {}
-    offset = 0
-    for (steps, epochs, batch, lr), members in groups.items():
-        params = pack.unravel_batched(_stack_starts(members))
+    # per program block: trained cohort matrices in group-encounter order
+    mats: Dict[ClientProgram, List[jnp.ndarray]] = {p: [] for p in block_of}
+    offsets: Dict[ClientProgram, int] = {p: 0 for p in block_of}
+    index: Dict[object, Tuple[int, int]] = {}
+    loss_of: Dict[object, float] = {}
+    for (prog, steps, epochs, batch, lr), members in groups.items():
+        params = pack_of(prog).unravel_batched(_stack_starts(members))
         loss = jnp.zeros((len(members),), jnp.float32)
         cids = (
             np.asarray([j.client.cid for j in members], np.int64)
@@ -261,23 +376,28 @@ def run_cohorts(
             else:
                 xb = jnp.asarray(np.stack([j.client.shard.x[j.idx[e]] for j in members]))
                 yb = jnp.asarray(np.stack([j.client.shard.y[j.idx[e]] for j in members]))
-            params, loss = _cohort_epoch(params, xb, yb, program, steps, lr, impl)
-        mats.append(pack.ravel_batched(params))
+            params, loss = _cohort_epoch(params, xb, yb, prog, steps, lr, impl)
+        mats[prog].append(pack_of(prog).ravel_batched(params))
         loss = np.asarray(loss)
         for c, job in enumerate(members):
-            index[job.tag] = offset + c
+            index[job.tag] = (block_of[prog], offsets[prog] + c)
             loss_of[job.tag] = float(loss[c])
-        offset += len(members)
-    if passthrough:
-        mats.append(_stack_starts(passthrough))
-        for c, job in enumerate(passthrough):
-            index[job.tag] = offset + c
+        offsets[prog] += len(members)
+    for prog, jobs_pt in passthrough.items():
+        mats[prog].append(_stack_starts(jobs_pt))
+        for c, job in enumerate(jobs_pt):
+            index[job.tag] = (block_of[prog], offsets[prog] + c)
             loss_of[job.tag] = 0.0
-        offset += len(passthrough)
-    if not mats:
-        return CohortResult(jnp.zeros((0, pack.dim), jnp.float32), {}, {})
-    matrix = mats[0] if len(mats) == 1 else jnp.concatenate(mats, axis=0)
-    return CohortResult(matrix, index, loss_of)
+        offsets[prog] += len(jobs_pt)
+    if not block_of:
+        dim = pack.dim if pack is not None else pack_for(program).dim
+        return CohortResult([jnp.zeros((0, dim), jnp.float32)], {}, {})
+    blocks = [None] * len(block_of)
+    for prog, b in block_of.items():
+        blocks[b] = (
+            mats[prog][0] if len(mats[prog]) == 1 else jnp.concatenate(mats[prog], axis=0)
+        )
+    return CohortResult(blocks, index, loss_of)
 
 
 @dataclasses.dataclass
@@ -289,6 +409,7 @@ class _PlanGroup:
     steps: int
     batch: int
     lr: float
+    program: ClientProgram = None  # the cohort's architecture
 
     @property
     def epochs(self) -> int:
@@ -315,35 +436,32 @@ class CohortPlan:
     ``LocalJob``/``make_job`` object churn of the host pipeline (~2x less
     host time per round at M=512).
 
-    The plan is keyed on the clients' ``program``: every client must train
-    the same ``ClientProgram`` (that is what makes the stacked (C, D)
-    cohort rows meaningful), and the engine tags its jitted epoch calls
-    with ``plan.program`` so two engines over different workloads can never
-    share a grouping by accident.
+    The plan keys cohorts on the clients' ``program`` as well: clients only
+    stack into one (C, D) cohort when they train the SAME ``ClientProgram``
+    (that is what makes the stacked rows meaningful), so a
+    heterogeneous-model population splits into per-architecture cohorts
+    exactly as heterogeneous hyperparameters split per tuple.  Each drawn
+    ``_PlanGroup`` carries its cohort's program; ``plan.program`` stays the
+    primary (constructor / first client's) program so two engines over
+    different workloads can never share a grouping by accident.
     """
 
     def __init__(self, clients: Sequence[FLClient], program: ClientProgram | None = None):
         self.program = program if program is not None else clients[0].program
-        for c in clients:
-            if c.program != self.program:
-                raise ValueError(
-                    f"client {c.cid} trains {c.program.name!r}, plan is for "
-                    f"{self.program.name!r} — cohorts cannot mix programs"
-                )
         self.sizes = np.array([len(c.shard) for c in clients], np.int64)
         self.steps = np.zeros(len(clients), np.int64)
         # per-client schedule override (None = follow the schedule's epochs)
         self._epochs_override: List[int | None] = [c.local_epochs for c in clients]
-        self._single_step = self.program.single_step
+        self._single_step = [c.program.single_step for c in clients]
         self._group_key: Dict[int, Tuple] = {}
         for i, c in enumerate(clients):
             if self.sizes[i] == 0:
                 continue
             self.steps[i] = c.plan_steps()
-            self._group_key[i] = (int(self.steps[i]), c.batch_size, c.lr)
+            self._group_key[i] = (c.program, int(self.steps[i]), c.batch_size, c.lr)
 
     def _epochs_of(self, i: int, schedule_epochs: int) -> int:
-        if self._single_step:
+        if self._single_step[i]:
             return 1
         e = self._epochs_override[i]
         return e if e is not None else schedule_epochs
@@ -376,8 +494,9 @@ class CohortPlan:
                 steps=steps,
                 batch=batch,
                 lr=lr,
+                program=prog,
             )
-            for (steps, batch, lr, e), ids in members.items()
+            for (prog, steps, batch, lr, e), ids in members.items()
         ]
         slot = {}
         for g in groups:

@@ -69,7 +69,23 @@ class DeviceShardStore:
                 # gather() is indexed by cid; a reordered client list would
                 # silently train on the wrong shards
                 raise ValueError(f"client at position {i} has cid {c.cid}")
-        shards = [c.shard for c in clients]
+        self._build([c.shard for c in clients])
+
+    @classmethod
+    def from_shards(cls, shards: Sequence):
+        """Store over bare ``Dataset`` shards, indexed by position.
+
+        The distillation layer keeps each edge's PUBLIC shard device-resident
+        this way (row = edge id); there are no client objects to take cids
+        from, so rows simply follow the sequence order.
+        """
+        obj = cls.__new__(cls)
+        obj._build(list(shards))
+        return obj
+
+    def _build(self, shards: List) -> None:
+        if not shards:
+            raise ValueError("DeviceShardStore needs at least one shard")
         self.sizes = np.array([len(s) for s in shards], np.int64)
         n_max = max(1, int(self.sizes.max()))
         feat = None

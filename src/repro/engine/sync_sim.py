@@ -33,6 +33,17 @@ Two pipelines (``pipeline=``):
     numpy batch stacking), kept as the comparison baseline for
     ``benchmarks/engine_bench.py`` and the equivalence tests.
 
+Heterogeneous-model federation (ISSUE 5): clients under one edge may carry
+DIFFERENT programs.  Every structure above becomes per-ARCHITECTURE-group:
+one (E, D_g) edge matrix, one cohort-plan partition, one membership-pair
+segment aggregation, and one cloud reduction per distinct program, with the
+groups fused once per cloud round by logit distillation on a device-resident
+public shard (``engine.distill``, ``distill=DistillSpec(...)`` +
+``public_shards=[...]``).  A homogeneous population is the single-group
+corner of the same code path — same ops, same RNG stream — so those runs
+stay bit-identical to the pre-distillation engine (pinned by the golden
+trajectories in ``tests/test_consistency.py``).
+
 The engine consumes the numpy RNG stream draw-for-draw like the reference
 simulator, so a fixed seed reproduces the reference accuracy trajectory
 exactly (pinned to 1e-6 by ``tests/test_engine.py``); parameters track to
@@ -42,7 +53,7 @@ Adam amplifies — predictions are unaffected).
 from __future__ import annotations
 
 from functools import partial
-from typing import Dict, List, Optional
+from typing import Dict, List, Optional, Sequence
 
 import jax
 import jax.numpy as jnp
@@ -51,7 +62,20 @@ import numpy as np
 from repro.core.compression import CompressionSpec
 from repro.core.hfl import CommAccountant, HFLSchedule, WallClock, weight_divergence
 from repro.data.synthetic_health import Dataset
-from repro.engine.cohort import CohortPlan, _cohort_epoch_flat, make_job, run_cohorts
+from repro.engine.cohort import (
+    CohortPlan,
+    _cohort_epoch_flat,
+    build_group_state,
+    make_job,
+    run_cohorts,
+)
+from repro.engine.distill import (
+    DistillSpec,
+    check_distillable,
+    check_public_shards,
+    distill_fuse_flat,
+    draw_public_batches,
+)
 from repro.engine.flatten import (
     BACKENDS,
     FlatPack,
@@ -61,12 +85,13 @@ from repro.engine.flatten import (
 )
 from repro.engine.store import DeviceShardStore
 from repro.federated.client import FLClient
-from repro.federated.programs import as_program
+from repro.federated.programs import as_program, group_edge_sizes
 from repro.federated.simulation import (
     RoundMetrics,
     SimResult,
     central_reference_step,
     evaluate,
+    hetero_final_params,
 )
 from repro.utils.tree import tree_size_bytes
 
@@ -89,7 +114,10 @@ class BatchedSyncEngine:
     * ``program`` — any ``ClientProgram`` (``federated.PROGRAMS``: "cnn",
       "mlp", "lm", "moe", "mamba", "rwkv", or a "fedsgd" wrapper); a bare
       ``CNNConfig`` is coerced for legacy call sites.  The program picks
-      the local optimizer and (FedSGD) the uplink payload.
+      the local optimizer and (FedSGD) the uplink payload.  Clients may
+      carry programs that DIFFER from it (and from each other): the engine
+      partitions the population into architecture groups and runs every
+      pipeline stage per group.
     * ``pipeline`` — ``"device"`` (default: shard store + fused segment
       aggregation, O(1) dispatches per round) | ``"host"`` (the PR 1
       host-major loop, kept as benchmark baseline).
@@ -102,6 +130,12 @@ class BatchedSyncEngine:
       ``compression.bits``.  Takes precedence over the program's own
       uplink quantization.
     * ``upp`` — per-round client participation probability in (0, 1].
+    * ``public_shards`` / ``distill`` — the distillation aggregation layer
+      for heterogeneous-model populations: one public ``Dataset`` per edge
+      and a ``DistillSpec``; once per cloud round (between the edge rounds
+      and the cloud reduction) each edge's per-group models are fused by
+      ensemble logit distillation on its public shard.  Ignored for
+      homogeneous populations (the fuse would be self-distillation).
 
     Clients may carry heterogeneous hyperparameters (``lr``,
     ``batch_size``, ``local_epochs``, ``max_steps``): the cohort plan
@@ -123,6 +157,8 @@ class BatchedSyncEngine:
         backend: str = "pallas",
         compression: Optional[CompressionSpec] = None,
         pipeline: str = "device",
+        public_shards: Optional[Sequence[Dataset]] = None,
+        distill: Optional[DistillSpec] = None,
     ):
         if pipeline not in PIPELINES:
             raise ValueError(f"pipeline must be one of {PIPELINES}, got {pipeline!r}")
@@ -140,8 +176,28 @@ class BatchedSyncEngine:
         self.compression = compression
         self.pipeline = pipeline
         self.pack = FlatPack(self.params)
+        # architecture groups: one of everything below per distinct program
+        gs = build_group_state(
+            clients, self.program, self.params, self.pack, seed, compression
+        )
+        self.groups, self.group_of = gs.programs, gs.group_of
+        self.group_params, self.packs = gs.params, gs.packs
+        self._group_bits, self._uplink_bits = gs.bits, gs.uplink_bits
+        n_groups = len(self.groups)
+        self.distill = distill if n_groups > 1 else None
+        self.public_store = None
+        if self.distill is not None:
+            check_public_shards(public_shards, assignment.shape[1])
+            check_distillable(self.groups)
+            self.public_store = DeviceShardStore.from_shards(public_shards)
         self.track_divergence = track_divergence
         if track_divergence:
+            if n_groups > 1:
+                raise ValueError(
+                    "track_divergence is defined against ONE virtual central "
+                    "model; heterogeneous-model populations have no such "
+                    "reference"
+                )
             self.central_params = jax.tree.map(lambda x: x, self.params)
             self.central_data = Dataset(
                 np.concatenate([c.shard.x for c in clients], 0),
@@ -152,16 +208,7 @@ class BatchedSyncEngine:
         model_bits = tree_size_bytes(self.params) * 8
         self.accountant = CommAccountant(model_bits=model_bits)
         self.clock = WallClock(cost_latency) if cost_latency is not None else None
-        self._uplink_bits = None
         self._errors: Dict[int, object] = {}
-        if compression is not None and compression.kind != "none":
-            # bits() on the flat (D,) layout the engine actually compresses
-            # (one global top-k), not the per-leaf tree the reference uses
-            self._uplink_bits = compression.bits(jnp.zeros((self.pack.dim,), jnp.float32))
-        else:
-            # program-level uplink semantics (FedSGD gradient payloads;
-            # model_bits for everything else, the accountant's default)
-            self._uplink_bits = self.program.uplink_bits(model_bits)
         # static round structure: the (client, edge) membership pairs, in
         # client-major order.  Participation varies per round but travels in
         # the segment WEIGHTS, so every device program keeps a fixed shape.
@@ -172,6 +219,18 @@ class BatchedSyncEngine:
         self._pair_clients_dev = jnp.asarray(pc, jnp.int32)
         self._pair_edges_dev = jnp.asarray(pe, jnp.int32)
         self._pair_ones = jnp.ones((len(pc),), jnp.float32)
+        # the same pair structure restricted to each architecture group (the
+        # per-group FedAvg segment call must only see its own clients' rows)
+        self._gpairs = []
+        for g in range(n_groups):
+            gm = self.group_of[pc] == g
+            self._gpairs.append(
+                (
+                    pc[gm].astype(np.int64),
+                    pe[gm].astype(np.int64),
+                    jnp.asarray(pe[gm], jnp.int32),
+                )
+            )
         self._has_edge = asn.any(axis=1)
         self._data_sizes = np.array([c.data_size for c in clients], np.float32)
         # SCA fast path: with single-connectivity every DCA start IS an edge
@@ -188,6 +247,21 @@ class BatchedSyncEngine:
             jnp.stack(rows), np.asarray(weights, np.float32), backend=self.backend
         )
 
+    def _edge_account(self, participating: np.ndarray) -> None:
+        """Charge one edge round: per architecture group, each group's
+        clients pay that group's uplink/downlink payload (one masked
+        ``on_edge_sync`` per group; the round itself counts once)."""
+        for g in range(len(self.groups)):
+            mask = (self.group_of == g) & participating
+            self.accountant.on_edge_sync(
+                self.assignment * mask[:, None],
+                uplink_bits=self._uplink_bits[g],
+                downlink_bits=None if len(self.groups) == 1 else self._group_bits[g],
+                count_round=(g == 0),
+            )
+        if self.clock is not None:
+            self.clock.on_edge_sync(self.assignment, participating)
+
     # -- one edge round, device pipeline --------------------------------------
     def _client_starts(self, edge_mat: jnp.ndarray) -> jnp.ndarray:
         """(M, D) per-client DCA start rows from the (E, D) edge matrix.
@@ -196,7 +270,8 @@ class BatchedSyncEngine:
         one segment call with segments = clients over the membership pairs.
         No RNG is consumed, so computing starts for every client
         (participating or not) keeps the shape static at no parity cost —
-        unused rows are never read.
+        unused rows are never read (including other groups' rows when
+        ``edge_mat`` belongs to one architecture group).
         """
         return flat_segment_mean(
             edge_mat[self._pair_edges_dev],
@@ -206,9 +281,9 @@ class BatchedSyncEngine:
             backend=self.backend,
         )
 
-    def _edge_round_device(self, edge_mat: jnp.ndarray):
+    def _edge_round_device(self, edge_mats: List[jnp.ndarray]):
         """One edge round as fixed-shape device programs; returns the new
-        (E, D) edge matrix and the per-client losses."""
+        per-group (E, D_g) edge matrices and the per-client losses."""
         m, n = self.assignment.shape
         participating = self.rng.random(m) < self.upp
         if not participating.any():
@@ -216,17 +291,17 @@ class BatchedSyncEngine:
         # lazy DCA start rows: the SCA corner (every client on one edge) is a
         # plain gather per cohort; only dual-connectivity pays the segment
         # call for the full (M, D) matrix
-        starts_full = None
+        starts_full: Dict[int, jnp.ndarray] = {}
+        group_idx = {p: g for g, p in enumerate(self.groups)}
 
-        def starts_for(ids: np.ndarray) -> jnp.ndarray:
-            nonlocal starts_full
+        def starts_for(ids: np.ndarray, g: int) -> jnp.ndarray:
             if self._single_edge:
                 return jnp.take(
-                    edge_mat, jnp.asarray(self._client_edge[ids], jnp.int32), axis=0
+                    edge_mats[g], jnp.asarray(self._client_edge[ids], jnp.int32), axis=0
                 )
-            if starts_full is None:
-                starts_full = self._client_starts(edge_mat)
-            return starts_full[jnp.asarray(ids, jnp.int32)]
+            if g not in starts_full:
+                starts_full[g] = self._client_starts(edge_mats[g])
+            return starts_full[g][jnp.asarray(ids, jnp.int32)]
 
         active = self._has_edge & participating
         # the plan's draw consumes the RNG in client order, mirroring the
@@ -238,84 +313,91 @@ class BatchedSyncEngine:
         # batch gather -> fused (C, D)-in/(C, D)-out epoch.  Losses stay on
         # device until metrics time so the aggregation dispatches below can
         # queue behind the (async-dispatched) epochs without a host sync.
-        mats, loss_chunks = [], []
+        # Cohorts and rows are kept per ARCHITECTURE group throughout.
+        mats: List[List[jnp.ndarray]] = [[] for _ in self.groups]
+        loss_chunks = []
         row_of = np.zeros(m, np.int64)
-        offset = 0
+        offsets = [0] * len(self.groups)
         for g in groups:
-            flat = starts_for(g.members)
+            gi = group_idx[g.program]
+            flat = starts_for(g.members, gi)
             for e in range(g.idx.shape[1]):
                 xb, yb = self.store.gather(g.members, g.idx[:, e])
                 flat, loss = _cohort_epoch_flat(
-                    flat, xb, yb, self.pack.spec, self.program, g.steps, g.lr
+                    flat, xb, yb, self.packs[gi].spec, g.program, g.steps, g.lr
                 )
-            mats.append(flat)
+            mats[gi].append(flat)
             loss_chunks.append(loss)
-            row_of[g.members] = np.arange(offset, offset + len(g.members))
-            offset += len(g.members)
+            row_of[g.members] = np.arange(offsets[gi], offsets[gi] + len(g.members))
+            offsets[gi] += len(g.members)
         if len(passthrough):  # empty shards upload their start row untouched
-            mats.append(starts_for(passthrough))
-            loss_chunks.append(np.zeros(len(passthrough), np.float32))
-            row_of[passthrough] = np.arange(offset, offset + len(passthrough))
-            offset += len(passthrough)
-        job_cids = np.nonzero(active)[0]
-        upd_matrix = (
-            jnp.concatenate(mats, axis=0) if len(mats) > 1
-            else (mats[0] if mats else jnp.zeros((1, self.pack.dim), jnp.float32))
-        )
+            for gi in range(len(self.groups)):
+                pt = passthrough[self.group_of[passthrough] == gi]
+                if not len(pt):
+                    continue
+                mats[gi].append(starts_for(pt, gi))
+                loss_chunks.append(np.zeros(len(pt), np.float32))
+                row_of[pt] = np.arange(offsets[gi], offsets[gi] + len(pt))
+                offsets[gi] += len(pt)
         compressing = self.compression is not None and self.compression.kind != "none"
-        quantizing = not compressing and self.program.quantizes_upload
-        if (compressing or quantizing) and len(job_cids):
-            start_rows = starts_for(job_cids)
-            trained_rows = upd_matrix[jnp.asarray(row_of[job_cids], jnp.int32)]
-            if quantizing:
-                # program-level upload transform (FedSGD fp16 gradients):
-                # one batched op over the (C, D) matrices, no per-row state
-                upd_matrix = self.program.quantize_upload(start_rows, trained_rows)
-                row_of[job_cids] = np.arange(len(job_cids))
-            else:
-                rows = []
-                for k, i in enumerate(job_cids):
-                    rows.append(
-                        compress_flat_upload(
-                            self.compression, self._errors, int(i),
-                            start_rows[k], trained_rows[k],
+        for gi, prog in enumerate(self.groups):
+            job_cids = np.nonzero(active & (self.group_of == gi))[0]
+            if not len(job_cids):
+                continue  # no member of this architecture trained this round
+            upd_matrix = (
+                jnp.concatenate(mats[gi], axis=0) if len(mats[gi]) > 1 else mats[gi][0]
+            )
+            quantizing = not compressing and prog.quantizes_upload
+            if compressing or quantizing:
+                start_rows = starts_for(job_cids, gi)
+                trained_rows = upd_matrix[jnp.asarray(row_of[job_cids], jnp.int32)]
+                if quantizing:
+                    # program-level upload transform (FedSGD fp16 gradients):
+                    # one batched op over the (C, D) matrices, no per-row state
+                    upd_matrix = prog.quantize_upload(start_rows, trained_rows)
+                    row_of[job_cids] = np.arange(len(job_cids))
+                else:
+                    rows = []
+                    for k, i in enumerate(job_cids):
+                        rows.append(
+                            compress_flat_upload(
+                                self.compression, self._errors, int(i),
+                                start_rows[k], trained_rows[k],
+                            )
                         )
-                    )
-                    row_of[i] = k
-                upd_matrix = jnp.stack(rows)
-        if len(job_cids):
-            # every edge's FedAvg in ONE segment call over the pair matrix
-            part_pairs = participating[self._pair_clients]
-            take = row_of[self._pair_clients]
+                        row_of[i] = k
+                    upd_matrix = jnp.stack(rows)
+            # every edge's FedAvg in ONE segment call over the group's pairs
+            pc_g, pe_g, pe_g_dev = self._gpairs[gi]
+            part_pairs = participating[pc_g]
+            take = row_of[pc_g]
             if len(take) == upd_matrix.shape[0] and np.array_equal(
                 take, np.arange(len(take))
             ):
                 upd = upd_matrix  # rows already in pair order: skip the gather
             else:
                 upd = upd_matrix[jnp.asarray(take, jnp.int32)]
-            # edges with no participants keep their previous model
-            has = np.bincount(self._pair_edges, weights=part_pairs, minlength=n) > 0
-            edge_mat = _segment_agg_keep(
+            # edges with no participants of this group keep their previous
+            # group model
+            has = np.bincount(pe_g, weights=part_pairs, minlength=n) > 0
+            edge_mats[gi] = _segment_agg_keep(
                 upd,
-                self._pair_edges_dev,
-                jnp.asarray(self._data_sizes[self._pair_clients] * part_pairs),
+                pe_g_dev,
+                jnp.asarray(self._data_sizes[pc_g] * part_pairs),
                 jnp.asarray(has),
-                edge_mat,
+                edge_mats[gi],
                 n,
                 self.backend,
             )
-        self.accountant.on_edge_sync(
-            self.assignment * participating[:, None], uplink_bits=self._uplink_bits
-        )
-        if self.clock is not None:
-            self.clock.on_edge_sync(self.assignment, participating)
-        return edge_mat, loss_chunks
+        self._edge_account(participating)
+        return edge_mats, loss_chunks
 
     # -- one edge round, host pipeline --------------------------------------
-    def _edge_round(self, edge_rows: List[jnp.ndarray]) -> List[float]:
-        """The PR 1 host-major round, preserved verbatim (host batch
-        stacking, per-edge ``flat_mean`` loop, XLA-conv cohort step) as the
-        benchmark baseline and equivalence-test counterpart."""
+    def _edge_round(self, edge_rows: List[List[jnp.ndarray]]) -> List[float]:
+        """The PR 1 host-major round, preserved (host batch stacking,
+        per-edge ``flat_mean`` loop, XLA-conv cohort step) as the benchmark
+        baseline and equivalence-test counterpart.  ``edge_rows[g][j]`` is
+        edge j's model for architecture group g."""
         m, n = self.assignment.shape
         participating = self.rng.random(m) < self.upp
         if not participating.any():
@@ -326,48 +408,66 @@ class BatchedSyncEngine:
             edges = np.nonzero(self.assignment[i])[0]
             if len(edges) == 0 or not participating[i]:
                 continue
+            rows = edge_rows[self.group_of[i]]
             # a DCA client starts from the average of its edges' models
-            start = edge_rows[edges[0]] if len(edges) == 1 else self._mean(
-                [edge_rows[j] for j in edges], [1.0] * len(edges)
+            start = rows[edges[0]] if len(edges) == 1 else self._mean(
+                [rows[j] for j in edges], [1.0] * len(edges)
             )
             jobs.append(make_job(cl, start, self.rng, epochs=self.schedule.local_steps))
             job_edges.append(edges)
         trained = run_cohorts(jobs, self.program, self.pack, impl="xla")
         compressing = self.compression is not None and self.compression.kind != "none"
-        quantizing = not compressing and self.program.quantizes_upload
-        transforming = compressing or quantizing
         losses = []
-        new_cids: List[List[int]] = [[] for _ in range(n)]
-        new_rows: List[List[jnp.ndarray]] = [[] for _ in range(n)]
-        new_sizes: List[List[float]] = [[] for _ in range(n)]
+        new_cids: Dict[tuple, List[int]] = {}
+        new_rows: Dict[tuple, List[jnp.ndarray]] = {}
+        new_sizes: Dict[tuple, List[float]] = {}
         for job, edges in zip(jobs, job_edges):
             cid = job.client.cid
+            gi = self.group_of[cid]
             losses.append(trained.loss[cid])
+            quantizing = not compressing and job.client.program.quantizes_upload
+            transforming = compressing or quantizing
             if compressing:
                 row = compress_flat_upload(
                     self.compression, self._errors, cid, job.start_flat, trained.row(cid)
                 )
             elif quantizing:
-                row = self.program.quantize_upload(job.start_flat, trained.row(cid))
+                row = job.client.program.quantize_upload(job.start_flat, trained.row(cid))
             for j in edges:
-                new_cids[j].append(cid)
+                new_cids.setdefault((j, gi), []).append(cid)
                 if transforming:
-                    new_rows[j].append(row)
-                new_sizes[j].append(job.client.data_size)
-        for j in range(n):
-            if not new_cids[j]:
-                continue
+                    new_rows.setdefault((j, gi), []).append(row)
+                new_sizes.setdefault((j, gi), []).append(job.client.data_size)
+        for (j, gi), cids in new_cids.items():
             # untransformed fast path: one gather from the cohort matrix
-            mat = jnp.stack(new_rows[j]) if transforming else trained.gather(new_cids[j])
-            edge_rows[j] = flat_mean(
-                mat, np.asarray(new_sizes[j], np.float32), backend=self.backend
+            mat = (
+                jnp.stack(new_rows[(j, gi)])
+                if (j, gi) in new_rows
+                else trained.gather(cids)
             )
-        self.accountant.on_edge_sync(
-            self.assignment * participating[:, None], uplink_bits=self._uplink_bits
-        )
-        if self.clock is not None:
-            self.clock.on_edge_sync(self.assignment, participating)
+            edge_rows[gi][j] = flat_mean(
+                mat, np.asarray(new_sizes[(j, gi)], np.float32), backend=self.backend
+            )
+        self._edge_account(participating)
         return losses
+
+    # -- distillation fuse ----------------------------------------------------
+    def _kd_fuse_device(self, edge_mats: List[jnp.ndarray]) -> List[jnp.ndarray]:
+        """Fuse every edge's per-group models on its public shard (device
+        pipeline: batches gathered from the public store in one call)."""
+        n = self.assignment.shape[1]
+        idx = draw_public_batches(self.rng, self.public_store.sizes, self.distill)
+        xb = self.public_store.gather(np.arange(n), idx)[0]  # (E, steps, B, *feat)
+        fused, _ = distill_fuse_flat(
+            self.groups, [pk.spec for pk in self.packs], edge_mats, xb, self.distill
+        )
+        return fused
+
+    def _kd_fuse_host(self, edge_rows: List[List[jnp.ndarray]]) -> List[List[jnp.ndarray]]:
+        """Host-pipeline counterpart: same flat fuse over stacked rows."""
+        mats = [jnp.stack(rows) for rows in edge_rows]
+        fused = self._kd_fuse_device(mats)
+        return [[mat[j] for j in range(mat.shape[0])] for mat in fused]
 
     def _central_step(self):
         self.central_params = central_reference_step(
@@ -377,43 +477,45 @@ class BatchedSyncEngine:
 
     def run(self, cloud_rounds: int, eval_every: int = 1) -> SimResult:
         n = self.assignment.shape[1]
+        n_groups = len(self.groups)
         history: List[RoundMetrics] = []
-        global_row = self.pack.ravel(self.params)
-        edge_sizes = np.asarray(
-            [
-                max(
-                    sum(
-                        c.data_size
-                        for i, c in enumerate(self.clients)
-                        if self.assignment[i, j]
-                    ),
-                    1,
-                )
-                for j in range(n)
-            ],
-            np.float32,
-        )
+        global_rows = [
+            pk.ravel(t) for pk, t in zip(self.packs, self.group_params)
+        ]
+        edge_sizes = group_edge_sizes(self.clients, self.assignment, self.group_of)
+        cloud_bits = None if n_groups == 1 else float(sum(self._group_bits))
         for b in range(1, cloud_rounds + 1):
             losses: List = []
             if self.pipeline == "device":
-                edge_mat = jnp.broadcast_to(global_row, (n, global_row.shape[0]))
+                edge_mats = [
+                    jnp.broadcast_to(row, (n, row.shape[0])) for row in global_rows
+                ]
                 for _ in range(self.schedule.edge_per_cloud):
-                    edge_mat, chunks = self._edge_round_device(edge_mat)
+                    edge_mats, chunks = self._edge_round_device(edge_mats)
                     losses += chunks  # per-cohort (C,) arrays, still on device
-                # cloud FedAvg straight off the (E, D) matrix: static shape,
-                # no per-round stacking
-                global_row = flat_mean(edge_mat, edge_sizes, backend=self.backend)
+                if self.distill is not None:
+                    edge_mats = self._kd_fuse_device(edge_mats)
+                # cloud FedAvg straight off the (E, D) matrices: static
+                # shape, no per-round stacking; one reduction per group
+                global_rows = [
+                    flat_mean(edge_mats[g], edge_sizes[g], backend=self.backend)
+                    for g in range(n_groups)
+                ]
                 losses = (
                     list(np.concatenate([np.asarray(c) for c in losses]))
                     if losses
                     else []
                 )
             else:
-                edge_rows = [global_row] * n
+                edge_rows = [[row] * n for row in global_rows]
                 for _ in range(self.schedule.edge_per_cloud):
                     losses += self._edge_round(edge_rows)
-                global_row = self._mean(edge_rows, edge_sizes)
-            self.accountant.on_cloud_sync(n)
+                if self.distill is not None:
+                    edge_rows = self._kd_fuse_host(edge_rows)
+                global_rows = [
+                    self._mean(edge_rows[g], edge_sizes[g]) for g in range(n_groups)
+                ]
+            self.accountant.on_cloud_sync(n, bits=cloud_bits)
             if self.clock is not None:
                 self.clock.on_cloud_sync()
             div = 0.0
@@ -421,14 +523,28 @@ class BatchedSyncEngine:
                 for _ in range(self.schedule.cloud_period):
                     self._central_step()
                 div = weight_divergence(
-                    self.pack.unravel(global_row), self.central_params
+                    self.pack.unravel(global_rows[0]), self.central_params
                 )
             if b % eval_every == 0 or b == cloud_rounds:
-                acc = evaluate(self.pack.unravel(global_row), self.program, self.test)
+                acc = float(
+                    np.mean(
+                        [
+                            evaluate(
+                                self.packs[g].unravel(global_rows[g]),
+                                self.groups[g],
+                                self.test,
+                            )
+                            for g in range(n_groups)
+                        ]
+                    )
+                )
                 history.append(
                     RoundMetrics(b, acc, div, float(np.mean(losses)) if losses else 0.0)
                 )
-        self.params = self.pack.unravel(global_row)
+        trees = [pk.unravel(row) for pk, row in zip(self.packs, global_rows)]
+        self.params = (
+            trees[0] if n_groups == 1 else hetero_final_params(self.groups, trees)
+        )
         result = SimResult(history, self.accountant, self.params)
         if self.clock is not None:
             result.wall_seconds = self.clock.seconds

@@ -93,6 +93,12 @@ class FLClient:
     def data_size(self) -> int:
         return len(self.shard)
 
+    @property
+    def program_name(self) -> str:
+        """The client's architecture identity (``ClientProgram.name``) — what
+        the heterogeneous-model layers group and report by."""
+        return self.program.name
+
     def class_counts(self) -> np.ndarray:
         return np.bincount(self.shard.y, minlength=self.shard.n_classes)
 

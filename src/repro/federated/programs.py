@@ -124,6 +124,18 @@ class ClientProgram:
     def apply(self, params, x, *, impl: str | None = None):
         raise NotImplementedError
 
+    def apply_logits(self, params, x, *, impl: str | None = None):
+        """Class/token logits for knowledge distillation (``engine.distill``).
+
+        The distillation fuse softens these over the LAST axis, so any two
+        programs fused at one edge must emit the same logit alphabet —
+        ``(B, K)`` class scores for the classifiers, ``(B, S, V)`` vocab
+        scores for the sequence LMs.  Defaults to the training forward;
+        override when a program's ``apply`` returns something other than
+        bare logits.
+        """
+        return self.apply(params, x, impl=impl)
+
     def loss(self, params, x, y, *, impl: str | None = None):
         """Mean training loss of a batch; the default is classifier xent."""
         return softmax_xent(self.apply(params, x, impl=impl), y)
@@ -552,6 +564,9 @@ class FedSGDProgram(ClientProgram):
     def apply(self, params, x, *, impl: str | None = None):
         return self.base.apply(params, x, impl=impl)
 
+    def apply_logits(self, params, x, *, impl: str | None = None):
+        return self.base.apply_logits(params, x, impl=impl)
+
     def loss(self, params, x, y, *, impl: str | None = None):
         return self.base.loss(params, x, y, impl=impl)
 
@@ -595,6 +610,57 @@ class FedSGDProgram(ClientProgram):
             start,
             trained,
         )
+
+
+def group_clients(clients, fallback=None):
+    """Partition clients by program identity (heterogeneous-model federation).
+
+    Returns ``(programs, group_of)``: the distinct ``ClientProgram`` values
+    in first-appearance (client) order, and an ``(M,)`` int array mapping
+    each client to its group.  Programs are frozen dataclasses, so identity
+    is VALUE equality — two clients carrying equal configs share a group.
+    With no clients the single group is ``fallback`` (coerced).
+    """
+    programs: list = []
+    group_of = np.zeros(len(clients), np.int64)
+    for i, c in enumerate(clients):
+        try:
+            gi = programs.index(c.program)
+        except ValueError:
+            gi = len(programs)
+            programs.append(c.program)
+        group_of[i] = gi
+    if not programs:
+        programs = [as_program(fallback)]
+    return programs, group_of
+
+
+def group_edge_sizes(clients, assignment, group_of) -> list:
+    """Per-group cloud weights: each edge's data volume of that
+    architecture's clients, floored at 1 so empty (edge, group) cells stay
+    defined.  One shared implementation keeps the engines and the
+    reference simulator's cloud reductions weight-identical.
+    """
+    assignment = np.asarray(assignment)
+    n = assignment.shape[1]
+    n_groups = int(group_of.max()) + 1 if len(group_of) else 1
+    return [
+        np.asarray(
+            [
+                max(
+                    sum(
+                        c.data_size
+                        for i, c in enumerate(clients)
+                        if assignment[i, j] and group_of[i] == g
+                    ),
+                    1,
+                )
+                for j in range(n)
+            ],
+            np.float32,
+        )
+        for g in range(n_groups)
+    ]
 
 
 def as_program(obj) -> ClientProgram:

@@ -20,6 +20,12 @@ and exposes every assignment strategy for comparison.
 SGD step per round, gradient uplink accounting); ``hparams=`` assigns
 per-EU hyperparameter overrides (heterogeneous ``lr`` / ``batch_size`` /
 ``local_epochs`` / ``max_steps`` populations).
+
+``model_mix=`` builds a heterogeneous-MODEL population: a mapping of
+program names to EU counts (e.g. ``{"cnn": 12, "mlp": 6}``) assigns a
+program per EU, generates one small PUBLIC shard per edge, and the
+simulation engines fuse the per-architecture edge models by logit
+distillation on that shard (``engine.distill``).
 """
 from __future__ import annotations
 
@@ -48,7 +54,12 @@ from repro.federated.programs import (
     FedSGDProgram,
     MLPProgram,
 )
-from repro.federated.simulation import HFLSimulation, SimResult, centralized_baseline
+from repro.federated.simulation import (
+    HeteroHFLSimulation,
+    HFLSimulation,
+    SimResult,
+    centralized_baseline,
+)
 from repro.models.cnn1d import HEARTBEAT_CNN, SEIZURE_CNN
 from repro.utils.tree import tree_size_bytes
 from repro.wireless.channel import WirelessParams, build_cost_matrices, sample_topology
@@ -66,6 +77,16 @@ class Scenario:
     wp: WirelessParams
     model_bits: float
     init_edge: np.ndarray
+    # heterogeneous-model federation (model_mix= scenarios): one public
+    # Dataset per edge for the distillation fuse, plus the fuse's default
+    # knobs; both None for homogeneous populations
+    public: Optional[List[Dataset]] = None
+    distill: object = None
+
+    @property
+    def is_hetero(self) -> bool:
+        """True when the population mixes client programs (architectures)."""
+        return len({c.program for c in self.clients}) > 1
 
     @property
     def cfg(self):
@@ -115,6 +136,7 @@ class Scenario:
         staleness_decay: float = 0.5,
         quorum: float = 0.75,
         pipeline: str = "device",
+        distill=None,
     ) -> SimResult:
         """Run the scenario through one of the simulation engines.
 
@@ -134,8 +156,31 @@ class Scenario:
                   bits.  Overrides any program-level uplink quantization
                   (FedSGD ``grad_bits=16``).
         upp:      per-round client participation probability in (0, 1].
+        distill:  ``engine.distill.DistillSpec`` override for the
+                  heterogeneous-model fuse; None uses the scenario's
+                  default (``model_mix=`` scenarios carry one).  Ignored
+                  for homogeneous populations.
         """
+        distill = distill if distill is not None else self.distill
         if engine == "reference":
+            if self.is_hetero:
+                if track_divergence or wall_clock:
+                    raise ValueError(
+                        "track_divergence/wall_clock are not defined for "
+                        "heterogeneous-model populations"
+                    )
+                sim = HeteroHFLSimulation(
+                    self.clients,
+                    assignment,
+                    self.test,
+                    schedule=schedule,
+                    seed=seed,
+                    upp=upp,
+                    public=self.public,
+                    distill=distill,
+                    compression=compression,
+                )
+                return sim.run(cloud_rounds, eval_every=eval_every)
             sim = HFLSimulation(
                 self.clients,
                 assignment,
@@ -168,6 +213,8 @@ class Scenario:
                 backend=backend,
                 compression=compression,
                 pipeline=pipeline,
+                public_shards=self.public,
+                distill=distill,
             )
             return sim.run(cloud_rounds, eval_every=eval_every)
         if engine == "async":
@@ -191,6 +238,8 @@ class Scenario:
                 quorum=quorum,
                 backend=backend,
                 compression=compression,
+                public_shards=self.public,
+                distill=distill,
             )
             return sim.run(cloud_rounds, eval_every=eval_every)
         raise ValueError(f"unknown engine {engine!r} (reference | sync | async)")
@@ -236,10 +285,47 @@ def _hparam_kwargs(
     return out
 
 
+def _mix_programs(
+    model_mix: Mapping[str, int], n_eus: int, allowed: Sequence[str], make
+) -> tuple:
+    """Validate a ``model_mix`` mapping into per-EU programs.
+
+    ``model_mix`` maps program names to EU counts (summing to the
+    population size); EUs take programs in mapping order — the first
+    ``model_mix[a]`` EUs run ``a``, the next block ``b``, and so on, so the
+    capability skew lands on a deterministic slice of the population and
+    EARA's KLD assignment interacts with it reproducibly.  ``make`` builds
+    the program for one name.
+    """
+    if not model_mix:
+        raise ValueError("model_mix must name at least one program")
+    unknown = set(model_mix) - set(allowed)
+    if unknown:
+        raise ValueError(
+            f"model_mix programs {sorted(unknown)} not supported here; "
+            f"allowed: {sorted(allowed)}"
+        )
+    counts = {name: int(c) for name, c in model_mix.items()}
+    if any(c < 1 for c in counts.values()):
+        raise ValueError(f"model_mix counts must be >= 1, got {model_mix}")
+    if sum(counts.values()) != n_eus:
+        raise ValueError(
+            f"model_mix counts must sum to the population size {n_eus}, "
+            f"got {sum(counts.values())}"
+        )
+    programs = {name: make(name) for name in counts}
+    per_eu: List[ClientProgram] = []
+    for name, c in counts.items():
+        per_eu += [programs[name]] * c
+    return per_eu, list(programs.values())
+
+
 def build_scenario(
     dataset: str = "heartbeat",
     *,
     model: str = "cnn",
+    model_mix: Optional[Mapping[str, int]] = None,
+    public_per_edge: int = 16,
     fedsgd: bool = False,
     grad_bits: int = 32,
     hparams: Optional[Sequence[Optional[Mapping]]] = None,
@@ -264,6 +350,17 @@ def build_scenario(
         the topic-skewed token-stream population (``dataset="lm"`` implied;
         conversely ``dataset="lm"`` defaults the model to ``"lm"``).
 
+    ``model_mix`` (optional, instead of ``model``) builds a
+    heterogeneous-MODEL population: a mapping of program names to EU
+    counts summing to the population size, e.g. ``{"cnn": 12, "mlp": 6}``
+    on the health shards or ``{"lm": 8, "moe": 4}`` on the token streams
+    (families cannot cross: the architectures under one edge must share a
+    shard layout and logit alphabet for the distillation fuse).  The
+    scenario then carries one small PUBLIC shard per edge
+    (``public_per_edge`` samples each) and a default
+    ``engine.distill.DistillSpec``; the engines fuse the per-architecture
+    edge models on it once per cloud round.
+
     ``fedsgd=True`` wraps the chosen program in ``FedSGDProgram`` — one
     plain-SGD step per round and gradient-payload uplink accounting
     (``grad_bits`` = 32 exact | 16 fp16-cast gradients).
@@ -277,14 +374,35 @@ def build_scenario(
     scales sequences-per-EU there just as it scales samples in the health
     setups.
     """
+    if model_mix is not None and fedsgd:
+        raise ValueError("model_mix and fedsgd cannot combine (pick one)")
+    if model_mix is not None and model != "cnn":  # "cnn" is the unset default
+        raise ValueError(
+            f"pass either model= or model_mix=, not both (got model={model!r})"
+        )
     seq_model = model in SEQUENCE_PROGRAMS
-    if dataset == "lm" or seq_model:
-        if not seq_model and model != "cnn":  # "cnn" is just the unset default
+    seq_mix = model_mix is not None and set(model_mix) <= set(SEQUENCE_PROGRAMS)
+    if model_mix is not None and not seq_mix:
+        bad = set(model_mix) & set(SEQUENCE_PROGRAMS)
+        if bad:
+            raise ValueError(
+                "model_mix cannot cross families: sequence programs "
+                f"{sorted(bad)} do not share a shard layout with {sorted(set(model_mix) - bad)}"
+            )
+        if dataset == "lm":
+            raise ValueError(
+                f"dataset='lm' requires a sequence model_mix {SEQUENCE_PROGRAMS}, "
+                f"got {sorted(model_mix)}"
+            )
+    if dataset == "lm" or seq_model or seq_mix:
+        if not (seq_model or seq_mix) and model != "cnn":  # "cnn" is the unset default
             raise ValueError(
                 f"dataset='lm' requires a sequence model {SEQUENCE_PROGRAMS}, got {model!r}"
             )
         return _build_lm_scenario(
             model=model if seq_model else "lm",
+            model_mix=model_mix if seq_mix else None,
+            public_per_edge=public_per_edge,
             fedsgd=fedsgd,
             grad_bits=grad_bits,
             hparams=hparams,
@@ -315,27 +433,57 @@ def build_scenario(
     train = maker(rng, counts.sum(axis=0))
     shards = split_dataset_by_counts(rng, train, counts)
     test = maker(rng, np.full(k, n_test_per_class))
-    if model == "cnn":
-        program: ClientProgram = CNNProgram(cnn)
-    elif model == "mlp":
-        program = MLPProgram(feat=(cnn.seq_len, cnn.in_channels), classes=k)
-    else:
+
+    def make_health(name: str) -> ClientProgram:
+        if name == "cnn":
+            return CNNProgram(cnn)
+        if name == "mlp":
+            return MLPProgram(feat=(cnn.seq_len, cnn.in_channels), classes=k)
         raise ValueError(
-            f"unknown model {model!r} (cnn | mlp | {' | '.join(SEQUENCE_PROGRAMS)})"
+            f"unknown model {name!r} (cnn | mlp | {' | '.join(SEQUENCE_PROGRAMS)})"
         )
-    if fedsgd:
-        program = FedSGDProgram(base=program, grad_bits=grad_bits)
+
+    public = None
+    distill = None
+    if model_mix is not None:
+        per_eu, distinct = _mix_programs(model_mix, n_eus, ("cnn", "mlp"), make_health)
+        program = per_eu[0]
+        if len(distinct) > 1:
+            # one small public pool per edge, drawn AFTER the private shards
+            # so the population above is byte-identical to the homogeneous
+            # builder at equal seeds
+            per_class = np.full(k, max(1, public_per_edge // k))
+            public = [maker(rng, per_class) for _ in range(n_edges)]
+            from repro.engine.distill import DistillSpec
+
+            distill = DistillSpec()
+    else:
+        program = make_health(model)
+        if fedsgd:
+            program = FedSGDProgram(base=program, grad_bits=grad_bits)
+        per_eu = [program] * n_eus
     kw = _hparam_kwargs(hparams, n_eus)
-    clients = [FLClient(i, shards[i], program, **kw[i]) for i in range(n_eus)]
+    clients = [FLClient(i, shards[i], per_eu[i], **kw[i]) for i in range(n_eus)]
     wp = wp or WirelessParams()
     topo = sample_topology(
         jax.random.PRNGKey(seed), n_eus, n_edges, mean_dist=mean_dist,
         dataset_sizes=counts.sum(axis=1),
     )
-    model_bits = tree_size_bytes(program.init(jax.random.PRNGKey(0))) * 8
+    # mixed fleets size the airtime estimate by the LARGEST architecture —
+    # the conservative payload for EARA's energy/latency costs
+    model_bits = max(
+        tree_size_bytes(p.init(jax.random.PRNGKey(0))) * 8
+        for p in {c.program for c in clients}
+    )
     cost = build_cost_matrices(topo, model_bits, wp)
+    if model_mix is not None and len({c.program for c in clients}) > 1:
+        name = f"{dataset}-mix(" + "+".join(model_mix) + ")"
+    elif program.name == "cnn":
+        name = f"{dataset}"
+    else:
+        name = f"{dataset}-{program.name}"
     return Scenario(
-        name=f"{dataset}" if program.name == "cnn" else f"{dataset}-{program.name}",
+        name=name,
         program=program,
         clients=clients,
         test=test,
@@ -345,12 +493,16 @@ def build_scenario(
         wp=wp,
         model_bits=model_bits,
         init_edge=init_edge,
+        public=public,
+        distill=distill,
     )
 
 
 def _build_lm_scenario(
     *,
     model: str,
+    model_mix: Optional[Mapping[str, int]] = None,
+    public_per_edge: int = 16,
     fedsgd: bool,
     grad_bits: int,
     hparams: Optional[Sequence[Optional[Mapping]]],
@@ -409,22 +561,58 @@ def _build_lm_scenario(
     )
     # the registry factories build the tiny IoT-sized config per model, so
     # a newly registered sequence program is reachable here for free
-    program: ClientProgram = PROGRAMS.get(model)(
-        vocab_size=vocab, seq_len=seq_len, n_topics=n_topics
-    )
-    if fedsgd:
-        program = FedSGDProgram(base=program, grad_bits=grad_bits)
+    def make_seq(name: str) -> ClientProgram:
+        return PROGRAMS.get(name)(vocab_size=vocab, seq_len=seq_len, n_topics=n_topics)
+
+    public = None
+    distill = None
+    if model_mix is not None:
+        per_eu, distinct = _mix_programs(model_mix, n_eus, SEQUENCE_PROGRAMS, make_seq)
+        program = per_eu[0]
+        if len(distinct) > 1:
+            # per-edge public token pools from fresh streams (never replay
+            # training or test state); drawn after everything else so the
+            # population matches the homogeneous builder at equal seeds
+            pub_streams = [
+                TokenStream(vocab, seed=seed + 3571, topic=t) for t in range(n_topics)
+            ]
+            per_topic = max(1, public_per_edge // n_topics)
+            public = []
+            for _ in range(n_edges):
+                px = np.concatenate(
+                    [s.batch(per_topic, seq_len) for s in pub_streams], 0
+                )
+                py = np.concatenate(
+                    [np.full((per_topic,), t, np.int32) for t in range(n_topics)], 0
+                )
+                public.append(Dataset(px, py, n_classes=n_topics))
+            from repro.engine.distill import DistillSpec
+
+            distill = DistillSpec()
+    else:
+        program = make_seq(model)
+        if fedsgd:
+            program = FedSGDProgram(base=program, grad_bits=grad_bits)
+        per_eu = [program] * n_eus
     kw = _hparam_kwargs(hparams, n_eus)
-    clients = [FLClient(i, shards[i], program, **kw[i]) for i in range(n_eus)]
+    clients = [FLClient(i, shards[i], per_eu[i], **kw[i]) for i in range(n_eus)]
     wp = wp or WirelessParams()
     topo = sample_topology(
         jax.random.PRNGKey(seed), n_eus, n_edges, mean_dist=mean_dist,
         dataset_sizes=counts.sum(axis=1),
     )
-    model_bits = tree_size_bytes(program.init(jax.random.PRNGKey(0))) * 8
+    model_bits = max(
+        tree_size_bytes(p.init(jax.random.PRNGKey(0))) * 8
+        for p in {c.program for c in clients}
+    )
     cost = build_cost_matrices(topo, model_bits, wp)
+    name = (
+        "mix(" + "+".join(model_mix) + ")"
+        if model_mix is not None and len({c.program for c in clients}) > 1
+        else program.name
+    )
     return Scenario(
-        name=program.name,
+        name=name,
         program=program,
         clients=clients,
         test=test,
@@ -436,4 +624,6 @@ def _build_lm_scenario(
         # no Table-2/3 edge pools here; the "initial edge" is each EU's
         # nearest edge (a valid edge INDEX, unlike the dominant-topic id)
         init_edge=np.asarray(topo.dist).argmin(axis=1),
+        public=public,
+        distill=distill,
     )

@@ -18,7 +18,7 @@ from repro.core.compression import CompressionSpec
 from repro.core.hfl import CommAccountant, HFLSchedule, WallClock, cloud_aggregate, edge_aggregate, weight_divergence
 from repro.data.synthetic_health import Dataset
 from repro.federated.client import FLClient, _local_epoch
-from repro.federated.programs import as_program
+from repro.federated.programs import as_program, group_clients, group_edge_sizes
 from repro.utils.tree import tree_add, tree_size_bytes, tree_sub
 
 
@@ -206,6 +206,185 @@ class HFLSimulation:
                 )
         self.params = global_params
         return SimResult(history, self.accountant, global_params)
+
+
+def hetero_final_params(programs, trees) -> Dict[str, dict]:
+    """Label one final parameter tree per architecture group.
+
+    Keys are the program names; two groups that share a name (same
+    architecture, different frozen config) get a positional suffix so no
+    tree is silently dropped.
+    """
+    out: Dict[str, dict] = {}
+    for g, (prog, tree) in enumerate(zip(programs, trees)):
+        key = prog.name if prog.name not in out else f"{prog.name}#{g}"
+        out[key] = tree
+    return out
+
+
+class HeteroHFLSimulation:
+    """Readable reference for heterogeneous-MODEL hierarchical FL.
+
+    Clients may carry different ``ClientProgram``s; the population splits
+    into architecture groups (``federated.programs.group_clients``) and the
+    paper's two-level schedule runs once per group — per-edge FedAvg within
+    each architecture, per-group cloud reduction — with one extra stage the
+    homogeneous pipeline does not have: once per cloud round, after the
+    edge rounds and before the cloud reduction, each edge fuses its G
+    per-group models by ensemble logit distillation on its own public
+    shard (``engine.distill.distill_edge``).
+
+    This class is the parity oracle for the engines' group-aware paths: it
+    consumes the numpy RNG stream in exactly the order the engines do
+    (participation draw, then per-client batch draws in global client
+    order, then per-edge public-batch draws in edge order), trains every
+    client through the same ``FLClient.local_update``, and charges the
+    accountant with the same per-group calls.
+
+    ``public`` is one ``Dataset`` per edge (the KD fuse's shared data);
+    ``distill=None`` disables the fuse (groups then evolve independently —
+    still a valid hetero federation, just without knowledge transfer).
+    """
+
+    def __init__(
+        self,
+        clients: List[FLClient],
+        assignment: np.ndarray,
+        test: Dataset,
+        schedule: HFLSchedule = HFLSchedule(1, 1),
+        seed: int = 0,
+        upp: float = 1.0,
+        public: "Optional[List[Dataset]]" = None,
+        distill=None,
+        compression: Optional[CompressionSpec] = None,
+    ):
+        # lazy: no engine dependency at module import time
+        from repro.engine.distill import check_distillable, check_public_shards
+
+        self.clients = clients
+        self.assignment = np.asarray(assignment)
+        self.test = test
+        self.schedule = schedule
+        self.rng = np.random.default_rng(seed)
+        self.upp = upp
+        self.programs, self.group_of = group_clients(clients)
+        self.group_params = [
+            p.init(jax.random.PRNGKey(seed)) for p in self.programs
+        ]
+        self._group_bits = [tree_size_bytes(t) * 8 for t in self.group_params]
+        self.distill = distill if len(self.programs) > 1 else None
+        self.public = public
+        if self.distill is not None:
+            check_public_shards(public, self.assignment.shape[1])
+            check_distillable(self.programs)
+        self.accountant = CommAccountant(model_bits=self._group_bits[0])
+        self.compression = compression
+        self._comp_errors: Dict[int, object] = {}
+        if compression is not None and compression.kind != "none":
+            self._uplink_bits = [compression.bits(t) for t in self.group_params]
+        else:
+            self._uplink_bits = [
+                p.uplink_bits(b) for p, b in zip(self.programs, self._group_bits)
+            ]
+
+    def _compress_upload(self, cid: int, start, trained):
+        if self.compression is None or self.compression.kind == "none":
+            return self.clients[cid].program.quantize_upload(start, trained)
+        delta = tree_sub(trained, start)
+        sparse, err = self.compression.apply(delta, self._comp_errors.get(cid))
+        self._comp_errors[cid] = err
+        return tree_add(start, sparse)
+
+    def _edge_round(self, edge_params: List[List[dict]]) -> List[float]:
+        """One edge round; ``edge_params[g][j]`` is edge j's group-g model."""
+        m, n = self.assignment.shape
+        losses = []
+        participating = self.rng.random(m) < self.upp
+        if not participating.any():
+            participating[self.rng.integers(0, m)] = True
+        new_models: Dict[tuple, List[dict]] = {}
+        new_sizes: Dict[tuple, List[float]] = {}
+        for i, cl in enumerate(self.clients):
+            edges = np.nonzero(self.assignment[i])[0]
+            if len(edges) == 0 or not participating[i]:
+                continue
+            g = int(self.group_of[i])
+            rows = edge_params[g]
+            start = rows[edges[0]] if len(edges) == 1 else edge_aggregate(
+                [rows[j] for j in edges], [1.0] * len(edges)
+            )
+            upd, loss = cl.local_update(start, self.rng, epochs=self.schedule.local_steps)
+            losses.append(loss)
+            upd = self._compress_upload(cl.cid, start, upd)
+            for j in edges:
+                new_models.setdefault((g, j), []).append(upd)
+                new_sizes.setdefault((g, j), []).append(cl.data_size)
+        for (g, j), models in new_models.items():
+            edge_params[g][j] = edge_aggregate(models, new_sizes[(g, j)])
+        for g in range(len(self.programs)):
+            mask = (self.group_of == g) & participating
+            self.accountant.on_edge_sync(
+                self.assignment * mask[:, None],
+                uplink_bits=self._uplink_bits[g],
+                downlink_bits=None if len(self.programs) == 1 else self._group_bits[g],
+                count_round=(g == 0),
+            )
+        return losses
+
+    def _kd_fuse(self, edge_params: List[List[dict]]) -> List[List[dict]]:
+        from repro.engine.distill import distill_edge, draw_public_batches
+
+        n = self.assignment.shape[1]
+        idx = draw_public_batches(
+            self.rng, [len(s) for s in self.public], self.distill
+        )
+        for j in range(n):
+            xb = self.public[j].x[idx[j]]  # (steps, B, *feat)
+            fused, _ = distill_edge(
+                self.programs, [edge_params[g][j] for g in range(len(self.programs))],
+                xb, self.distill,
+            )
+            for g, tree in enumerate(fused):
+                edge_params[g][j] = tree
+        return edge_params
+
+    def run(self, cloud_rounds: int, eval_every: int = 1) -> SimResult:
+        n = self.assignment.shape[1]
+        n_groups = len(self.programs)
+        history: List[RoundMetrics] = []
+        group_params = self.group_params
+        edge_sizes = group_edge_sizes(self.clients, self.assignment, self.group_of)
+        cloud_bits = None if n_groups == 1 else float(sum(self._group_bits))
+        for b in range(1, cloud_rounds + 1):
+            edge_params = [[tree] * n for tree in group_params]
+            losses: List[float] = []
+            for _ in range(self.schedule.edge_per_cloud):
+                losses += self._edge_round(edge_params)
+            if self.distill is not None:
+                edge_params = self._kd_fuse(edge_params)
+            group_params = [
+                cloud_aggregate(edge_params[g], edge_sizes[g]) for g in range(n_groups)
+            ]
+            self.accountant.on_cloud_sync(n, bits=cloud_bits)
+            if b % eval_every == 0 or b == cloud_rounds:
+                acc = float(
+                    np.mean(
+                        [
+                            evaluate(group_params[g], self.programs[g], self.test)
+                            for g in range(n_groups)
+                        ]
+                    )
+                )
+                history.append(
+                    RoundMetrics(b, acc, 0.0, float(np.mean(losses)) if losses else 0.0)
+                )
+        self.group_params = group_params
+        final = (
+            group_params[0]
+            if n_groups == 1
+            else hetero_final_params(self.programs, group_params)
+        )
+        return SimResult(history, self.accountant, final)
 
 
 def centralized_baseline(

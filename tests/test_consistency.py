@@ -4,9 +4,16 @@
 * chunked mamba/rwkv == naive step recurrence
 * grouped MoE == dense MoE (ample capacity)
 * blockwise attention == full-softmax sdpa
+* golden-trajectory pins: the CNN 2-round HFL trajectory on all three
+  engine paths must reproduce committed param hashes bit for bit
 """
+import hashlib
+import json
+import os
+
 import jax
 import jax.numpy as jnp
+import numpy as np
 import pytest
 
 from repro.configs import get_smoke_config
@@ -89,6 +96,50 @@ def test_blockwise_attention_equals_sdpa(window):
     o1 = blockwise_attention(*ks, causal=True, window=window, q_block=32, kv_block=32)
     o2 = sdpa(*ks, causal_mask(S, S, window))
     assert float(jnp.max(jnp.abs(o1 - o2))) < 1e-4
+
+
+# -- golden trajectory pins (ISSUE 5) ----------------------------------------
+_GOLDEN_PATH = os.path.join(os.path.dirname(__file__), "golden", "cnn_trajectory.json")
+
+
+def _params_hash(tree) -> str:
+    h = hashlib.sha256()
+    for leaf in jax.tree.leaves(tree):
+        h.update(np.ascontiguousarray(np.asarray(leaf)).tobytes())
+    return h.hexdigest()
+
+
+@pytest.fixture(scope="module")
+def golden():
+    with open(_GOLDEN_PATH) as f:
+        data = json.load(f)
+    if data["jax"] != jax.__version__ or data["backend"] != jax.default_backend():
+        pytest.skip(
+            f"golden pins recorded on jax {data['jax']}/{data['backend']}, "
+            f"running {jax.__version__}/{jax.default_backend()} — regenerate "
+            "with tools/golden_trajectory.py to pin this environment"
+        )
+    return data
+
+
+@pytest.fixture(scope="module")
+def golden_runs():
+    from tools.golden_trajectory import golden_runs as _runs
+
+    return _runs()
+
+
+@pytest.mark.parametrize("path", ["sync-device", "sync-host", "async"])
+def test_golden_cnn_trajectory_pinned(golden, golden_runs, path):
+    """Refactors must not silently drift the reference CNN trajectories:
+    final params hash (bit-exact) and the accuracy history are pinned to
+    the committed values.  On drift: if the change is INTENTIONAL, rerun
+    ``PYTHONPATH=src python tools/golden_trajectory.py`` and explain the
+    new semantics in the PR; otherwise the refactor broke parity."""
+    res = golden_runs[path]
+    want = golden["runs"][path]
+    assert [round(m.test_acc, 10) for m in res.history] == want["accs"]
+    assert _params_hash(res.final_params) == want["params_sha256"]
 
 
 def test_moe_dropped_tokens_get_zero_output():

@@ -152,14 +152,21 @@ def test_store_gathers_int_token_shards():
         np.testing.assert_array_equal(np.asarray(yb[i]), clients[i].shard.y[idx[i]])
 
 
-def test_cohort_plan_rejects_mixed_programs():
+def test_cohort_plan_splits_mixed_programs():
+    """Since ISSUE 5 a plan may hold a heterogeneous-model population: the
+    cohort key leads with program identity, so two architectures NEVER
+    stack into one (C, D) cohort — each drawn group carries its program."""
     rng = np.random.default_rng(0)
     shard = Dataset(rng.normal(size=(4, 32, 1)).astype(np.float32),
                     np.zeros(4, np.int32), 3)
     cnn, mlp = _programs()[:2]
-    clients = [FLClient(0, shard, cnn), FLClient(1, shard, mlp)]
-    with pytest.raises(ValueError):
-        CohortPlan(clients)
+    clients = [FLClient(0, shard, cnn), FLClient(1, shard, mlp),
+               FLClient(2, shard, cnn)]
+    plan = CohortPlan(clients)
+    groups, passthrough = plan.draw(np.random.default_rng(1), np.ones(3, bool), 1)
+    assert len(passthrough) == 0
+    by_prog = {g.program.name: tuple(g.members) for g in groups}
+    assert by_prog == {"cnn": (0, 2), "mlp": (1,)}
 
 
 # -- MLP: full pipeline equivalence -----------------------------------------
