@@ -4,14 +4,25 @@ Every ``emit`` prints one ``name,us_per_call,derived`` CSV row and records
 it; benchmark modules bracket their rows with ``mark()`` / ``dump_json()``
 to land a machine-readable ``BENCH_<module>.json`` in the repo root, so
 the perf trajectory is tracked (and diffable) across PRs.
+
+Timing goes through :class:`repro.telemetry.trace.Tracer` spans — the same
+span machinery the engines record under ``Scenario.simulate(telemetry=)``
+— so a benchmark number and a trace span for the same region are the same
+measurement, not two stopwatches.  ``BENCH_*.json`` files carry a ``meta``
+block (jax version, backend, device count, quick-vs-full mode) and every
+row can record ``mean_us``/``std_us`` across repeats alongside the
+best-of-N headline number.
 """
 from __future__ import annotations
 
 import json
 import os
-import time
+import statistics
+import sys
 from pathlib import Path
 from typing import Callable, Dict, List
+
+from repro.telemetry.trace import Tracer
 
 QUICK = os.environ.get("BENCH_FULL", "") == ""
 
@@ -22,8 +33,40 @@ OUT_DIR = Path(os.environ.get("BENCH_OUT", Path(__file__).resolve().parent.paren
 _rows: List[Dict[str, object]] = []
 
 
-def emit(name: str, us_per_call: float, derived: str = "") -> None:
-    _rows.append({"name": name, "us_per_call": round(us_per_call, 1), "derived": derived})
+def run_meta() -> Dict[str, object]:
+    """Environment stamp for one benchmark run: enough to judge whether two
+    ``BENCH_*.json`` files are comparable before diffing their numbers."""
+    meta: Dict[str, object] = {"quick": QUICK, "python": sys.version.split()[0]}
+    try:
+        import jax
+
+        meta["jax"] = jax.__version__
+        meta["backend"] = jax.default_backend()
+        meta["device_count"] = jax.device_count()
+    except Exception:
+        pass
+    return meta
+
+
+def emit(
+    name: str,
+    us_per_call: float,
+    derived: str = "",
+    *,
+    mean_us: float = None,
+    std_us: float = None,
+    repeats: int = None,
+) -> None:
+    row: Dict[str, object] = {
+        "name": name, "us_per_call": round(us_per_call, 1), "derived": derived,
+    }
+    if mean_us is not None:
+        row["mean_us"] = round(mean_us, 1)
+    if std_us is not None:
+        row["std_us"] = round(std_us, 1)
+    if repeats is not None:
+        row["repeats"] = repeats
+    _rows.append(row)
     print(f"{name},{us_per_call:.1f},{derived}", flush=True)
 
 
@@ -39,20 +82,42 @@ def mark() -> int:
 def dump_json(filename: str, start: int = 0) -> Path:
     """Write rows emitted since ``start`` to ``OUT_DIR/filename``."""
     path = OUT_DIR / filename
-    payload = {"quick": QUICK, "results": _rows[start:]}
+    payload = {"quick": QUICK, "meta": run_meta(), "results": _rows[start:]}
     path.write_text(json.dumps(payload, indent=2) + "\n")
     return path
 
 
-def timeit(fn: Callable, *args, repeats: int = 3, **kw) -> float:
-    fn(*args, **kw)  # warmup / compile
-    t0 = time.perf_counter()
-    for _ in range(repeats):
-        out = fn(*args, **kw)
-    try:
-        import jax
+def span_stats(durations_s: List[float]) -> Dict[str, float]:
+    """best/mean/std (µs) over a list of span durations (seconds)."""
+    us = [d * 1e6 for d in durations_s]
+    return {
+        "best_us": min(us),
+        "mean_us": statistics.fmean(us),
+        "std_us": statistics.pstdev(us) if len(us) > 1 else 0.0,
+        "repeats": len(us),
+    }
 
-        jax.block_until_ready(out)
-    except Exception:
-        pass
-    return (time.perf_counter() - t0) / repeats * 1e6
+
+def timeit_stats(fn: Callable, *args, repeats: int = 3, **kw) -> Dict[str, float]:
+    """Time ``fn(*args, **kw)`` via tracer spans: one span per repeat, device
+    work forced complete inside each span.  Returns best/mean/std in µs."""
+    tracer = Tracer()
+
+    def once():
+        out = fn(*args, **kw)
+        try:
+            import jax
+
+            jax.block_until_ready(out)
+        except Exception:
+            pass
+
+    once()  # warmup / compile
+    for _ in range(repeats):
+        with tracer.span("timeit"):
+            once()
+    return span_stats(tracer.durations("timeit"))
+
+
+def timeit(fn: Callable, *args, repeats: int = 3, **kw) -> float:
+    return timeit_stats(fn, *args, repeats=repeats, **kw)["mean_us"]

@@ -42,12 +42,12 @@ device-sync >= 2x batched-sync at M = 512 (ISSUE 2).  Results land in
 from __future__ import annotations
 
 import os
-import time
 from typing import Dict, Optional
 
 import numpy as np
 
-from benchmarks.common import QUICK, dump_json, emit, mark
+from benchmarks.common import QUICK, dump_json, emit, mark, span_stats
+from repro.telemetry.trace import Tracer
 from repro.core.hfl import HFLSchedule
 from repro.data.lm_stream import TokenStream
 from repro.data.synthetic_health import Dataset, heartbeat_like
@@ -153,22 +153,24 @@ def _make_population(m: int, n_edges: int, seed: int = 0, model: str = "cnn"):
     return clients, assignment, test, latency, program, public
 
 
-def _time_interleaved(makers: Dict[str, object], repeats: int = 3) -> Dict[str, float]:
-    """Best-of-N one-cloud-round wall time per contender; first (warmup) run
-    compiles.  The timed runs are INTERLEAVED round-robin so a load spike on
-    a shared box hits every contender, not whichever happened to be running
-    — consecutive per-engine timing made the speedup ratios a lottery under
-    noisy-neighbor variance."""
+def _time_interleaved(
+    makers: Dict[str, object], repeats: int = 3
+) -> Dict[str, Dict[str, float]]:
+    """One-cloud-round wall time per contender (telemetry tracer spans, one
+    per timed run); first (warmup) run compiles.  The timed runs are
+    INTERLEAVED round-robin so a load spike on a shared box hits every
+    contender, not whichever happened to be running — consecutive per-engine
+    timing made the speedup ratios a lottery under noisy-neighbor variance.
+    Returns per-contender ``{"best_us", "mean_us", "std_us", "repeats"}``."""
+    tracer = Tracer()
     for make_sim in makers.values():
         make_sim().run(1, eval_every=1)
-    best = {k: float("inf") for k in makers}
     for _ in range(repeats):
         for k, make_sim in makers.items():
             sim = make_sim()
-            t0 = time.perf_counter()
-            sim.run(1, eval_every=1)
-            best[k] = min(best[k], time.perf_counter() - t0)
-    return best
+            with tracer.span(k):
+                sim.run(1, eval_every=1)
+    return {k: span_stats(tracer.durations(k)) for k in makers}
 
 
 def bench_scale(m: int, n_edges: int, model: str = "cnn") -> Dict[str, Optional[float]]:
@@ -202,24 +204,34 @@ def bench_scale(m: int, n_edges: int, model: str = "cnn") -> Dict[str, Optional[
         else:
             makers["loop"] = lambda: HFLSimulation(clients, assignment, **mk)
     t = _time_interleaved(makers)
-    t_ref = t.get("loop")
-    t_host, t_dev, t_async = t["host"], t["device"], t["async"]
+
+    def best_s(key):
+        return t[key]["best_us"] * 1e-6
+
+    def stat_kw(key):
+        return dict(mean_us=t[key]["mean_us"], std_us=t[key]["std_us"],
+                    repeats=t[key]["repeats"])
+
+    t_ref = best_s("loop") if "loop" in t else None
+    t_host, t_dev, t_async = best_s("host"), best_s("device"), best_s("async")
 
     prog = f"program={'mix(cnn+mlp)' if model == 'mix' else program.name}"
     if t_ref is not None:
         emit(f"engine_sync_loop_{tag}m{m}", t_ref * 1e6,
-             f"{m / t_ref:.1f} clients/sec {prog}")
+             f"{m / t_ref:.1f} clients/sec {prog}", **stat_kw("loop"))
         emit(f"engine_batched_sync_{tag}m{m}", t_host * 1e6,
-             f"{m / t_host:.1f} clients/sec ({t_ref / t_host:.1f}x vs loop) {prog}")
+             f"{m / t_host:.1f} clients/sec ({t_ref / t_host:.1f}x vs loop) {prog}",
+             **stat_kw("host"))
     else:
         emit(f"engine_sync_loop_{tag}m{m}", 0.0,
              f"skipped in quick mode (infeasible) {prog}")
         emit(f"engine_batched_sync_{tag}m{m}", t_host * 1e6,
-             f"{m / t_host:.1f} clients/sec {prog}")
+             f"{m / t_host:.1f} clients/sec {prog}", **stat_kw("host"))
     emit(f"engine_device_sync_{tag}m{m}", t_dev * 1e6,
-         f"{m / t_dev:.1f} clients/sec ({t_host / t_dev:.2f}x vs pr1-engine) {prog}")
+         f"{m / t_dev:.1f} clients/sec ({t_host / t_dev:.2f}x vs pr1-engine) {prog}",
+         **stat_kw("device"))
     emit(f"engine_async_{tag}m{m}", t_async * 1e6,
-         f"{m / t_async:.1f} clients/sec {prog}")
+         f"{m / t_async:.1f} clients/sec {prog}", **stat_kw("async"))
     return {"loop": t_ref, "host": t_host, "device": t_dev, "async": t_async}
 
 

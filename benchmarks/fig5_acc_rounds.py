@@ -4,8 +4,6 @@ EARA reaches DBA's final accuracy in 75-85% fewer cloud rounds.
 """
 from __future__ import annotations
 
-import time
-
 import numpy as np
 
 from benchmarks.common import QUICK, emit
@@ -24,15 +22,18 @@ def run(dataset: str, rounds: int, seed: int = 0):
     scale = (0.03 if dataset == "heartbeat" else 0.12) if QUICK else 0.2
     sc = build_scenario(dataset, scale=scale, seed=seed,
                         n_test_per_class=60 if QUICK else 300)
-    curves = {}
-    t0 = time.perf_counter()
+    curves, walls = {}, {}
     for strat in ("dba", "eara-sca", "eara-dca"):
         a = sc.assign(strat)
         res = sc.simulate(a.lam, cloud_rounds=rounds, schedule=SCHED, seed=seed)
         curves[strat] = [m.test_acc for m in res.history]
-    curves["centralized"] = [m.test_acc for m in sc.centralized(rounds, seed=seed)]
-    us = (time.perf_counter() - t0) * 1e6
-    return sc, curves, us
+        # per-curve time from the history's own RoundMetrics timing — no
+        # benchmark-side stopwatch around the simulate call
+        walls[strat] = sum(m.wall_seconds for m in res.history)
+    cent = sc.centralized(rounds, seed=seed)
+    curves["centralized"] = [m.test_acc for m in cent]
+    walls["centralized"] = sum(m.wall_seconds for m in cent)
+    return sc, curves, walls
 
 
 def rounds_to(curve, target):
@@ -45,9 +46,9 @@ def rounds_to(curve, target):
 def main() -> None:
     rounds = 6 if QUICK else 30
     for dataset in ("heartbeat", "seizure"):
-        sc, curves, us = run(dataset, rounds)
+        sc, curves, walls = run(dataset, rounds)
         for k, v in curves.items():
-            emit(f"fig5_acc_{dataset}_{k}", us / 4,
+            emit(f"fig5_acc_{dataset}_{k}", walls[k] * 1e6,
                  "acc=" + ";".join(f"{a:.3f}" for a in v))
         # iso-accuracy round reduction vs DBA (paper: 75-85%)
         target = min(max(curves["dba"]), max(curves["eara-sca"])) * 0.98

@@ -25,7 +25,8 @@ def traffic_at_target(sc, lam, target, max_rounds, seed=0):
     acc = res.accountant
     per_eu = acc.eu_traffic_bits()
     scale = (r / max_rounds) if r else 1.0  # traffic up to the target round
-    return {i: b * scale for i, b in per_eu.items()}, r
+    wall = sum(m.wall_seconds for m in res.history)  # from RoundMetrics
+    return {i: b * scale for i, b in per_eu.items()}, r, wall
 
 
 def main() -> None:
@@ -36,12 +37,12 @@ def main() -> None:
     results = {}
     for strat in ("dba", "eara-sca", "eara-dca"):
         a = sc.assign(strat)
-        tr, r = traffic_at_target(sc, a.lam, target, rounds)
+        tr, r, wall = traffic_at_target(sc, a.lam, target, rounds)
         dual = {i for i in range(a.lam.shape[0]) if a.lam[i].sum() > 1}
         sc_mean = np.mean([b for i, b in tr.items() if i not in dual]) / 8e6
         dc_mean = (np.mean([b for i, b in tr.items() if i in dual]) / 8e6) if dual else 0.0
         results[strat] = (sc_mean, dc_mean, r)
-        emit(f"fig6_traffic_{strat}", 0.0,
+        emit(f"fig6_traffic_{strat}", wall * 1e6,
              f"MB_per_SC_EU={sc_mean:.3f} MB_per_DC_EU={dc_mean:.3f} rounds_to_{target}={r}")
     if results["dba"][2] and results["eara-sca"][2]:
         red = 100 * (1 - results["eara-sca"][0] / results["dba"][0])

@@ -129,6 +129,17 @@ class CommAccountant:
             for i in keys
         }
 
+    def totals(self) -> Dict[str, float]:
+        """Cumulative traffic/round totals (the quantities telemetry reports
+        as per-round deltas via ``repro.telemetry.report.CommDelta``)."""
+        return {
+            "eu_up_bits": float(sum(self.eu_bits_up.values())),
+            "eu_down_bits": float(sum(self.eu_bits_down.values())),
+            "cloud_bits": float(self.edge_cloud_bits),
+            "edge_rounds": float(self.edge_rounds),
+            "cloud_rounds": float(self.cloud_rounds),
+        }
+
 
 @dataclasses.dataclass
 class WallClock:

@@ -29,12 +29,38 @@ _DTYPE_BYTES = {
 _SHAPE_TOKEN = re.compile(r"(\w+)\[([\d,]*)\]")
 _OPCODE = re.compile(r"^\s*([a-z][a-z0-9\-]*)\(")
 _TRIP_CFG = re.compile(r"\"known_trip_count\":\{\"n\":\"(\d+)\"\}")
-_CALL_ATTR = re.compile(r"(?:calls|to_apply)=(%[\w\.\-]+)")
-_WHILE_ATTR = re.compile(r"condition=(%[\w\.\-]+), body=(%[\w\.\-]+)")
+_CALL_ATTR = re.compile(r"(?:calls|to_apply)=(%?[\w\.\-]+)")
+_WHILE_ATTR = re.compile(r"condition=(%?[\w\.\-]+), body=(%?[\w\.\-]+)")
 _BRANCHES = re.compile(r"(?:branch_computations|called_computations)=\{([^}]*)\}")
 _CONST_S32 = re.compile(r"s32\[\]\s+constant\((\d+)\)")
 _CONTRACT = re.compile(r"lhs_contracting_dims=\{([\d,]*)\}")
-_OPERAND = re.compile(r"%[\w\.\-]+")
+_NAME_TOKEN = re.compile(r"%?[\w\.\-]+")
+
+
+def _operands(rest: str) -> List[str]:
+    """Operand names from the parenthesised list after the opcode.
+
+    Handles both HLO dialects: post-optimization (``dot(%a.1, %b.2)``,
+    possibly with inline types) and lowered pre-optimization
+    (``dot(Arg_0.1, Arg_1.2)``).
+    """
+    i = rest.find("(")
+    if i < 0:
+        return []
+    depth, j = 0, i
+    for j in range(i, len(rest)):
+        if rest[j] == "(":
+            depth += 1
+        elif rest[j] == ")":
+            depth -= 1
+            if depth == 0:
+                break
+    out: List[str] = []
+    for piece in rest[i + 1:j].split(","):
+        toks = piece.strip().split()
+        if toks and _NAME_TOKEN.fullmatch(toks[-1]):
+            out.append(toks[-1].lstrip("%"))
+    return out
 
 COLLECTIVES = (
     "all-gather", "all-reduce", "reduce-scatter", "all-to-all",
@@ -110,9 +136,16 @@ def parse_computations(text: str) -> Tuple[Dict[str, Computation], Optional[str]
         s = line.strip()
         if not s:
             continue
-        if not line.startswith(" ") and "(" in s and "->" in s:
+        if (
+            not line.startswith(" ")
+            and not s.startswith("HloModule")
+            and (("(" in s and "->" in s) or s.endswith("{"))
+        ):
+            # Computation header, either dialect:
+            #   post-opt : %comp.1 (p0: f32[...]) -> f32[...] {
+            #   lowered  : ENTRY main.4 {   /  region_0.7 {
             is_entry = s.startswith("ENTRY")
-            name_m = re.match(r"^(?:ENTRY\s+)?(%?[\w\.\-]+)\s*\(", s)
+            name_m = re.match(r"^(?:ENTRY\s+)?(%?[\w\.\-]+)\s*[({]", s)
             if name_m:
                 cur = Computation(name_m.group(1).lstrip("%"))
                 comps[cur.name] = cur
@@ -121,7 +154,7 @@ def parse_computations(text: str) -> Tuple[Dict[str, Computation], Optional[str]
                 continue
         if cur is None:
             continue
-        m = re.match(r"^\s*(?:ROOT\s+)?(%[\w\.\-]+)\s*=\s*(.*)$", line)
+        m = re.match(r"^\s*(?:ROOT\s+)?(%?[\w\.\-]+)\s*=\s*(.*)$", line)
         if not m:
             continue
         name, rhs = m.groups()
@@ -154,10 +187,10 @@ class HloStats:
 def _dot_flops(op: Op, shapes: Dict[str, str]) -> float:
     out_dims = _first_shape_dims(op.shape)
     m = _CONTRACT.search(op.rest)
-    operands = _OPERAND.findall(op.rest.split("metadata")[0])
+    operands = _operands(op.rest.split("metadata")[0])
     k = 1
     if m and operands:
-        lhs_dims = _first_shape_dims(shapes.get(operands[0].lstrip("%"), ""))
+        lhs_dims = _first_shape_dims(shapes.get(operands[0], ""))
         for idx in m.group(1).split(","):
             if idx and int(idx) < len(lhs_dims):
                 k *= lhs_dims[int(idx)]
@@ -222,8 +255,8 @@ def analyze(text: str) -> HloStats:
                             walk(br, mult)  # upper bound: all branches
             elif oc == "fusion":
                 b = _shape_bytes(op.shape)
-                for opr in _OPERAND.findall(op.rest.split("metadata")[0]):
-                    b += _shape_bytes(comp.shapes.get(opr.lstrip("%"), ""))
+                for opr in _operands(op.rest.split("metadata")[0]):
+                    b += _shape_bytes(comp.shapes.get(opr, ""))
                 stats.bytes_moved += mult * b
                 mcall = _CALL_ATTR.search(op.rest)
                 if mcall:  # fused dots still do math

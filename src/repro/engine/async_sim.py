@@ -36,6 +36,7 @@ compiling a fresh pallas kernel per buffer size.
 from __future__ import annotations
 
 import dataclasses
+import time
 from typing import Dict, List, Optional, Tuple
 
 import jax
@@ -64,6 +65,8 @@ from repro.federated.simulation import (
     evaluate,
     hetero_final_params,
 )
+from repro.telemetry import NULL_TELEMETRY, coerce_telemetry
+from repro.telemetry.report import CommDelta
 from repro.utils.tree import tree_size_bytes
 
 
@@ -130,6 +133,7 @@ class AsyncHFLEngine:
         compression: Optional[CompressionSpec] = None,
         public_shards: Optional[List[Dataset]] = None,
         distill: Optional[DistillSpec] = None,
+        telemetry=None,
     ):
         if not (0.0 < quorum <= 1.0):
             raise ValueError(f"quorum must be in (0, 1], got {quorum}")
@@ -174,6 +178,12 @@ class AsyncHFLEngine:
         # more memory than the device gather saves; run_cohorts then falls
         # back to host batch stacking
         self.store = DeviceShardStore.build_if_economical(clients)
+        self.tel = coerce_telemetry(telemetry) or NULL_TELEMETRY
+        self._round = 0
+        if self.tel.enabled:
+            counts = np.bincount(self.group_of, minlength=len(self.groups))
+            for g, prog in enumerate(self.groups):
+                self.tel.metrics.set_gauge(f"group_clients/{prog.name}", int(counts[g]))
 
     # -- helpers --------------------------------------------------------------
     def _mean(self, rows: List, weights: List[float]):
@@ -202,7 +212,9 @@ class AsyncHFLEngine:
                     self.schedule.local_steps, tag=(i, j),
                 )
             )
-        trained = run_cohorts(jobs, self.program, self.pack, store=self.store)
+        trained = run_cohorts(
+            jobs, self.program, self.pack, store=self.store, telemetry=self.tel
+        )
         # uplink accounting matches the sync simulators' multicast semantics:
         # a client dispatched to k edges at once (DCA) still trains each
         # membership separately, but TRANSMITS once on a shared resource
@@ -237,6 +249,17 @@ class AsyncHFLEngine:
                 row=upd,
                 birth=edges[j].version,
             )
+            if self.tel.enabled:
+                # simulated-time track: the radio upload occupies the event
+                # clock from dispatch until the edge hears it
+                self.tel.sim_span(
+                    "upload",
+                    self.queue.now,
+                    self.queue.now + float(self.latency[i, j]),
+                    tid=j + 1,
+                    client=i,
+                    edge=j,
+                )
 
     def _quorum_count(self, edge: _EdgeState) -> int:
         return max(1, int(np.ceil(self.quorum * len(edge.members))))
@@ -250,33 +273,44 @@ class AsyncHFLEngine:
         The quorum itself counts reporters across every group — the edge
         flushes when enough of its EUs answered, whatever they train.
         """
-        all_reporters = []
-        for g in range(len(self.groups)):
-            rows, weights, reporters = [], [], []
-            for i, row, size, birth in sorted(edge.buffer, key=lambda b: b[0]):
-                if int(self.group_of[i]) != g:
-                    continue
-                staleness = edge.version - birth
-                rows.append(row)
-                weights.append(max(size, 1.0) * self.staleness_decay ** staleness)
-                reporters.append(i)
-            if not rows:
-                continue  # nothing from this architecture: its model stands
-            # the current edge model stands in for the EUs that have not
-            # reported (of this group)
-            missing = [
-                i for i in edge.members
-                if int(self.group_of[i]) == g and i not in set(reporters)
-            ]
-            anchor_w = float(sum(max(self.clients[i].data_size, 1.0) for i in missing))
-            if anchor_w > 0:
-                rows = [self._edge_mats[g][j]] + rows
-                weights = [anchor_w] + weights
-            # quorum flushes average 1-3 rows; flat_mean routes these tiny-N
-            # calls to a jitted contraction, so varying buffer sizes do not
-            # compile a fresh pallas kernel per shape
-            self._edge_mats[g] = self._edge_mats[g].at[j].set(self._mean(rows, weights))
-            all_reporters += reporters
+        tel = self.tel
+        with tel.span(
+            "edge_aggregate",
+            engine="async",
+            edge=j,
+            round=self._round,
+            buffered=len(edge.buffer),
+            version=edge.version,
+        ):
+            all_reporters = []
+            for g in range(len(self.groups)):
+                rows, weights, reporters = [], [], []
+                for i, row, size, birth in sorted(edge.buffer, key=lambda b: b[0]):
+                    if int(self.group_of[i]) != g:
+                        continue
+                    staleness = edge.version - birth
+                    if tel.enabled:
+                        tel.metrics.observe("async_staleness", float(staleness))
+                    rows.append(row)
+                    weights.append(max(size, 1.0) * self.staleness_decay ** staleness)
+                    reporters.append(i)
+                if not rows:
+                    continue  # nothing from this architecture: its model stands
+                # the current edge model stands in for the EUs that have not
+                # reported (of this group)
+                missing = [
+                    i for i in edge.members
+                    if int(self.group_of[i]) == g and i not in set(reporters)
+                ]
+                anchor_w = float(sum(max(self.clients[i].data_size, 1.0) for i in missing))
+                if anchor_w > 0:
+                    rows = [self._edge_mats[g][j]] + rows
+                    weights = [anchor_w] + weights
+                # quorum flushes average 1-3 rows; flat_mean routes these tiny-N
+                # calls to a jitted contraction, so varying buffer sizes do not
+                # compile a fresh pallas kernel per shape
+                self._edge_mats[g] = self._edge_mats[g].at[j].set(self._mean(rows, weights))
+                all_reporters += reporters
         edge.version += 1
         edge.rounds_done += 1
         edge.buffer = []
@@ -294,92 +328,156 @@ class AsyncHFLEngine:
         global_rows = [pk.ravel(t) for pk, t in zip(self.packs, self.group_params)]
         edge_sizes = group_edge_sizes(self.clients, self.assignment, self.group_of)
         cloud_bits = None if n_groups == 1 else float(sum(self._group_bits))
+        tel = self.tel
+        comm = CommDelta(self.accountant) if tel.enabled else None
+        wall_accum = sim_accum = 0.0
         for b in range(1, cloud_rounds + 1):
-            self._losses = []
-            participating = self.rng.random(m) < self.upp
-            if not participating.any():
-                participating[self.rng.integers(0, m)] = True
-            # every edge starts the cloud round from its group's global model
-            self._edge_mats = [
-                jnp.broadcast_to(row, (n, row.shape[0])) for row in global_rows
-            ]
-            edges: Dict[int, _EdgeState] = {}
-            pairs: List[Tuple[int, int]] = []
-            for j in range(n):
-                members = [
-                    i for i in range(m) if self.assignment[i, j] and participating[i]
-                ]
-                st = _EdgeState(members=members)
-                if not members:  # nothing to wait for: report immediately
-                    st.rounds_done = self.schedule.edge_per_cloud
-                    st.done_time = self.queue.now
-                edges[j] = st
-                pairs += [(i, j) for i in members]
-            self._dispatch(pairs, edges)
-            while any(e.rounds_done < self.schedule.edge_per_cloud for e in edges.values()):
-                if not self.queue:
-                    raise RuntimeError("async engine deadlock: no pending events")
-                ev = self.queue.pop()
-                j = ev.payload["edge"]
-                edge = edges[j]
-                if edge.rounds_done >= self.schedule.edge_per_cloud:
-                    continue  # late straggler: edge already reported to cloud
-                edge.buffer.append(
-                    (
-                        ev.payload["client"],
-                        ev.payload["row"],
-                        float(self.clients[ev.payload["client"]].data_size),
-                        ev.payload["birth"],
-                    )
-                )
-                if len(edge.buffer) >= self._quorum_count(edge):
-                    self._dispatch(self._edge_aggregate(j, edge), edges)
-            # cloud barrier: all edges reported; drop in-flight stragglers
-            self.queue.clear()
-            self.queue.now = max(e.done_time for e in edges.values()) + self.backhaul_s
-            if self.distill is not None:
-                # fuse each edge's per-group models on its public shard
-                # before the cloud reduces per group (edge-local: costs no
-                # EU traffic, only the barrier's wall-clock headroom)
-                idx = draw_public_batches(self.rng, self.public_store.sizes, self.distill)
-                xb = self.public_store.gather(np.arange(n), idx)[0]
-                self._edge_mats, _ = distill_fuse_flat(
-                    self.groups, [pk.spec for pk in self.packs],
-                    self._edge_mats, xb, self.distill,
-                )
-            # cloud FedAvg straight off the (E, D) matrices: static shape,
-            # one reduction per architecture group
-            global_rows = [
-                flat_mean(
-                    self._edge_mats[g],
-                    np.asarray(edge_sizes[g], np.float32),
-                    backend=self.backend,
-                )
-                for g in range(n_groups)
-            ]
-            self.accountant.on_cloud_sync(n, bits=cloud_bits)
-            if b % eval_every == 0 or b == cloud_rounds:
-                acc = float(
-                    np.mean(
-                        [
-                            evaluate(
-                                self.packs[g].unravel(global_rows[g]),
-                                self.groups[g],
-                                self.test,
-                            )
-                            for g in range(n_groups)
+            t_round = time.perf_counter()
+            sim0 = self.queue.now
+            self._round = b
+            acc = None
+            with tel.span("cloud_round", engine="async", round=b):
+                self._losses = []
+                with tel.span("assignment", round=b) as sp:
+                    participating = self.rng.random(m) < self.upp
+                    if not participating.any():
+                        participating[self.rng.integers(0, m)] = True
+                    # every edge starts the cloud round from its group's
+                    # global model
+                    self._edge_mats = [
+                        jnp.broadcast_to(row, (n, row.shape[0])) for row in global_rows
+                    ]
+                    edges: Dict[int, _EdgeState] = {}
+                    pairs: List[Tuple[int, int]] = []
+                    for j in range(n):
+                        members = [
+                            i
+                            for i in range(m)
+                            if self.assignment[i, j] and participating[i]
                         ]
+                        st = _EdgeState(members=members)
+                        if not members:  # nothing to wait for: report immediately
+                            st.rounds_done = self.schedule.edge_per_cloud
+                            st.done_time = self.queue.now
+                        edges[j] = st
+                        pairs += [(i, j) for i in members]
+                    sp.set(participating=int(participating.sum()), pairs=len(pairs))
+                if tel.enabled:
+                    tel.metrics.set_gauge("participating", int(participating.sum()))
+                self._dispatch(pairs, edges)
+                while any(
+                    e.rounds_done < self.schedule.edge_per_cloud for e in edges.values()
+                ):
+                    if not self.queue:
+                        raise RuntimeError("async engine deadlock: no pending events")
+                    ev = self.queue.pop()
+                    j = ev.payload["edge"]
+                    edge = edges[j]
+                    if edge.rounds_done >= self.schedule.edge_per_cloud:
+                        continue  # late straggler: edge already reported to cloud
+                    edge.buffer.append(
+                        (
+                            ev.payload["client"],
+                            ev.payload["row"],
+                            float(self.clients[ev.payload["client"]].data_size),
+                            ev.payload["birth"],
+                        )
                     )
+                    if len(edge.buffer) >= self._quorum_count(edge):
+                        self._dispatch(self._edge_aggregate(j, edge), edges)
+                # cloud barrier: all edges reported; drop in-flight stragglers
+                self.queue.clear()
+                self.queue.now = (
+                    max(e.done_time for e in edges.values()) + self.backhaul_s
                 )
+                if tel.enabled:
+                    # the same cloud round on the SIMULATED-time track: from
+                    # its first dispatch to the post-barrier backhaul
+                    tel.sim_span("cloud_round", sim0, self.queue.now, round=b)
+                if self.distill is not None:
+                    # fuse each edge's per-group models on its public shard
+                    # before the cloud reduces per group (edge-local: costs no
+                    # EU traffic, only the barrier's wall-clock headroom)
+                    idx = draw_public_batches(
+                        self.rng, self.public_store.sizes, self.distill
+                    )
+                    xb = self.public_store.gather(np.arange(n), idx)[0]
+                    self._edge_mats, _ = distill_fuse_flat(
+                        self.groups, [pk.spec for pk in self.packs],
+                        self._edge_mats, xb, self.distill,
+                        telemetry=tel,
+                    )
+                # cloud FedAvg straight off the (E, D) matrices: static shape,
+                # one reduction per architecture group
+                with tel.span("cloud_reduce", round=b, edges=n, groups=n_groups) as sp:
+                    cost = tel.jit_cost(
+                        "cloud_reduce",
+                        lambda u, w: flat_mean(u, w, backend=self.backend),
+                        self._edge_mats[0],
+                        np.asarray(edge_sizes[0], np.float32),
+                    )
+                    if cost:
+                        sp.set(**cost)
+                    global_rows = [
+                        flat_mean(
+                            self._edge_mats[g],
+                            np.asarray(edge_sizes[g], np.float32),
+                            backend=self.backend,
+                        )
+                        for g in range(n_groups)
+                    ]
+                self.accountant.on_cloud_sync(n, bits=cloud_bits)
+                if b % eval_every == 0 or b == cloud_rounds:
+                    with tel.span("eval", round=b) as sp:
+                        acc = float(
+                            np.mean(
+                                [
+                                    evaluate(
+                                        self.packs[g].unravel(global_rows[g]),
+                                        self.groups[g],
+                                        self.test,
+                                    )
+                                    for g in range(n_groups)
+                                ]
+                            )
+                        )
+                        sp.set(acc=acc)
+            round_wall = time.perf_counter() - t_round
+            round_sim = self.queue.now - sim0
+            wall_accum += round_wall
+            sim_accum += round_sim
+            if acc is not None:
                 history.append(
                     RoundMetrics(
-                        b, acc, 0.0, float(np.mean(self._losses)) if self._losses else 0.0
+                        b,
+                        acc,
+                        0.0,
+                        float(np.mean(self._losses)) if self._losses else 0.0,
+                        wall_seconds=wall_accum,
+                        sim_seconds=sim_accum,
                     )
+                )
+                wall_accum = sim_accum = 0.0
+            if tel.enabled:
+                if acc is not None:
+                    tel.metrics.set_gauge("eval_acc", acc)
+                tel.on_round(
+                    engine="async",
+                    round=b,
+                    acc=acc,
+                    loss=float(np.mean(self._losses)) if self._losses else None,
+                    wall_s=round_wall,
+                    sim_s=round_sim,
+                    **comm.take(),
                 )
         trees = [pk.unravel(row) for pk, row in zip(self.packs, global_rows)]
         self.params = (
             trees[0] if n_groups == 1 else hetero_final_params(self.groups, trees)
         )
         return SimResult(
-            history, self.accountant, self.params, wall_seconds=self.queue.now
+            history,
+            self.accountant,
+            self.params,
+            wall_seconds=self.queue.now,
+            telemetry=tel if tel.enabled else None,
         )

@@ -26,6 +26,7 @@ import numpy as np
 from repro.engine.flatten import FlatPack, ravel_batched, unravel_batched
 from repro.federated.client import FLClient
 from repro.federated.programs import ClientProgram, group_clients
+from repro.telemetry import NULL_TELEMETRY, register_jit
 from repro.utils.tree import tree_size_bytes
 
 # FlatPack is architecture-determined (the spec depends only on the program,
@@ -263,6 +264,10 @@ def _cohort_epoch_flat(
     return ravel_batched(params), loss
 
 
+register_jit("cohort_epoch", _cohort_epoch)
+register_jit("cohort_epoch_flat", _cohort_epoch_flat)
+
+
 @dataclasses.dataclass
 class CohortResult:
     """Trained rows for one ``run_cohorts`` call, gather-friendly.
@@ -325,7 +330,12 @@ def _stack_starts(jobs: Sequence[LocalJob]) -> "jnp.ndarray":
 
 
 def run_cohorts(
-    jobs: Sequence[LocalJob], program: ClientProgram, pack, store=None, impl: str = "gemm"
+    jobs: Sequence[LocalJob],
+    program: ClientProgram,
+    pack,
+    store=None,
+    impl: str = "gemm",
+    telemetry=None,
 ) -> CohortResult:
     """Train every job, batching same-shape clients into vmapped cohorts.
 
@@ -341,8 +351,11 @@ def run_cohorts(
     gathered on device from the padded shard array (uploading only the
     int32 sample indices) instead of ``np.stack``-ing numpy shards on the
     host every epoch.  ``impl`` is the conv formulation for the cohort
-    step ("gemm" | "xla", see ``_cohort_epoch_body``).
+    step ("gemm" | "xla", see ``_cohort_epoch_body``).  ``telemetry``
+    (optional ``repro.telemetry.Telemetry``) records one ``cohort_epoch``
+    span per cohort with the analytic FLOPs/bytes of the jitted epoch.
     """
+    tel = telemetry if telemetry is not None else NULL_TELEMETRY
     program = program if program is not None else jobs[0].client.program
 
     def pack_of(prog):
@@ -363,21 +376,39 @@ def run_cohorts(
     index: Dict[object, Tuple[int, int]] = {}
     loss_of: Dict[object, float] = {}
     for (prog, steps, epochs, batch, lr), members in groups.items():
-        params = pack_of(prog).unravel_batched(_stack_starts(members))
-        loss = jnp.zeros((len(members),), jnp.float32)
-        cids = (
-            np.asarray([j.client.cid for j in members], np.int64)
-            if store is not None
-            else None
-        )
-        for e in range(epochs):
-            if store is not None:
-                xb, yb = store.gather(cids, np.stack([j.idx[e] for j in members]))
-            else:
-                xb = jnp.asarray(np.stack([j.client.shard.x[j.idx[e]] for j in members]))
-                yb = jnp.asarray(np.stack([j.client.shard.y[j.idx[e]] for j in members]))
-            params, loss = _cohort_epoch(params, xb, yb, prog, steps, lr, impl)
-        mats[prog].append(pack_of(prog).ravel_batched(params))
+        with tel.span(
+            "cohort_epoch", program=prog.name, clients=len(members),
+            epochs=epochs, steps=steps, batch=batch,
+        ) as sp:
+            if tel.enabled:
+                tel.metrics.observe("cohort_size", len(members))
+                need = float(steps * batch)
+                occ = [min(len(j.client.shard), need) / need for j in members]
+                tel.metrics.observe(
+                    "cohort_padding_waste", 1.0 - sum(occ) / len(occ)
+                )
+            params = pack_of(prog).unravel_batched(_stack_starts(members))
+            loss = jnp.zeros((len(members),), jnp.float32)
+            cids = (
+                np.asarray([j.client.cid for j in members], np.int64)
+                if store is not None
+                else None
+            )
+            for e in range(epochs):
+                if store is not None:
+                    xb, yb = store.gather(cids, np.stack([j.idx[e] for j in members]))
+                else:
+                    xb = jnp.asarray(np.stack([j.client.shard.x[j.idx[e]] for j in members]))
+                    yb = jnp.asarray(np.stack([j.client.shard.y[j.idx[e]] for j in members]))
+                if e == 0:
+                    cost = tel.jit_cost(
+                        "cohort_epoch", _cohort_epoch,
+                        params, xb, yb, prog, steps, lr, impl,
+                    )
+                    if cost:
+                        sp.set(**cost)
+                params, loss = _cohort_epoch(params, xb, yb, prog, steps, lr, impl)
+            mats[prog].append(pack_of(prog).ravel_batched(params))
         loss = np.asarray(loss)
         for c, job in enumerate(members):
             index[job.tag] = (block_of[prog], offsets[prog] + c)

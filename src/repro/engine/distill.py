@@ -47,6 +47,7 @@ import jax
 import jax.numpy as jnp
 import numpy as np
 
+from repro.telemetry import NULL_TELEMETRY, register_jit
 from repro.utils.tree import TreeSpec, tree_unravel
 
 
@@ -205,12 +206,17 @@ def _distill_fuse_one(flat, xb, targets, prog, spec: TreeSpec, dspec: DistillSpe
     return flat, jnp.stack(losses).mean()
 
 
+register_jit("kd_targets", _kd_targets_all)
+register_jit("kd_fuse_one", _distill_fuse_one)
+
+
 def distill_fuse_flat(
     programs: Sequence,
     specs: Sequence[TreeSpec],
     mats: Sequence,
     xb,
     spec: DistillSpec,
+    telemetry=None,
 ) -> Tuple[List, List[float]]:
     """Fuse every edge's per-group models in one pass per group.
 
@@ -219,17 +225,36 @@ def distill_fuse_flat(
     store gathers them).  Returns the post-fuse matrices and per-group mean
     KD losses.  Every student distills from the same pre-fuse teachers
     (one shared target tensor), so group update order cannot matter.
+    ``telemetry`` records the ``kd_fuse`` span (all three engine call sites
+    route through here) with the fused analytic cost of the teacher and
+    per-group student programs.
     """
-    xb = jnp.moveaxis(jnp.asarray(xb), 0, 1)  # (steps, E, B, *feat)
-    programs, specs, mats = tuple(programs), tuple(specs), tuple(mats)
-    targets = _kd_targets_all(mats, xb, programs, specs, spec)
-    out, losses = [], []
-    for gi in range(len(programs)):
-        fused, loss = _distill_fuse_one(
-            mats[gi], xb, targets, programs[gi], specs[gi], spec
+    tel = telemetry if telemetry is not None else NULL_TELEMETRY
+    with tel.span("kd_fuse", groups=len(programs), steps=spec.steps) as span:
+        xb = jnp.moveaxis(jnp.asarray(xb), 0, 1)  # (steps, E, B, *feat)
+        programs, specs, mats = tuple(programs), tuple(specs), tuple(mats)
+        cost = tel.jit_cost(
+            "kd_targets", _kd_targets_all, mats, xb, programs, specs, spec
         )
-        out.append(fused)
-        losses.append(float(loss))
+        targets = _kd_targets_all(mats, xb, programs, specs, spec)
+        out, losses = [], []
+        for gi in range(len(programs)):
+            c = tel.jit_cost(
+                "kd_fuse_one", _distill_fuse_one,
+                mats[gi], xb, targets, programs[gi], specs[gi], spec,
+            )
+            if c:
+                cost = {k: cost.get(k, 0.0) + v for k, v in c.items()} if cost else c
+            fused, loss = _distill_fuse_one(
+                mats[gi], xb, targets, programs[gi], specs[gi], spec
+            )
+            out.append(fused)
+            losses.append(float(loss))
+        if cost:
+            span.set(**cost)
+        if tel.enabled:
+            for gi, loss in enumerate(losses):
+                tel.metrics.observe("kd_loss", loss)
     return out, losses
 
 

@@ -35,6 +35,7 @@ from repro.kernels.ops import hier_aggregate as hier_aggregate_jit
 from repro.kernels.ops import hier_segment_aggregate as hier_segment_aggregate_jit
 from repro.kernels.ref import hier_segment_aggregate_ref
 from repro.kernels.segment_aggregate import hier_segment_aggregate
+from repro.telemetry import register_jit
 from repro.utils.tree import TreeSpec, tree_ravel, tree_spec, tree_unravel
 
 BACKENDS = ("pallas", "reference")
@@ -228,3 +229,15 @@ def flat_segment_mean(
             updates, jnp.asarray(seg_ids), jnp.asarray(weights), n_segments=n_segments
         )
     raise ValueError(f"backend must be one of {BACKENDS}, got {backend!r}")
+
+
+# jit compile accounting (telemetry): module-level jitted entry points of the
+# flat-buffer aggregation layer.  The compile-count regression guard in
+# tests/test_telemetry.py pins their cache growth per engine round — in
+# particular that tiny-N ``flat_mean`` calls route to ``_small_mean`` and
+# never touch the pallas wrapper's cache off-TPU.
+register_jit("small_mean", _small_mean)
+register_jit("segment_mean_ref", _segment_mean_ref_jit)
+register_jit("tree_unravel", _tree_unravel_jit)
+register_jit("hier_aggregate", hier_aggregate_jit)
+register_jit("hier_segment_aggregate", hier_segment_aggregate_jit)

@@ -33,6 +33,8 @@ import jax
 import jax.numpy as jnp
 import numpy as np
 
+from repro.telemetry import register_jit
+
 # past this pad blow-up the store costs more memory than it saves time;
 # callers that can fall back to host batch stacking (async engine) do so
 MAX_PADDING_RATIO = 16.0
@@ -134,3 +136,6 @@ class DeviceShardStore:
         return _store_gather(
             self.x, self.y, jnp.asarray(cids, jnp.int32), jnp.asarray(idx, jnp.int32)
         )
+
+
+register_jit("store_gather", _store_gather)

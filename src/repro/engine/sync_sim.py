@@ -52,6 +52,7 @@ Adam amplifies — predictions are unaffected).
 """
 from __future__ import annotations
 
+import time
 from functools import partial
 from typing import Dict, List, Optional, Sequence
 
@@ -93,6 +94,8 @@ from repro.federated.simulation import (
     evaluate,
     hetero_final_params,
 )
+from repro.telemetry import NULL_TELEMETRY, coerce_telemetry, register_jit
+from repro.telemetry.report import CommDelta
 from repro.utils.tree import tree_size_bytes
 
 PIPELINES = ("device", "host")
@@ -104,6 +107,9 @@ def _segment_agg_keep(upd, seg_ids, weights, has, prev, n_segments: int, backend
     dispatch instead of a segment call, a mask upload, and a select."""
     agg = flat_segment_mean(upd, seg_ids, weights, n_segments, backend=backend)
     return jnp.where(has[:, None], agg, prev)
+
+
+register_jit("segment_agg_keep", _segment_agg_keep)
 
 
 class BatchedSyncEngine:
@@ -159,11 +165,14 @@ class BatchedSyncEngine:
         pipeline: str = "device",
         public_shards: Optional[Sequence[Dataset]] = None,
         distill: Optional[DistillSpec] = None,
+        telemetry=None,
     ):
         if pipeline not in PIPELINES:
             raise ValueError(f"pipeline must be one of {PIPELINES}, got {pipeline!r}")
         if backend not in BACKENDS:
             raise ValueError(f"backend must be one of {BACKENDS}, got {backend!r}")
+        self.tel = coerce_telemetry(telemetry) or NULL_TELEMETRY
+        self._round = 0
         self.clients = clients
         self.assignment = assignment
         self.program = as_program(program)  # bare CNNConfig still accepted
@@ -241,6 +250,11 @@ class BatchedSyncEngine:
         )
         self.store = DeviceShardStore(clients) if pipeline == "device" else None
         self._plan = CohortPlan(clients, self.program) if pipeline == "device" else None
+        if self.tel.enabled:
+            for g, prog in enumerate(self.groups):
+                self.tel.metrics.set_gauge(
+                    f"group_clients/{prog.name}", int((self.group_of == g).sum())
+                )
 
     def _mean(self, rows: List[jnp.ndarray], weights) -> jnp.ndarray:
         return flat_mean(
@@ -284,10 +298,27 @@ class BatchedSyncEngine:
     def _edge_round_device(self, edge_mats: List[jnp.ndarray]):
         """One edge round as fixed-shape device programs; returns the new
         per-group (E, D_g) edge matrices and the per-client losses."""
+        tel = self.tel
         m, n = self.assignment.shape
-        participating = self.rng.random(m) < self.upp
-        if not participating.any():
-            participating[self.rng.integers(0, m)] = True
+        with tel.span("assignment", round=self._round, engine="sync-device"):
+            participating = self.rng.random(m) < self.upp
+            if not participating.any():
+                participating[self.rng.integers(0, m)] = True
+            active = self._has_edge & participating
+            # the plan's draw consumes the RNG in client order, mirroring the
+            # reference; grouping itself was precomputed at construction
+            groups, passthrough = self._plan.draw(
+                self.rng, active, self.schedule.local_steps
+            )
+            if tel.enabled:
+                tel.metrics.set_gauge("participating", int(active.sum()))
+                for g in groups:
+                    tel.metrics.observe("cohort_size", len(g.members))
+                    need = float(g.steps * g.batch)
+                    occ = np.minimum(self._plan.sizes[g.members], need) / need
+                    tel.metrics.observe(
+                        "cohort_padding_waste", float(1.0 - occ.mean())
+                    )
         # lazy DCA start rows: the SCA corner (every client on one edge) is a
         # plain gather per cohort; only dual-connectivity pays the segment
         # call for the full (M, D) matrix
@@ -302,13 +333,6 @@ class BatchedSyncEngine:
             if g not in starts_full:
                 starts_full[g] = self._client_starts(edge_mats[g])
             return starts_full[g][jnp.asarray(ids, jnp.int32)]
-
-        active = self._has_edge & participating
-        # the plan's draw consumes the RNG in client order, mirroring the
-        # reference; grouping itself was precomputed at construction
-        groups, passthrough = self._plan.draw(
-            self.rng, active, self.schedule.local_steps
-        )
         # train each cohort flat-major: starts gather -> per-epoch on-device
         # batch gather -> fused (C, D)-in/(C, D)-out epoch.  Losses stay on
         # device until metrics time so the aggregation dispatches below can
@@ -320,12 +344,25 @@ class BatchedSyncEngine:
         offsets = [0] * len(self.groups)
         for g in groups:
             gi = group_idx[g.program]
-            flat = starts_for(g.members, gi)
-            for e in range(g.idx.shape[1]):
-                xb, yb = self.store.gather(g.members, g.idx[:, e])
-                flat, loss = _cohort_epoch_flat(
-                    flat, xb, yb, self.packs[gi].spec, g.program, g.steps, g.lr
-                )
+            with tel.span(
+                "cohort_epoch", round=self._round, program=g.program.name,
+                clients=len(g.members), epochs=int(g.idx.shape[1]),
+                steps=g.steps, batch=g.batch,
+            ) as sp:
+                flat = starts_for(g.members, gi)
+                for e in range(g.idx.shape[1]):
+                    xb, yb = self.store.gather(g.members, g.idx[:, e])
+                    if e == 0:
+                        cost = tel.jit_cost(
+                            "cohort_epoch_flat", _cohort_epoch_flat,
+                            flat, xb, yb, self.packs[gi].spec, g.program,
+                            g.steps, g.lr,
+                        )
+                        if cost:
+                            sp.set(**cost)
+                    flat, loss = _cohort_epoch_flat(
+                        flat, xb, yb, self.packs[gi].spec, g.program, g.steps, g.lr
+                    )
             mats[gi].append(flat)
             loss_chunks.append(loss)
             row_of[g.members] = np.arange(offsets[gi], offsets[gi] + len(g.members))
@@ -368,27 +405,33 @@ class BatchedSyncEngine:
                         row_of[i] = k
                     upd_matrix = jnp.stack(rows)
             # every edge's FedAvg in ONE segment call over the group's pairs
-            pc_g, pe_g, pe_g_dev = self._gpairs[gi]
-            part_pairs = participating[pc_g]
-            take = row_of[pc_g]
-            if len(take) == upd_matrix.shape[0] and np.array_equal(
-                take, np.arange(len(take))
-            ):
-                upd = upd_matrix  # rows already in pair order: skip the gather
-            else:
-                upd = upd_matrix[jnp.asarray(take, jnp.int32)]
-            # edges with no participants of this group keep their previous
-            # group model
-            has = np.bincount(pe_g, weights=part_pairs, minlength=n) > 0
-            edge_mats[gi] = _segment_agg_keep(
-                upd,
-                pe_g_dev,
-                jnp.asarray(self._data_sizes[pc_g] * part_pairs),
-                jnp.asarray(has),
-                edge_mats[gi],
-                n,
-                self.backend,
-            )
+            with tel.span(
+                "edge_aggregate", round=self._round, group=prog.name,
+                clients=len(job_cids), edges=n,
+            ) as sp:
+                pc_g, pe_g, pe_g_dev = self._gpairs[gi]
+                part_pairs = participating[pc_g]
+                take = row_of[pc_g]
+                if len(take) == upd_matrix.shape[0] and np.array_equal(
+                    take, np.arange(len(take))
+                ):
+                    upd = upd_matrix  # rows already in pair order: skip the gather
+                else:
+                    upd = upd_matrix[jnp.asarray(take, jnp.int32)]
+                # edges with no participants of this group keep their previous
+                # group model
+                has = np.bincount(pe_g, weights=part_pairs, minlength=n) > 0
+                w_dev = jnp.asarray(self._data_sizes[pc_g] * part_pairs)
+                has_dev = jnp.asarray(has)
+                cost = tel.jit_cost(
+                    "segment_agg_keep", _segment_agg_keep,
+                    upd, pe_g_dev, w_dev, has_dev, edge_mats[gi], n, self.backend,
+                )
+                if cost:
+                    sp.set(**cost)
+                edge_mats[gi] = _segment_agg_keep(
+                    upd, pe_g_dev, w_dev, has_dev, edge_mats[gi], n, self.backend
+                )
         self._edge_account(participating)
         return edge_mats, loss_chunks
 
@@ -399,23 +442,26 @@ class BatchedSyncEngine:
         baseline and equivalence-test counterpart.  ``edge_rows[g][j]`` is
         edge j's model for architecture group g."""
         m, n = self.assignment.shape
-        participating = self.rng.random(m) < self.upp
-        if not participating.any():
-            participating[self.rng.integers(0, m)] = True
-        # job prep consumes the RNG in client order, mirroring the reference
-        jobs, job_edges = [], []
-        for i, cl in enumerate(self.clients):
-            edges = np.nonzero(self.assignment[i])[0]
-            if len(edges) == 0 or not participating[i]:
-                continue
-            rows = edge_rows[self.group_of[i]]
-            # a DCA client starts from the average of its edges' models
-            start = rows[edges[0]] if len(edges) == 1 else self._mean(
-                [rows[j] for j in edges], [1.0] * len(edges)
-            )
-            jobs.append(make_job(cl, start, self.rng, epochs=self.schedule.local_steps))
-            job_edges.append(edges)
-        trained = run_cohorts(jobs, self.program, self.pack, impl="xla")
+        with self.tel.span("assignment", round=self._round, engine="sync-host"):
+            participating = self.rng.random(m) < self.upp
+            if not participating.any():
+                participating[self.rng.integers(0, m)] = True
+            # job prep consumes the RNG in client order, mirroring the reference
+            jobs, job_edges = [], []
+            for i, cl in enumerate(self.clients):
+                edges = np.nonzero(self.assignment[i])[0]
+                if len(edges) == 0 or not participating[i]:
+                    continue
+                rows = edge_rows[self.group_of[i]]
+                # a DCA client starts from the average of its edges' models
+                start = rows[edges[0]] if len(edges) == 1 else self._mean(
+                    [rows[j] for j in edges], [1.0] * len(edges)
+                )
+                jobs.append(make_job(cl, start, self.rng, epochs=self.schedule.local_steps))
+                job_edges.append(edges)
+        trained = run_cohorts(
+            jobs, self.program, self.pack, impl="xla", telemetry=self.tel
+        )
         compressing = self.compression is not None and self.compression.kind != "none"
         losses = []
         new_cids: Dict[tuple, List[int]] = {}
@@ -438,16 +484,20 @@ class BatchedSyncEngine:
                 if transforming:
                     new_rows.setdefault((j, gi), []).append(row)
                 new_sizes.setdefault((j, gi), []).append(job.client.data_size)
-        for (j, gi), cids in new_cids.items():
-            # untransformed fast path: one gather from the cohort matrix
-            mat = (
-                jnp.stack(new_rows[(j, gi)])
-                if (j, gi) in new_rows
-                else trained.gather(cids)
-            )
-            edge_rows[gi][j] = flat_mean(
-                mat, np.asarray(new_sizes[(j, gi)], np.float32), backend=self.backend
-            )
+        with self.tel.span(
+            "edge_aggregate", round=self._round, engine="sync-host",
+            edges=len(new_cids),
+        ):
+            for (j, gi), cids in new_cids.items():
+                # untransformed fast path: one gather from the cohort matrix
+                mat = (
+                    jnp.stack(new_rows[(j, gi)])
+                    if (j, gi) in new_rows
+                    else trained.gather(cids)
+                )
+                edge_rows[gi][j] = flat_mean(
+                    mat, np.asarray(new_sizes[(j, gi)], np.float32), backend=self.backend
+                )
         self._edge_account(participating)
         return losses
 
@@ -459,7 +509,8 @@ class BatchedSyncEngine:
         idx = draw_public_batches(self.rng, self.public_store.sizes, self.distill)
         xb = self.public_store.gather(np.arange(n), idx)[0]  # (E, steps, B, *feat)
         fused, _ = distill_fuse_flat(
-            self.groups, [pk.spec for pk in self.packs], edge_mats, xb, self.distill
+            self.groups, [pk.spec for pk in self.packs], edge_mats, xb,
+            self.distill, telemetry=self.tel,
         )
         return fused
 
@@ -484,68 +535,112 @@ class BatchedSyncEngine:
         ]
         edge_sizes = group_edge_sizes(self.clients, self.assignment, self.group_of)
         cloud_bits = None if n_groups == 1 else float(sum(self._group_bits))
+        engine_name = f"sync-{self.pipeline}"
+        comm = CommDelta(self.accountant) if self.tel.enabled else None
+        wall_accum = sim_accum = 0.0
         for b in range(1, cloud_rounds + 1):
+            t_round = time.perf_counter()
+            sim0 = self.clock.seconds if self.clock is not None else 0.0
+            self._round = b
+            acc = None
             losses: List = []
-            if self.pipeline == "device":
-                edge_mats = [
-                    jnp.broadcast_to(row, (n, row.shape[0])) for row in global_rows
-                ]
-                for _ in range(self.schedule.edge_per_cloud):
-                    edge_mats, chunks = self._edge_round_device(edge_mats)
-                    losses += chunks  # per-cohort (C,) arrays, still on device
-                if self.distill is not None:
-                    edge_mats = self._kd_fuse_device(edge_mats)
-                # cloud FedAvg straight off the (E, D) matrices: static
-                # shape, no per-round stacking; one reduction per group
-                global_rows = [
-                    flat_mean(edge_mats[g], edge_sizes[g], backend=self.backend)
-                    for g in range(n_groups)
-                ]
-                losses = (
-                    list(np.concatenate([np.asarray(c) for c in losses]))
-                    if losses
-                    else []
-                )
-            else:
-                edge_rows = [[row] * n for row in global_rows]
-                for _ in range(self.schedule.edge_per_cloud):
-                    losses += self._edge_round(edge_rows)
-                if self.distill is not None:
-                    edge_rows = self._kd_fuse_host(edge_rows)
-                global_rows = [
-                    self._mean(edge_rows[g], edge_sizes[g]) for g in range(n_groups)
-                ]
-            self.accountant.on_cloud_sync(n, bits=cloud_bits)
-            if self.clock is not None:
-                self.clock.on_cloud_sync()
-            div = 0.0
-            if self.track_divergence:
-                for _ in range(self.schedule.cloud_period):
-                    self._central_step()
-                div = weight_divergence(
-                    self.pack.unravel(global_rows[0]), self.central_params
-                )
-            if b % eval_every == 0 or b == cloud_rounds:
-                acc = float(
-                    np.mean(
-                        [
-                            evaluate(
-                                self.packs[g].unravel(global_rows[g]),
-                                self.groups[g],
-                                self.test,
-                            )
+            with self.tel.span("cloud_round", round=b, engine=engine_name):
+                if self.pipeline == "device":
+                    edge_mats = [
+                        jnp.broadcast_to(row, (n, row.shape[0])) for row in global_rows
+                    ]
+                    for _ in range(self.schedule.edge_per_cloud):
+                        edge_mats, chunks = self._edge_round_device(edge_mats)
+                        losses += chunks  # per-cohort (C,) arrays, still on device
+                    if self.distill is not None:
+                        edge_mats = self._kd_fuse_device(edge_mats)
+                    # cloud FedAvg straight off the (E, D) matrices: static
+                    # shape, no per-round stacking; one reduction per group
+                    with self.tel.span(
+                        "cloud_reduce", round=b, groups=n_groups, edges=n
+                    ) as sp:
+                        cost = self.tel.jit_cost(
+                            "cloud_reduce",
+                            lambda u, w: flat_mean(u, w, backend=self.backend),
+                            edge_mats[0], np.asarray(edge_sizes[0], np.float32),
+                        )
+                        if cost:
+                            sp.set(**cost)
+                        global_rows = [
+                            flat_mean(edge_mats[g], edge_sizes[g], backend=self.backend)
                             for g in range(n_groups)
                         ]
+                    losses = (
+                        list(np.concatenate([np.asarray(c) for c in losses]))
+                        if losses
+                        else []
+                    )
+                else:
+                    edge_rows = [[row] * n for row in global_rows]
+                    for _ in range(self.schedule.edge_per_cloud):
+                        losses += self._edge_round(edge_rows)
+                    if self.distill is not None:
+                        edge_rows = self._kd_fuse_host(edge_rows)
+                    with self.tel.span("cloud_reduce", round=b, groups=n_groups, edges=n):
+                        global_rows = [
+                            self._mean(edge_rows[g], edge_sizes[g])
+                            for g in range(n_groups)
+                        ]
+                self.accountant.on_cloud_sync(n, bits=cloud_bits)
+                if self.clock is not None:
+                    self.clock.on_cloud_sync()
+                div = 0.0
+                if self.track_divergence:
+                    for _ in range(self.schedule.cloud_period):
+                        self._central_step()
+                    div = weight_divergence(
+                        self.pack.unravel(global_rows[0]), self.central_params
+                    )
+                if b % eval_every == 0 or b == cloud_rounds:
+                    with self.tel.span("eval", round=b) as sp:
+                        acc = float(
+                            np.mean(
+                                [
+                                    evaluate(
+                                        self.packs[g].unravel(global_rows[g]),
+                                        self.groups[g],
+                                        self.test,
+                                    )
+                                    for g in range(n_groups)
+                                ]
+                            )
+                        )
+                        sp.set(acc=acc)
+            round_wall = time.perf_counter() - t_round
+            round_sim = (self.clock.seconds - sim0) if self.clock is not None else 0.0
+            wall_accum += round_wall
+            sim_accum += round_sim
+            if acc is not None:
+                history.append(
+                    RoundMetrics(
+                        b, acc, div, float(np.mean(losses)) if losses else 0.0,
+                        wall_seconds=wall_accum, sim_seconds=sim_accum,
                     )
                 )
-                history.append(
-                    RoundMetrics(b, acc, div, float(np.mean(losses)) if losses else 0.0)
+                wall_accum = sim_accum = 0.0
+            if self.tel.enabled:
+                if acc is not None:
+                    self.tel.metrics.set_gauge("eval_acc", acc)
+                self.tel.on_round(
+                    engine=engine_name, round=b, acc=acc,
+                    loss=float(np.mean(losses)) if losses else None,
+                    wall_s=round_wall,
+                    sim_s=round_sim if self.clock is not None else None,
+                    **comm.take(),
                 )
         trees = [pk.unravel(row) for pk, row in zip(self.packs, global_rows)]
         self.params = (
             trees[0] if n_groups == 1 else hetero_final_params(self.groups, trees)
         )
-        result = SimResult(history, self.accountant, self.params)
+        result = SimResult(
+            history, self.accountant, self.params,
+            telemetry=self.tel if self.tel.enabled else None,
+        )
         if self.clock is not None:
             result.wall_seconds = self.clock.seconds
         return result

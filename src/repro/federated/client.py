@@ -32,6 +32,7 @@ import numpy as np
 
 from repro.data.synthetic_health import Dataset
 from repro.federated.programs import ClientProgram, as_program
+from repro.telemetry import register_jit
 
 _BUCKETS = (1, 2, 4, 8, 16, 32, 64, 128)
 
@@ -146,3 +147,6 @@ class FLClient:
             params, l = _local_epoch(params, xb, yb, self.program, steps, self.lr)
             loss = float(l)
         return params, loss
+
+
+register_jit("local_epoch", _local_epoch)

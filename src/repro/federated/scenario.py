@@ -137,6 +137,7 @@ class Scenario:
         quorum: float = 0.75,
         pipeline: str = "device",
         distill=None,
+        telemetry=None,
     ) -> SimResult:
         """Run the scenario through one of the simulation engines.
 
@@ -160,8 +161,45 @@ class Scenario:
                   heterogeneous-model fuse; None uses the scenario's
                   default (``model_mix=`` scenarios carry one).  Ignored
                   for homogeneous populations.
+        telemetry: the observability knob (``docs/OBSERVABILITY.md``).
+                  ``None``/``False`` — off, zero overhead; ``True`` — record
+                  in memory (``SimResult.telemetry``); a path — record AND
+                  flush trace/rounds/metrics artifacts there after the run;
+                  a ``repro.telemetry.Telemetry`` — record into it.
         """
+        from repro.telemetry import coerce_telemetry
+
         distill = distill if distill is not None else self.distill
+        tel = coerce_telemetry(telemetry)
+        try:
+            return self._simulate(
+                assignment, cloud_rounds, schedule, seed, upp, track_divergence,
+                eval_every, wall_clock, engine, backend, compression,
+                staleness_decay, quorum, pipeline, distill, tel,
+            )
+        finally:
+            if tel is not None and tel.out_dir is not None:
+                tel.flush()
+
+    def _simulate(
+        self,
+        assignment,
+        cloud_rounds,
+        schedule,
+        seed,
+        upp,
+        track_divergence,
+        eval_every,
+        wall_clock,
+        engine,
+        backend,
+        compression,
+        staleness_decay,
+        quorum,
+        pipeline,
+        distill,
+        telemetry,
+    ) -> SimResult:
         if engine == "reference":
             if self.is_hetero:
                 if track_divergence or wall_clock:
@@ -179,6 +217,7 @@ class Scenario:
                     public=self.public,
                     distill=distill,
                     compression=compression,
+                    telemetry=telemetry,
                 )
                 return sim.run(cloud_rounds, eval_every=eval_every)
             sim = HFLSimulation(
@@ -192,6 +231,7 @@ class Scenario:
                 track_divergence=track_divergence,
                 cost_latency=self.cost.latency if wall_clock else None,
                 compression=compression,
+                telemetry=telemetry,
             )
             res = sim.run(cloud_rounds, eval_every=eval_every)
             if wall_clock:
@@ -215,6 +255,7 @@ class Scenario:
                 pipeline=pipeline,
                 public_shards=self.public,
                 distill=distill,
+                telemetry=telemetry,
             )
             return sim.run(cloud_rounds, eval_every=eval_every)
         if engine == "async":
@@ -240,6 +281,7 @@ class Scenario:
                 compression=compression,
                 public_shards=self.public,
                 distill=distill,
+                telemetry=telemetry,
             )
             return sim.run(cloud_rounds, eval_every=eval_every)
         raise ValueError(f"unknown engine {engine!r} (reference | sync | async)")

@@ -8,6 +8,7 @@ material of paper Figs. 3-6.
 from __future__ import annotations
 
 import dataclasses
+import time
 from typing import Dict, List, Optional
 
 import jax
@@ -19,6 +20,8 @@ from repro.core.hfl import CommAccountant, HFLSchedule, WallClock, cloud_aggrega
 from repro.data.synthetic_health import Dataset
 from repro.federated.client import FLClient, _local_epoch
 from repro.federated.programs import as_program, group_clients, group_edge_sizes
+from repro.telemetry import NULL_TELEMETRY, coerce_telemetry
+from repro.telemetry.report import CommDelta
 from repro.utils.tree import tree_add, tree_size_bytes, tree_sub
 
 
@@ -28,6 +31,12 @@ class RoundMetrics:
     test_acc: float
     divergence: float
     mean_local_loss: float
+    # timing is always on (nanosecond-cost counters, no telemetry needed):
+    # host seconds spent since the previous history entry, and — when the
+    # run models latency (WallClock / the async EventQueue) — the simulated
+    # seconds that elapsed over the same rounds
+    wall_seconds: float = 0.0
+    sim_seconds: float = 0.0
 
 
 @dataclasses.dataclass
@@ -36,6 +45,9 @@ class SimResult:
     accountant: CommAccountant
     final_params: dict
     wall_seconds: float = 0.0
+    # the run's Telemetry object (None when telemetry was disabled):
+    # `.summary()` is the end-of-run table, `.rounds` the per-round records
+    telemetry: object = None
 
     def rounds_to_accuracy(self, target: float) -> Optional[int]:
         for m in self.history:
@@ -93,6 +105,7 @@ class HFLSimulation:
         central_batch: int = 50,
         cost_latency=None,
         compression: Optional[CompressionSpec] = None,
+        telemetry=None,
     ):
         self.clients = clients
         self.assignment = assignment
@@ -101,6 +114,8 @@ class HFLSimulation:
         self.schedule = schedule
         self.rng = np.random.default_rng(seed)
         self.upp = upp
+        self.tel = coerce_telemetry(telemetry) or NULL_TELEMETRY
+        self._round = 0
         self.params = self.program.init(jax.random.PRNGKey(seed))
         self.track_divergence = track_divergence
         if track_divergence:
@@ -142,28 +157,33 @@ class HFLSimulation:
         m, n = self.assignment.shape
         losses = []
         # sample participating clients (UPP)
-        participating = self.rng.random(m) < self.upp
-        if not participating.any():
-            participating[self.rng.integers(0, m)] = True
+        with self.tel.span("assignment", round=self._round, engine="reference"):
+            participating = self.rng.random(m) < self.upp
+            if not participating.any():
+                participating[self.rng.integers(0, m)] = True
         new_models: List[List[dict]] = [[] for _ in range(n)]
         new_sizes: List[List[float]] = [[] for _ in range(n)]
-        for i, cl in enumerate(self.clients):
-            edges = np.nonzero(self.assignment[i])[0]
-            if len(edges) == 0 or not participating[i]:
-                continue
-            # a DCA client starts from the average of its edges' models
-            start = edge_params[edges[0]] if len(edges) == 1 else edge_aggregate(
-                [edge_params[j] for j in edges], [1.0] * len(edges)
-            )
-            upd, loss = cl.local_update(start, self.rng, epochs=self.schedule.local_steps)
-            losses.append(loss)
-            upd = self._compress_upload(cl.cid, start, upd)
-            for j in edges:
-                new_models[j].append(upd)
-                new_sizes[j].append(cl.data_size)
-        for j in range(n):
-            if new_models[j]:
-                edge_params[j] = edge_aggregate(new_models[j], new_sizes[j])
+        with self.tel.span(
+            "local_train", round=self._round, clients=int(participating.sum())
+        ):
+            for i, cl in enumerate(self.clients):
+                edges = np.nonzero(self.assignment[i])[0]
+                if len(edges) == 0 or not participating[i]:
+                    continue
+                # a DCA client starts from the average of its edges' models
+                start = edge_params[edges[0]] if len(edges) == 1 else edge_aggregate(
+                    [edge_params[j] for j in edges], [1.0] * len(edges)
+                )
+                upd, loss = cl.local_update(start, self.rng, epochs=self.schedule.local_steps)
+                losses.append(loss)
+                upd = self._compress_upload(cl.cid, start, upd)
+                for j in edges:
+                    new_models[j].append(upd)
+                    new_sizes[j].append(cl.data_size)
+        with self.tel.span("edge_aggregate", round=self._round, edges=n):
+            for j in range(n):
+                if new_models[j]:
+                    edge_params[j] = edge_aggregate(new_models[j], new_sizes[j])
         self.accountant.on_edge_sync(
             self.assignment * participating[:, None], uplink_bits=self._uplink_bits
         )
@@ -185,27 +205,62 @@ class HFLSimulation:
             sum(c.data_size for i, c in enumerate(self.clients) if self.assignment[i, j])
             for j in range(n)
         ]
+        comm = CommDelta(self.accountant) if self.tel.enabled else None
+        wall_accum = sim_accum = 0.0
         for b in range(1, cloud_rounds + 1):
-            edge_params = [global_params] * n
-            losses: List[float] = []
-            for _ in range(self.schedule.edge_per_cloud):
-                losses += self._edge_round(edge_params)
-            global_params = cloud_aggregate(edge_params, [max(s, 1) for s in edge_sizes])
-            self.accountant.on_cloud_sync(n)
-            if self.clock is not None:
-                self.clock.on_cloud_sync()
-            div = 0.0
-            if self.track_divergence:
-                for _ in range(self.schedule.cloud_period):
-                    self._central_step()
-                div = weight_divergence(global_params, self.central_params)
-            if b % eval_every == 0 or b == cloud_rounds:
-                acc = evaluate(global_params, self.program, self.test)
+            t_round = time.perf_counter()
+            sim0 = self.clock.seconds if self.clock is not None else 0.0
+            self._round = b
+            acc = None
+            with self.tel.span("cloud_round", round=b, engine="reference"):
+                edge_params = [global_params] * n
+                losses: List[float] = []
+                for _ in range(self.schedule.edge_per_cloud):
+                    losses += self._edge_round(edge_params)
+                with self.tel.span("cloud_reduce", round=b, edges=n):
+                    global_params = cloud_aggregate(
+                        edge_params, [max(s, 1) for s in edge_sizes]
+                    )
+                self.accountant.on_cloud_sync(n)
+                if self.clock is not None:
+                    self.clock.on_cloud_sync()
+                div = 0.0
+                if self.track_divergence:
+                    for _ in range(self.schedule.cloud_period):
+                        self._central_step()
+                    div = weight_divergence(global_params, self.central_params)
+                if b % eval_every == 0 or b == cloud_rounds:
+                    with self.tel.span("eval", round=b) as sp:
+                        acc = evaluate(global_params, self.program, self.test)
+                        sp.set(acc=acc)
+            round_wall = time.perf_counter() - t_round
+            round_sim = (
+                (self.clock.seconds - sim0) if self.clock is not None else 0.0
+            )
+            wall_accum += round_wall
+            sim_accum += round_sim
+            if acc is not None:
                 history.append(
-                    RoundMetrics(b, acc, div, float(np.mean(losses)) if losses else 0.0)
+                    RoundMetrics(
+                        b, acc, div, float(np.mean(losses)) if losses else 0.0,
+                        wall_seconds=wall_accum, sim_seconds=sim_accum,
+                    )
+                )
+                wall_accum = sim_accum = 0.0
+            if self.tel.enabled:
+                self.tel.metrics.set_gauge("eval_acc", acc) if acc is not None else None
+                self.tel.on_round(
+                    engine="reference", round=b, acc=acc,
+                    loss=float(np.mean(losses)) if losses else 0.0,
+                    wall_s=round_wall,
+                    sim_s=round_sim if self.clock is not None else None,
+                    **comm.take(),
                 )
         self.params = global_params
-        return SimResult(history, self.accountant, global_params)
+        return SimResult(
+            history, self.accountant, global_params,
+            telemetry=self.tel if self.tel.enabled else None,
+        )
 
 
 def hetero_final_params(programs, trees) -> Dict[str, dict]:
@@ -257,6 +312,7 @@ class HeteroHFLSimulation:
         public: "Optional[List[Dataset]]" = None,
         distill=None,
         compression: Optional[CompressionSpec] = None,
+        telemetry=None,
     ):
         # lazy: no engine dependency at module import time
         from repro.engine.distill import check_distillable, check_public_shards
@@ -267,6 +323,8 @@ class HeteroHFLSimulation:
         self.schedule = schedule
         self.rng = np.random.default_rng(seed)
         self.upp = upp
+        self.tel = coerce_telemetry(telemetry) or NULL_TELEMETRY
+        self._round = 0
         self.programs, self.group_of = group_clients(clients)
         self.group_params = [
             p.init(jax.random.PRNGKey(seed)) for p in self.programs
@@ -299,28 +357,33 @@ class HeteroHFLSimulation:
         """One edge round; ``edge_params[g][j]`` is edge j's group-g model."""
         m, n = self.assignment.shape
         losses = []
-        participating = self.rng.random(m) < self.upp
-        if not participating.any():
-            participating[self.rng.integers(0, m)] = True
+        with self.tel.span("assignment", round=self._round, engine="reference-hetero"):
+            participating = self.rng.random(m) < self.upp
+            if not participating.any():
+                participating[self.rng.integers(0, m)] = True
         new_models: Dict[tuple, List[dict]] = {}
         new_sizes: Dict[tuple, List[float]] = {}
-        for i, cl in enumerate(self.clients):
-            edges = np.nonzero(self.assignment[i])[0]
-            if len(edges) == 0 or not participating[i]:
-                continue
-            g = int(self.group_of[i])
-            rows = edge_params[g]
-            start = rows[edges[0]] if len(edges) == 1 else edge_aggregate(
-                [rows[j] for j in edges], [1.0] * len(edges)
-            )
-            upd, loss = cl.local_update(start, self.rng, epochs=self.schedule.local_steps)
-            losses.append(loss)
-            upd = self._compress_upload(cl.cid, start, upd)
-            for j in edges:
-                new_models.setdefault((g, j), []).append(upd)
-                new_sizes.setdefault((g, j), []).append(cl.data_size)
-        for (g, j), models in new_models.items():
-            edge_params[g][j] = edge_aggregate(models, new_sizes[(g, j)])
+        with self.tel.span(
+            "local_train", round=self._round, clients=int(participating.sum())
+        ):
+            for i, cl in enumerate(self.clients):
+                edges = np.nonzero(self.assignment[i])[0]
+                if len(edges) == 0 or not participating[i]:
+                    continue
+                g = int(self.group_of[i])
+                rows = edge_params[g]
+                start = rows[edges[0]] if len(edges) == 1 else edge_aggregate(
+                    [rows[j] for j in edges], [1.0] * len(edges)
+                )
+                upd, loss = cl.local_update(start, self.rng, epochs=self.schedule.local_steps)
+                losses.append(loss)
+                upd = self._compress_upload(cl.cid, start, upd)
+                for j in edges:
+                    new_models.setdefault((g, j), []).append(upd)
+                    new_sizes.setdefault((g, j), []).append(cl.data_size)
+        with self.tel.span("edge_aggregate", round=self._round, edges=n):
+            for (g, j), models in new_models.items():
+                edge_params[g][j] = edge_aggregate(models, new_sizes[(g, j)])
         for g in range(len(self.programs)):
             mask = (self.group_of == g) & participating
             self.accountant.on_edge_sync(
@@ -335,17 +398,23 @@ class HeteroHFLSimulation:
         from repro.engine.distill import distill_edge, draw_public_batches
 
         n = self.assignment.shape[1]
-        idx = draw_public_batches(
-            self.rng, [len(s) for s in self.public], self.distill
-        )
-        for j in range(n):
-            xb = self.public[j].x[idx[j]]  # (steps, B, *feat)
-            fused, _ = distill_edge(
-                self.programs, [edge_params[g][j] for g in range(len(self.programs))],
-                xb, self.distill,
+        with self.tel.span(
+            "kd_fuse", round=self._round, edges=n, groups=len(self.programs)
+        ):
+            idx = draw_public_batches(
+                self.rng, [len(s) for s in self.public], self.distill
             )
-            for g, tree in enumerate(fused):
-                edge_params[g][j] = tree
+            for j in range(n):
+                xb = self.public[j].x[idx[j]]  # (steps, B, *feat)
+                fused, kd_losses = distill_edge(
+                    self.programs, [edge_params[g][j] for g in range(len(self.programs))],
+                    xb, self.distill,
+                )
+                if self.tel.enabled:
+                    for loss in kd_losses:
+                        self.tel.metrics.observe("kd_loss", loss)
+                for g, tree in enumerate(fused):
+                    edge_params[g][j] = tree
         return edge_params
 
     def run(self, cloud_rounds: int, eval_every: int = 1) -> SimResult:
@@ -355,28 +424,52 @@ class HeteroHFLSimulation:
         group_params = self.group_params
         edge_sizes = group_edge_sizes(self.clients, self.assignment, self.group_of)
         cloud_bits = None if n_groups == 1 else float(sum(self._group_bits))
+        comm = CommDelta(self.accountant) if self.tel.enabled else None
+        wall_accum = 0.0
         for b in range(1, cloud_rounds + 1):
-            edge_params = [[tree] * n for tree in group_params]
-            losses: List[float] = []
-            for _ in range(self.schedule.edge_per_cloud):
-                losses += self._edge_round(edge_params)
-            if self.distill is not None:
-                edge_params = self._kd_fuse(edge_params)
-            group_params = [
-                cloud_aggregate(edge_params[g], edge_sizes[g]) for g in range(n_groups)
-            ]
-            self.accountant.on_cloud_sync(n, bits=cloud_bits)
-            if b % eval_every == 0 or b == cloud_rounds:
-                acc = float(
-                    np.mean(
-                        [
-                            evaluate(group_params[g], self.programs[g], self.test)
-                            for g in range(n_groups)
-                        ]
+            t_round = time.perf_counter()
+            self._round = b
+            acc = None
+            with self.tel.span("cloud_round", round=b, engine="reference-hetero"):
+                edge_params = [[tree] * n for tree in group_params]
+                losses: List[float] = []
+                for _ in range(self.schedule.edge_per_cloud):
+                    losses += self._edge_round(edge_params)
+                if self.distill is not None:
+                    edge_params = self._kd_fuse(edge_params)
+                with self.tel.span("cloud_reduce", round=b, groups=n_groups):
+                    group_params = [
+                        cloud_aggregate(edge_params[g], edge_sizes[g])
+                        for g in range(n_groups)
+                    ]
+                self.accountant.on_cloud_sync(n, bits=cloud_bits)
+                if b % eval_every == 0 or b == cloud_rounds:
+                    with self.tel.span("eval", round=b) as sp:
+                        acc = float(
+                            np.mean(
+                                [
+                                    evaluate(group_params[g], self.programs[g], self.test)
+                                    for g in range(n_groups)
+                                ]
+                            )
+                        )
+                        sp.set(acc=acc)
+            round_wall = time.perf_counter() - t_round
+            wall_accum += round_wall
+            if acc is not None:
+                history.append(
+                    RoundMetrics(
+                        b, acc, 0.0, float(np.mean(losses)) if losses else 0.0,
+                        wall_seconds=wall_accum,
                     )
                 )
-                history.append(
-                    RoundMetrics(b, acc, 0.0, float(np.mean(losses)) if losses else 0.0)
+                wall_accum = 0.0
+            if self.tel.enabled:
+                self.tel.metrics.set_gauge("eval_acc", acc) if acc is not None else None
+                self.tel.on_round(
+                    engine="reference-hetero", round=b, acc=acc,
+                    loss=float(np.mean(losses)) if losses else 0.0,
+                    wall_s=round_wall, sim_s=None, **comm.take(),
                 )
         self.group_params = group_params
         final = (
@@ -384,7 +477,10 @@ class HeteroHFLSimulation:
             if n_groups == 1
             else hetero_final_params(self.programs, group_params)
         )
-        return SimResult(history, self.accountant, final)
+        return SimResult(
+            history, self.accountant, final,
+            telemetry=self.tel if self.tel.enabled else None,
+        )
 
 
 def centralized_baseline(
@@ -407,11 +503,20 @@ def centralized_baseline(
     params = program.init(jax.random.PRNGKey(seed))
     history = []
     n = len(data)
+    wall_accum = 0.0
     for r in range(1, rounds + 1):
+        t_round = time.perf_counter()
         steps = max(1, min(128, n // batch))
         idx = rng.permutation(n)[: steps * batch].reshape(steps, batch)
         xb, yb = jnp.asarray(data.x[idx]), jnp.asarray(data.y[idx])
         params, loss = _local_epoch(params, xb, yb, program, steps, 1e-3)
         if r % eval_every == 0 or r == rounds:
-            history.append(RoundMetrics(r, evaluate(params, program, test), 0.0, float(loss)))
+            acc = evaluate(params, program, test)
+            wall_accum += time.perf_counter() - t_round
+            history.append(
+                RoundMetrics(r, acc, 0.0, float(loss), wall_seconds=wall_accum)
+            )
+            wall_accum = 0.0
+        else:
+            wall_accum += time.perf_counter() - t_round
     return history

@@ -1,18 +1,23 @@
 """Serving launcher: batched prefill + decode for any --arch.
 
   PYTHONPATH=src python -m repro.launch.serve --arch rwkv6-7b --tokens 16
+
+Runs through :class:`repro.serving.engine.ServeEngine`, so the timing
+printed here comes from the same telemetry spans every other entry point
+records (``docs/OBSERVABILITY.md``): tok/s is the ``decode`` span's token
+count over its duration, not an ad-hoc stopwatch.  ``--telemetry DIR``
+additionally writes the trace artifacts there.
 """
 from __future__ import annotations
 
 import argparse
-import time
 
 import jax
-import jax.numpy as jnp
+import numpy as np
 
 from repro.configs import get_config, get_smoke_config, list_archs
-from repro.models import init_params
-from repro.models.transformer import decode_step, prefill
+from repro.serving.engine import Request, ServeEngine
+from repro.telemetry import Telemetry
 
 
 def main() -> None:
@@ -23,36 +28,39 @@ def main() -> None:
     ap.add_argument("--prompt-len", type=int, default=32)
     ap.add_argument("--tokens", type=int, default=16)
     ap.add_argument("--seed", type=int, default=0)
+    ap.add_argument("--telemetry", default=None, metavar="DIR",
+                    help="write trace.json / metrics.json artifacts here")
     args = ap.parse_args()
 
     cfg = get_config(args.arch) if args.full_config else get_smoke_config(args.arch)
-    params = init_params(jax.random.PRNGKey(args.seed), cfg)
-    max_seq = args.prompt_len + args.tokens
-    prompts = jax.random.randint(
-        jax.random.PRNGKey(1), (args.batch, args.prompt_len), 0, cfg.vocab_size
+    tel = Telemetry(out_dir=args.telemetry)
+    engine = ServeEngine(
+        cfg, max_seq=args.prompt_len + args.tokens, seed=args.seed, telemetry=tel
     )
+    prompts = np.asarray(jax.random.randint(
+        jax.random.PRNGKey(1), (args.batch, args.prompt_len), 0, cfg.vocab_size
+    ), np.int32)
     kw = {}
     if cfg.family == "encdec":
         kw["enc_embeds"] = jax.random.normal(
             jax.random.PRNGKey(2), (args.batch, cfg.n_audio_frames, cfg.d_model),
             dtype=cfg.param_dtype,
         )
-    logits, cache = jax.jit(lambda p, t: prefill(p, cfg, t, max_seq=max_seq, **kw))(
-        params, prompts
-    )
-    step = jax.jit(lambda p, t, c, pos: decode_step(p, cfg, t, c, pos))
-    tok = jnp.argmax(logits[:, -1], -1)[:, None].astype(jnp.int32)
-    t0 = time.perf_counter()
-    outs = [tok]
-    for i in range(args.tokens - 1):
-        pos = jnp.full((args.batch,), args.prompt_len + i, jnp.int32)
-        logits, cache = step(params, tok, cache, pos)
-        tok = jnp.argmax(logits[:, -1], -1)[:, None].astype(jnp.int32)
-        outs.append(tok)
-    jax.block_until_ready(tok)
-    dt = time.perf_counter() - t0
-    print(f"{cfg.name}: {args.batch*(args.tokens-1)/max(dt,1e-9):.1f} tok/s (CPU)")
-    print("row 0:", jnp.concatenate(outs, 1)[0].tolist())
+    reqs = [Request(prompt=prompts[i], max_new_tokens=args.tokens)
+            for i in range(args.batch)]
+    engine.run(reqs, **kw)
+    decode = [s for s in tel.tracer.spans if s.name == "decode"][-1]
+    prefill = [s for s in tel.tracer.spans if s.name == "prefill"][-1]
+    toks = decode.attrs.get("tokens", 0)
+    print(f"{cfg.name}: prefill {prefill.duration*1e3:.1f} ms, "
+          f"{toks/max(decode.duration, 1e-9):.1f} tok/s (CPU)")
+    if "flops" in decode.attrs:
+        print(f"decode step: {decode.attrs['flops']:.3g} flops, "
+              f"{decode.attrs['bytes_moved']:.3g} bytes moved (analytic)")
+    print("row 0:", reqs[0].out.tolist())
+    if args.telemetry:
+        for k, p in tel.flush().items():
+            print(f"  wrote {k}: {p}")
 
 
 if __name__ == "__main__":

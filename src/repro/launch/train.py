@@ -8,11 +8,14 @@ Two modes:
 
   PYTHONPATH=src python -m repro.launch.train --paper --rounds 4
   PYTHONPATH=src python -m repro.launch.train --arch qwen3-14b --steps 20
+
+``--telemetry DIR`` records the run's telemetry spans/metrics and writes
+trace.json / rounds.jsonl / summary.txt there (``docs/OBSERVABILITY.md``);
+``--engine`` picks the simulation engine for the paper experiment.
 """
 from __future__ import annotations
 
 import argparse
-import time
 
 
 def run_paper(args) -> None:
@@ -27,9 +30,18 @@ def run_paper(args) -> None:
         cloud_rounds=args.rounds,
         schedule=HFLSchedule(args.local_steps, args.edge_per_cloud),
         seed=args.seed,
+        engine=args.engine,
+        telemetry=args.telemetry or None,
     )
     for m in res.history:
-        print(f"round {m.cloud_round}: acc={m.test_acc:.3f}")
+        extra = f" wall={m.wall_seconds:.2f}s"
+        if m.sim_seconds:
+            extra += f" sim={m.sim_seconds:.2f}s"
+        print(f"round {m.cloud_round}: acc={m.test_acc:.3f}{extra}")
+    if res.telemetry is not None:
+        print(res.telemetry.summary())
+        if args.telemetry:
+            print("telemetry artifacts in", args.telemetry)
 
 
 def run_lm(args) -> None:
@@ -39,6 +51,7 @@ def run_lm(args) -> None:
     from repro.configs import get_config, get_smoke_config
     from repro.data import TokenStream
     from repro.models import init_params
+    from repro.telemetry import Telemetry
     from repro.training import adam, init_train_state, make_train_step
     from repro.training.checkpoint import save_checkpoint
 
@@ -48,13 +61,24 @@ def run_lm(args) -> None:
     state = init_train_state(params, opt)
     step = jax.jit(make_train_step(cfg, opt, grad_accum=args.grad_accum))
     stream = TokenStream(cfg.vocab_size, seed=args.seed)
-    t0 = time.time()
+    tel = Telemetry(out_dir=args.telemetry or None)
     for i in range(1, args.steps + 1):
         b = stream.train_batch(args.batch, args.seq)
-        state, m = step(state, {k: jnp.asarray(v) for k, v in b.items()})
+        batch = {k: jnp.asarray(v) for k, v in b.items()}
+        with tel.span("train_step", step=i) as sp:
+            if i == 1:
+                cost = tel.jit_cost("train_step", step, state, batch)
+                if cost:
+                    sp.set(**cost)
+            state, m = step(state, batch)
+            loss = float(m["total_loss"])  # host sync inside the span
         if i % max(1, args.steps // 10) == 0:
-            print(f"step {i:4d} loss={float(m['total_loss']):.4f} "
-                  f"({(time.time()-t0)/i:.2f}s/step)")
+            ds = tel.tracer.durations("train_step")
+            print(f"step {i:4d} loss={loss:.4f} "
+                  f"({sum(ds)/len(ds):.2f}s/step)")
+    if args.telemetry:
+        for k, p in tel.flush().items():
+            print(f"  wrote {k}: {p}")
     if args.checkpoint:
         save_checkpoint(args.checkpoint, state.params, step=args.steps)
         print("saved", args.checkpoint)
@@ -65,6 +89,8 @@ def main() -> None:
     ap.add_argument("--paper", action="store_true")
     ap.add_argument("--dataset", default="heartbeat")
     ap.add_argument("--strategy", default="eara-sca")
+    ap.add_argument("--engine", default="reference",
+                    choices=("reference", "sync", "async"))
     ap.add_argument("--rounds", type=int, default=4)
     ap.add_argument("--local-steps", type=int, default=1)
     ap.add_argument("--edge-per-cloud", type=int, default=1)
@@ -77,6 +103,8 @@ def main() -> None:
     ap.add_argument("--lr", type=float, default=1e-3)
     ap.add_argument("--grad-accum", type=int, default=1)
     ap.add_argument("--checkpoint", default="")
+    ap.add_argument("--telemetry", default="", metavar="DIR",
+                    help="record telemetry; write artifacts to DIR")
     ap.add_argument("--seed", type=int, default=0)
     args = ap.parse_args()
     if args.paper or not args.arch:

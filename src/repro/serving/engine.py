@@ -18,6 +18,7 @@ import numpy as np
 from repro.models import init_params
 from repro.models.config import ModelConfig
 from repro.models.transformer import decode_step, prefill
+from repro.telemetry import NULL_TELEMETRY, coerce_telemetry
 
 
 @dataclasses.dataclass
@@ -28,7 +29,15 @@ class Request:
 
 
 class ServeEngine:
-    def __init__(self, cfg: ModelConfig, params=None, *, max_seq: int = 256, seed: int = 0):
+    def __init__(
+        self,
+        cfg: ModelConfig,
+        params=None,
+        *,
+        max_seq: int = 256,
+        seed: int = 0,
+        telemetry=None,
+    ):
         self.cfg = cfg
         self.params = params if params is not None else init_params(
             jax.random.PRNGKey(seed), cfg
@@ -38,10 +47,12 @@ class ServeEngine:
             lambda p, t, **kw: prefill(p, cfg, t, max_seq=max_seq, **kw)
         )
         self._step = jax.jit(lambda p, t, c, pos: decode_step(p, cfg, t, c, pos))
+        self.tel = coerce_telemetry(telemetry) or NULL_TELEMETRY
 
     def run(self, requests: List[Request], *, enc_embeds=None) -> List[Request]:
         if not requests:
             return requests
+        tel = self.tel
         b = len(requests)
         plen = max(len(r.prompt) for r in requests)
         toks = np.zeros((b, plen), np.int32)
@@ -51,17 +62,34 @@ class ServeEngine:
         if self.cfg.family == "encdec":
             assert enc_embeds is not None
             kw["enc_embeds"] = enc_embeds
-        logits, cache = self._prefill(self.params, jnp.asarray(toks), **kw)
-        tok = jnp.argmax(logits[:, -1], -1)[:, None].astype(jnp.int32)
+        with tel.span("prefill", model=self.cfg.name, batch=b, prompt_len=plen) as sp:
+            cost = tel.jit_cost(
+                "serve_prefill", self._prefill, self.params, jnp.asarray(toks), **kw
+            )
+            if cost:
+                sp.set(**cost)
+            logits, cache = self._prefill(self.params, jnp.asarray(toks), **kw)
+            tok = jnp.argmax(logits[:, -1], -1)[:, None].astype(jnp.int32)
+            np.asarray(tok)  # host sync: the span covers real prefill work
         budget = max(r.max_new_tokens for r in requests)
         outs = [np.asarray(tok)[:, 0]]
-        for i in range(budget - 1):
-            pos = jnp.full((b,), plen + i, jnp.int32)
-            if plen + i >= self.max_seq:
-                break
-            logits, cache = self._step(self.params, tok, cache, pos)
-            tok = jnp.argmax(logits[:, -1], -1)[:, None].astype(jnp.int32)
-            outs.append(np.asarray(tok)[:, 0])
+        with tel.span("decode", model=self.cfg.name, batch=b) as sp:
+            steps = 0
+            for i in range(budget - 1):
+                pos = jnp.full((b,), plen + i, jnp.int32)
+                if plen + i >= self.max_seq:
+                    break
+                if steps == 0:
+                    cost = tel.jit_cost(
+                        "serve_decode_step", self._step, self.params, tok, cache, pos
+                    )
+                    if cost:
+                        sp.set(**cost)
+                logits, cache = self._step(self.params, tok, cache, pos)
+                tok = jnp.argmax(logits[:, -1], -1)[:, None].astype(jnp.int32)
+                outs.append(np.asarray(tok)[:, 0])
+                steps += 1
+            sp.set(steps=steps, tokens=b * steps)
         gen = np.stack(outs, axis=1)  # (b, T)
         for i, r in enumerate(requests):
             r.out = gen[i, : r.max_new_tokens]
