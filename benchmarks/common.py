@@ -56,6 +56,7 @@ def emit(
     mean_us: float = None,
     std_us: float = None,
     repeats: int = None,
+    **extra: object,
 ) -> None:
     row: Dict[str, object] = {
         "name": name, "us_per_call": round(us_per_call, 1), "derived": derived,
@@ -66,6 +67,7 @@ def emit(
         row["std_us"] = round(std_us, 1)
     if repeats is not None:
         row["repeats"] = repeats
+    row.update(extra)  # bench-specific fields (e.g. wasted_frac)
     _rows.append(row)
     print(f"{name},{us_per_call:.1f},{derived}", flush=True)
 

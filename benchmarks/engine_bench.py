@@ -235,16 +235,69 @@ def bench_scale(m: int, n_edges: int, model: str = "cnn") -> Dict[str, Optional[
     return {"loop": t_ref, "host": t_host, "device": t_dev, "async": t_async}
 
 
+def bench_faults(m: int, n_edges: int) -> Dict[str, float]:
+    """Fault-injected scale point: clients/sec plus the wasted-bits fraction
+    (bits that died in the air / all uplink airtime) under ~20% availability
+    churn with lossy, async-retried uploads and finite energy budgets."""
+    import jax
+
+    from repro.faults import FaultSpec, FaultState
+    from repro.utils.tree import tree_size_bytes
+    from repro.wireless import WirelessParams, sample_topology
+
+    spec = FaultSpec(seed=0, p_drop=0.2, p_rejoin=0.5, p_fail=0.15,
+                     max_retries=2, backoff_s=0.05, energy_uploads=8.0,
+                     refade_rounds=1, drift_rate=0.02)
+    clients, assignment, test, latency, program, _ = _make_population(m, n_edges)
+    topo = sample_topology(jax.random.PRNGKey(0), m, n_edges)
+    wp = WirelessParams()
+    bits = tree_size_bytes(program.init(jax.random.PRNGKey(0))) * 8
+
+    def state():
+        # fresh per engine instance: FaultState carries per-run energy
+        # balances and dispatch counters
+        return FaultState(spec, topo, wp, bits)
+
+    mk = dict(program=program, test=test, schedule=HFLSchedule(1, 1), seed=0)
+    makers = {
+        "host": lambda: BatchedSyncEngine(
+            clients, assignment, pipeline="host", faults=state(), **mk),
+        "device": lambda: BatchedSyncEngine(
+            clients, assignment, pipeline="device", faults=state(), **mk),
+        "async": lambda: AsyncHFLEngine(
+            clients, assignment, latency=latency, quorum=0.75,
+            faults=state(), **mk),
+        "loop": lambda: HFLSimulation(clients, assignment, faults=state(), **mk),
+    }
+    t = _time_interleaved(makers)
+    out = {}
+    for k, make_sim in makers.items():
+        sim = make_sim()
+        sim.run(1, eval_every=1)
+        tot = sim.accountant.totals()
+        frac = tot["wasted_bits"] / max(tot["eu_up_bits"] + tot["wasted_bits"], 1.0)
+        best_s = t[k]["best_us"] * 1e-6
+        emit(f"engine_faults_{k}_m{m}", t[k]["best_us"],
+             f"{m / best_s:.1f} clients/sec wasted_frac={frac:.3f} "
+             f"program={program.name} (20% churn, lossy uplinks)",
+             mean_us=t[k]["mean_us"], std_us=t[k]["std_us"],
+             repeats=t[k]["repeats"], wasted_frac=round(frac, 4))
+        out[k] = frac
+    return out
+
+
 def main(model: Optional[str] = None) -> None:
     start = mark()
     if model is None:
         # default suite: the CNN trajectory at every scale, plus one MLP
         # scale point (quick mode included) so CI tracks a non-CNN program
+        # and one fault-injected point so the degraded paths stay timed
         sizes = [18, 128, 512, 2048]
         n_edges = {18: 5, 128: 8, 512: 8, 2048: 8}
         for m in sizes:
             bench_scale(m, n_edges[m])
         bench_scale(128, 8, model="mlp")
+        bench_faults(128, 8)
         dump_json("BENCH_engine.json", start)
     else:
         sizes = {
@@ -274,6 +327,14 @@ if __name__ == "__main__":
                     help="bench one program's scale sweep (default: CNN suite "
                          "+ MLP point; 'mix' = cnn+mlp hetero population with "
                          "the distillation fuse)")
+    ap.add_argument("--faults", action="store_true",
+                    help="bench ONLY the fault-injected scale point (20% "
+                         "churn, lossy retried uplinks, finite batteries)")
     args = ap.parse_args()
     print("name,us_per_call,derived")
-    main(model=args.model)
+    if args.faults:
+        start = mark()
+        bench_faults(128, 8)
+        dump_json("BENCH_engine_faults.json", start)
+    else:
+        main(model=args.model)

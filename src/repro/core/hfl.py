@@ -61,6 +61,12 @@ class CommAccountant:
       multicast on a shared resource share (paper: ~3% overhead) but the
       edges each send a downlink copy.
     * edge->cloud: every cloud sync, each edge exchanges |W| up + |W| down.
+    * wasted traffic (fault-injected runs): transmissions that never reached
+      an aggregation — uploads dropped mid-round, async retransmissions, and
+      abandoned (timed-out / retry-exhausted) multicasts — are charged to
+      ``eu_bits_wasted`` SEPARATELY from the useful ``eu_bits_up``, so
+      fig6-style accuracy-per-bit curves stay honest about the radio cost
+      of failure without polluting the useful-traffic totals.
     """
 
     model_bits: float
@@ -71,6 +77,11 @@ class CommAccountant:
     eu_bits_up: Dict[int, float] = dataclasses.field(default_factory=dict)
     eu_bits_down: Dict[int, float] = dataclasses.field(default_factory=dict)
     edge_cloud_bits: float = 0.0
+    # failure taxonomy (all zero on fault-free runs)
+    eu_bits_wasted: Dict[int, float] = dataclasses.field(default_factory=dict)
+    dropped_uploads: int = 0
+    retried_uploads: int = 0
+    abandoned_uploads: int = 0
 
     def on_edge_sync(
         self,
@@ -111,6 +122,24 @@ class CommAccountant:
         if down_bits:
             self.eu_bits_down[i] = self.eu_bits_down.get(i, 0.0) + down_bits
 
+    def on_wasted_upload(self, i: int, bits: float, kind: str = "dropped") -> None:
+        """A transmission that never contributed to an aggregation.
+
+        ``kind``: "dropped" — a synchronous-round upload lost mid-air;
+        "retry" — an async retransmission (the eventually-delivered payload
+        is charged once via ``on_eu_exchange``, every extra attempt lands
+        here); "abandoned" — a whole multicast that no edge ever received
+        (timeout / retries exhausted / battery death)."""
+        if kind == "dropped":
+            self.dropped_uploads += 1
+        elif kind == "retry":
+            self.retried_uploads += 1
+        elif kind == "abandoned":
+            self.abandoned_uploads += 1
+        else:
+            raise ValueError(f"unknown wasted-upload kind {kind!r}")
+        self.eu_bits_wasted[i] = self.eu_bits_wasted.get(i, 0.0) + bits
+
     def on_edge_round(self) -> None:
         self.edge_rounds += 1
 
@@ -138,6 +167,10 @@ class CommAccountant:
             "cloud_bits": float(self.edge_cloud_bits),
             "edge_rounds": float(self.edge_rounds),
             "cloud_rounds": float(self.cloud_rounds),
+            "wasted_bits": float(sum(self.eu_bits_wasted.values())),
+            "dropped_uploads": float(self.dropped_uploads),
+            "retried_uploads": float(self.retried_uploads),
+            "abandoned_uploads": float(self.abandoned_uploads),
         }
 
 

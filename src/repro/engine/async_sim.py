@@ -82,6 +82,13 @@ class _EdgeState:
     done_time: float = 0.0
     # buffered uploads: (client_idx, row, data_size, birth_version)
     buffer: List[Tuple[int, object, float, int]] = dataclasses.field(default_factory=list)
+    # fault-injected runs: members whose upload to THIS edge was abandoned
+    # (timeout / retries exhausted / battery death) — the quorum shrinks to
+    # the live population; a later successful delivery re-registers the EU
+    lost: set = dataclasses.field(default_factory=set)
+    # whether any upload was aggregated this cloud round (a starved edge
+    # contributes weight 0 to the degraded cloud reduction)
+    got: bool = False
 
 
 class AsyncHFLEngine:
@@ -133,6 +140,7 @@ class AsyncHFLEngine:
         compression: Optional[CompressionSpec] = None,
         public_shards: Optional[List[Dataset]] = None,
         distill: Optional[DistillSpec] = None,
+        faults=None,
         telemetry=None,
     ):
         if not (0.0 < quorum <= 1.0):
@@ -169,7 +177,15 @@ class AsyncHFLEngine:
             check_distillable(self.groups)
             self.public_store = DeviceShardStore.from_shards(public_shards)
         self.accountant = CommAccountant(model_bits=tree_size_bytes(self.params) * 8)
-        self._errors: Dict[Tuple[int, int], object] = {}
+        # fault injection (repro.faults.FaultState); None = the historical
+        # fault-free path, bit-identical to the golden trajectories
+        self.faults = faults
+        self._lat = self.latency  # per-round faded latency under faults
+        self._client_edges: Dict[int, List[int]] = {}
+        # per-client compression error feedback (a client trains ONCE per
+        # dispatch and multicasts the same row, so the error state is
+        # per-client, not per-(client, edge))
+        self._errors: Dict[int, object] = {}
         self.queue = EventQueue()
         self._losses: List[float] = []
         # per-group edge models, each one (E, D_g) device matrix (_EdgeState)
@@ -192,80 +208,187 @@ class AsyncHFLEngine:
         )
 
 
-    def _dispatch(self, pairs: List[Tuple[int, int]], edges: Dict[int, _EdgeState]):
-        """Train (client, edge) pairs as one cohort batch, schedule uploads.
+    def _dispatch(self, client_ids: List[int], edges: Dict[int, _EdgeState]):
+        """Train each client ONCE, multicast its row to every member edge.
 
-        Pairs are processed in (client, edge) order so the numpy RNG stream
-        is consumed client-by-client like the synchronous simulators; in the
+        A DCA client trains a single local pass per dispatch — starting
+        from the mean of its member edges' current models, the synchronous
+        simulators' DCA start semantics — and the resulting update row is
+        delivered to every member edge, matching the multicast uplink the
+        accountant already charged (one transmission, ~3% overhead).
+        Clients are processed in index order so the numpy RNG stream is
+        consumed client-by-client like the synchronous simulators; in the
         ``quorum=1.0`` corner this makes async reduce to reference FedAvg.
         """
-        pairs = sorted(pairs)
+        client_ids = sorted(client_ids)
+        if self.faults is not None:
+            alive = self.faults.alive()
+            live = []
+            for i in client_ids:
+                if alive[i]:
+                    live.append(i)
+                else:
+                    # battery-dead EU: it never transmits; its edges stop
+                    # waiting for it (the quorum shrinks to the live set)
+                    for j in self._client_edges[i]:
+                        edges[j].lost.add(i)
+                    if self.tel.enabled:
+                        self.tel.metrics.inc("faults_dead_skips")
+            client_ids = live
         jobs: List[LocalJob] = []
-        row_cache: Dict[Tuple[int, int], jnp.ndarray] = {}  # one read per (group, edge)
-        for i, j in pairs:
+        for i in client_ids:
             g = int(self.group_of[i])
-            if (g, j) not in row_cache:
-                row_cache[(g, j)] = self._edge_mats[g][j]
+            js = self._client_edges[i]
+            # SCA: a direct row read (bit-identical to the historical
+            # per-pair dispatch); DCA: the mean of the member edges' models
+            start = (
+                self._edge_mats[g][js[0]]
+                if len(js) == 1
+                else self._mean(
+                    [self._edge_mats[g][j] for j in js], [1.0] * len(js)
+                )
+            )
             jobs.append(
                 make_job(
-                    self.clients[i], row_cache[(g, j)], self.rng,
-                    self.schedule.local_steps, tag=(i, j),
+                    self.clients[i], start, self.rng,
+                    self.schedule.local_steps, tag=i,
                 )
             )
         trained = run_cohorts(
             jobs, self.program, self.pack, store=self.store, telemetry=self.tel
         )
-        # uplink accounting matches the sync simulators' multicast semantics:
-        # a client dispatched to k edges at once (DCA) still trains each
-        # membership separately, but TRANSMITS once on a shared resource
-        # share (paper: ~3% overhead), so it is charged one multicast
-        # uplink per dispatch, not k full uplinks
-        edges_of: Dict[int, int] = {}
-        for i, _ in pairs:
-            edges_of[i] = edges_of.get(i, 0) + 1
-        for i, k in edges_of.items():
-            mc = self.accountant.dca_multicast_overhead if k > 1 else 0.0
-            bits = self._uplink_bits[int(self.group_of[i])]
-            self.accountant.on_eu_exchange(i, up_bits=bits * (1.0 + mc))
         compressing = self.compression is not None and self.compression.kind != "none"
-        for (i, j), job in zip(pairs, jobs):
-            upd = trained.row((i, j))
-            self._losses.append(trained.loss[(i, j)])
+        for i, job in zip(client_ids, jobs):
+            g = int(self.group_of[i])
+            js = self._client_edges[i]
+            upd = trained.row(i)
+            self._losses.append(trained.loss[i])
             program = self.clients[i].program
             if not compressing and program.quantizes_upload:
                 upd = program.quantize_upload(job.start_flat, upd)
             else:
                 upd = compress_flat_upload(
-                    self.compression, self._errors, (i, j), job.start_flat, upd
+                    self.compression, self._errors, i, job.start_flat, upd
                 )
-            self.accountant.on_eu_exchange(
-                i, down_bits=self._group_bits[int(self.group_of[i])]
-            )
-            self.queue.push(
-                self.queue.now + float(self.latency[i, j]),
-                "upload",
-                client=i,
-                edge=j,
-                row=upd,
-                birth=edges[j].version,
-            )
+            # each member edge sent this client a downlink model copy; the
+            # uplink is ONE multicast on a shared resource share (paper:
+            # ~3% overhead), not a full uplink per membership
+            bits = self._uplink_bits[g]
+            mc = self.accountant.dca_multicast_overhead if len(js) > 1 else 0.0
+            self.accountant.on_eu_exchange(i, down_bits=self._group_bits[g] * len(js))
+            if self.faults is None:
+                self.accountant.on_eu_exchange(i, up_bits=bits * (1.0 + mc))
+                for j in js:
+                    self.queue.push(
+                        self.queue.now + float(self._lat[i, j]),
+                        "upload", client=i, edge=j, row=upd,
+                        birth=edges[j].version,
+                    )
+                    if self.tel.enabled:
+                        # simulated-time track: the radio upload occupies
+                        # the event clock from dispatch until the edge
+                        # hears it
+                        self.tel.sim_span(
+                            "upload",
+                            self.queue.now,
+                            self.queue.now + float(self._lat[i, j]),
+                            tid=j + 1, client=i, edge=j,
+                        )
+            else:
+                self._transmit(i, js, upd, edges, bits * (1.0 + mc), bits)
+
+    def _transmit(
+        self, i: int, js: List[int], upd, edges: Dict[int, _EdgeState],
+        mcast_bits: float, unicast_bits: float,
+    ) -> None:
+        """One multicast transmission under the fault model.
+
+        Every member edge's retry-with-exponential-backoff cascade is
+        resolved at dispatch time (``FaultState.plan_upload``) and turned
+        into one future "upload" or "lost" event.  Useful bits are charged
+        when at least one edge hears the multicast; a fully-abandoned
+        multicast and every retransmission land in the wasted-bits ledger.
+        """
+        b = self._round
+        # attempt 0 is the shared multicast: one debit, costliest edge
+        self.faults.debit(i, self.faults.upload_energy(b, i, np.asarray(js)))
+        t0 = self.queue.now
+        delivered = 0
+        for j in js:
+            plan = self.faults.plan_upload(b, i, j, float(self._lat[i, j]))
             if self.tel.enabled:
-                # simulated-time track: the radio upload occupies the event
-                # clock from dispatch until the edge hears it
-                self.tel.sim_span(
-                    "upload",
-                    self.queue.now,
-                    self.queue.now + float(self.latency[i, j]),
-                    tid=j + 1,
-                    client=i,
-                    edge=j,
+                for (s, e, a) in plan.windows:
+                    self.tel.sim_span(
+                        "upload" if a == 0 else "retry",
+                        t0 + s, t0 + e, tid=j + 1, client=i, edge=j, attempt=a,
+                    )
+                if plan.retries:
+                    self.tel.metrics.inc("faults_retries", plan.retries)
+            for _ in range(plan.retries):
+                self.accountant.on_wasted_upload(i, unicast_bits, kind="retry")
+            if plan.ok:
+                delivered += 1
+                self.queue.push(
+                    t0 + plan.t_end, "upload", client=i, edge=j, row=upd,
+                    birth=edges[j].version,
                 )
+            else:
+                if self.tel.enabled:
+                    self.tel.sim_span(
+                        "abandon", t0 + plan.t_end, t0 + plan.t_end,
+                        tid=j + 1, client=i, edge=j, reason=plan.reason,
+                    )
+                    self.tel.metrics.inc(f"faults_abandon_{plan.reason}")
+                self.queue.push(
+                    t0 + plan.t_end, "lost", client=i, edge=j,
+                    reason=plan.reason,
+                )
+        if delivered:
+            self.accountant.on_eu_exchange(i, up_bits=mcast_bits)
+        else:
+            self.accountant.on_wasted_upload(i, mcast_bits, kind="abandoned")
 
     def _quorum_count(self, edge: _EdgeState) -> int:
-        return max(1, int(np.ceil(self.quorum * len(edge.members))))
+        # quorum relaxation: abandoned members do not count toward the
+        # population the edge waits on (edge.lost is empty when faults=None)
+        return max(1, int(np.ceil(self.quorum * (len(edge.members) - len(edge.lost)))))
 
-    def _edge_aggregate(self, j: int, edge: _EdgeState) -> List[Tuple[int, int]]:
-        """Staleness-weighted aggregation; returns (client, edge) redispatches.
+    def _settle(self, j: int, edge: _EdgeState, edges: Dict[int, _EdgeState]) -> None:
+        """Flush the edge if its buffer now satisfies the (live) quorum."""
+        if len(edge.buffer) >= self._quorum_count(edge):
+            self._dispatch(self._edge_aggregate(j, edge), edges)
+
+    def _drain_starved(self, edges: Dict[int, _EdgeState]) -> None:
+        """The queue is empty but edges are unfinished (fault-injected runs
+        only): nothing is in flight any more, so relax the quorum to
+        whoever delivered (degraded flush) and mark delivery-less edges as
+        starved — they stop waiting, and the degraded cloud reduction
+        skips their contribution."""
+        for j, edge in edges.items():
+            if edge.rounds_done >= self.schedule.edge_per_cloud:
+                continue
+            if edge.buffer:
+                if self.tel.enabled:
+                    self.tel.metrics.inc("faults_degraded_flush")
+                self._dispatch(self._edge_aggregate(j, edge), edges)
+            else:
+                edge.rounds_done = self.schedule.edge_per_cloud
+                edge.done_time = self.queue.now
+                if self.tel.enabled:
+                    self.tel.metrics.inc("faults_starved_edges")
+
+    def _maybe_repair(self, b: int) -> None:
+        """Re-repair the assignment when channel drift invalidated memberships."""
+        if not self.faults.spec.reassign:
+            return
+        new_lam, changed = self.faults.repair(b, self.assignment)
+        if len(changed):
+            self.assignment = new_lam
+            if self.tel.enabled:
+                self.tel.metrics.inc("faults_reassigned", int(len(changed)))
+
+    def _edge_aggregate(self, j: int, edge: _EdgeState) -> List[int]:
+        """Staleness-weighted aggregation; returns client redispatches.
 
         Group-aware: buffered uploads are averaged WITHIN each architecture
         group (a CNN row cannot average with an MLP row), each group's
@@ -311,6 +434,8 @@ class AsyncHFLEngine:
                 # compile a fresh pallas kernel per shape
                 self._edge_mats[g] = self._edge_mats[g].at[j].set(self._mean(rows, weights))
                 all_reporters += reporters
+        if edge.buffer:
+            edge.got = True
         edge.version += 1
         edge.rounds_done += 1
         edge.buffer = []
@@ -318,7 +443,9 @@ class AsyncHFLEngine:
         if edge.rounds_done >= self.schedule.edge_per_cloud:
             edge.done_time = self.queue.now
             return []
-        return [(i, j) for i in sorted(all_reporters)]
+        # multicast semantics: a redispatched client trains once and uploads
+        # to ALL its member edges (deduped — a client can buffer twice)
+        return sorted(set(all_reporters))
 
     # -- main loop ------------------------------------------------------------
     def run(self, cloud_rounds: int, eval_every: int = 1) -> SimResult:
@@ -338,17 +465,27 @@ class AsyncHFLEngine:
             acc = None
             with tel.span("cloud_round", engine="async", round=b):
                 self._losses = []
+                if self.faults is not None:
+                    self._maybe_repair(b)
+                    if self.faults.spec.reassign:
+                        edge_sizes = group_edge_sizes(
+                            self.clients, self.assignment, self.group_of
+                        )
+                    # retry deadlines and the event clock read the round's
+                    # faded channel
+                    self._lat = self.faults.latency(b)
                 with tel.span("assignment", round=b) as sp:
                     participating = self.rng.random(m) < self.upp
                     if not participating.any():
                         participating[self.rng.integers(0, m)] = True
+                    if self.faults is not None:
+                        participating &= self.faults.participation(b)
                     # every edge starts the cloud round from its group's
                     # global model
                     self._edge_mats = [
                         jnp.broadcast_to(row, (n, row.shape[0])) for row in global_rows
                     ]
                     edges: Dict[int, _EdgeState] = {}
-                    pairs: List[Tuple[int, int]] = []
                     for j in range(n):
                         members = [
                             i
@@ -360,21 +497,42 @@ class AsyncHFLEngine:
                             st.rounds_done = self.schedule.edge_per_cloud
                             st.done_time = self.queue.now
                         edges[j] = st
-                        pairs += [(i, j) for i in members]
-                    sp.set(participating=int(participating.sum()), pairs=len(pairs))
+                    client_ids = [
+                        i for i in range(m)
+                        if participating[i] and self.assignment[i].any()
+                    ]
+                    self._client_edges = {
+                        i: [int(j) for j in np.nonzero(self.assignment[i])[0]]
+                        for i in client_ids
+                    }
+                    sp.set(
+                        participating=int(participating.sum()),
+                        pairs=sum(len(v) for v in self._client_edges.values()),
+                    )
                 if tel.enabled:
                     tel.metrics.set_gauge("participating", int(participating.sum()))
-                self._dispatch(pairs, edges)
+                self._dispatch(client_ids, edges)
                 while any(
                     e.rounds_done < self.schedule.edge_per_cloud for e in edges.values()
                 ):
                     if not self.queue:
-                        raise RuntimeError("async engine deadlock: no pending events")
+                        if self.faults is None:
+                            raise RuntimeError(
+                                "async engine deadlock: no pending events"
+                            )
+                        self._drain_starved(edges)
+                        continue
                     ev = self.queue.pop()
                     j = ev.payload["edge"]
                     edge = edges[j]
                     if edge.rounds_done >= self.schedule.edge_per_cloud:
                         continue  # late straggler: edge already reported to cloud
+                    if ev.kind == "lost":
+                        # abandoned upload: shrink the quorum population and
+                        # re-check whether the buffer now satisfies it
+                        edge.lost.add(ev.payload["client"])
+                        self._settle(j, edge, edges)
+                        continue
                     edge.buffer.append(
                         (
                             ev.payload["client"],
@@ -383,8 +541,10 @@ class AsyncHFLEngine:
                             ev.payload["birth"],
                         )
                     )
-                    if len(edge.buffer) >= self._quorum_count(edge):
-                        self._dispatch(self._edge_aggregate(j, edge), edges)
+                    edge.lost.discard(ev.payload["client"])
+                    self._settle(j, edge, edges)
+                if self.faults is not None:
+                    self.faults.record_gauges(tel)
                 # cloud barrier: all edges reported; drop in-flight stragglers
                 self.queue.clear()
                 self.queue.now = (
@@ -418,14 +578,30 @@ class AsyncHFLEngine:
                     )
                     if cost:
                         sp.set(**cost)
-                    global_rows = [
-                        flat_mean(
-                            self._edge_mats[g],
-                            np.asarray(edge_sizes[g], np.float32),
-                            backend=self.backend,
-                        )
-                        for g in range(n_groups)
-                    ]
+                    if self.faults is not None:
+                        # degraded-mode reduction: starved edges (no upload
+                        # aggregated all cloud round) weigh zero; a fully
+                        # starved hierarchy keeps the global model
+                        got = np.array([edges[j].got for j in range(n)], bool)
+                        gw = [
+                            np.asarray(edge_sizes[g], np.float32) * got
+                            for g in range(n_groups)
+                        ]
+                        global_rows = [
+                            flat_mean(self._edge_mats[g], gw[g], backend=self.backend)
+                            if gw[g].any()
+                            else global_rows[g]
+                            for g in range(n_groups)
+                        ]
+                    else:
+                        global_rows = [
+                            flat_mean(
+                                self._edge_mats[g],
+                                np.asarray(edge_sizes[g], np.float32),
+                                backend=self.backend,
+                            )
+                            for g in range(n_groups)
+                        ]
                 self.accountant.on_cloud_sync(n, bits=cloud_bits)
                 if b % eval_every == 0 or b == cloud_rounds:
                     with tel.span("eval", round=b) as sp:

@@ -165,6 +165,7 @@ class BatchedSyncEngine:
         pipeline: str = "device",
         public_shards: Optional[Sequence[Dataset]] = None,
         distill: Optional[DistillSpec] = None,
+        faults=None,
         telemetry=None,
     ):
         if pipeline not in PIPELINES:
@@ -217,11 +218,32 @@ class BatchedSyncEngine:
         model_bits = tree_size_bytes(self.params) * 8
         self.accountant = CommAccountant(model_bits=model_bits)
         self.clock = WallClock(cost_latency) if cost_latency is not None else None
+        # fault injection (repro.faults.FaultState); None = the historical
+        # fault-free path, bit-identical to the golden trajectories
+        self.faults = faults
+        self._er = 0  # edge round within the current cloud round
+        self._edge_got = None  # per-group (N,) edges that aggregated this cloud round
         self._errors: Dict[int, object] = {}
-        # static round structure: the (client, edge) membership pairs, in
-        # client-major order.  Participation varies per round but travels in
-        # the segment WEIGHTS, so every device program keeps a fixed shape.
+        self._data_sizes = np.array([c.data_size for c in clients], np.float32)
+        self._build_pair_structure(assignment)
+        self.store = DeviceShardStore(clients) if pipeline == "device" else None
+        self._plan = CohortPlan(clients, self.program) if pipeline == "device" else None
+        if self.tel.enabled:
+            for g, prog in enumerate(self.groups):
+                self.tel.metrics.set_gauge(
+                    f"group_clients/{prog.name}", int((self.group_of == g).sum())
+                )
+
+    def _build_pair_structure(self, assignment) -> None:
+        """(Re)build the round structure from an assignment matrix: the
+        (client, edge) membership pairs in client-major order, their
+        per-architecture-group restrictions, and the SCA fast-path indices.
+        Called once at construction and again whenever fault-driven
+        re-repair (``FaultSpec.reassign``) rewrites the assignment;
+        participation varies per round but travels in the segment WEIGHTS,
+        so every device program keeps a fixed shape between rebuilds."""
         asn = np.asarray(assignment)
+        self.assignment = asn
         pc, pe = np.nonzero(asn)
         self._pair_clients = pc.astype(np.int64)
         self._pair_edges = pe.astype(np.int64)
@@ -231,7 +253,7 @@ class BatchedSyncEngine:
         # the same pair structure restricted to each architecture group (the
         # per-group FedAvg segment call must only see its own clients' rows)
         self._gpairs = []
-        for g in range(n_groups):
+        for g in range(len(self.groups)):
             gm = self.group_of[pc] == g
             self._gpairs.append(
                 (
@@ -241,38 +263,60 @@ class BatchedSyncEngine:
                 )
             )
         self._has_edge = asn.any(axis=1)
-        self._data_sizes = np.array([c.data_size for c in clients], np.float32)
         # SCA fast path: with single-connectivity every DCA start IS an edge
         # row, so starts reduce to one gather instead of a segment mean
         self._single_edge = bool((asn.sum(axis=1) <= 1).all())
         self._client_edge = np.where(self._has_edge, asn.argmax(axis=1), 0).astype(
             np.int64
         )
-        self.store = DeviceShardStore(clients) if pipeline == "device" else None
-        self._plan = CohortPlan(clients, self.program) if pipeline == "device" else None
-        if self.tel.enabled:
-            for g, prog in enumerate(self.groups):
-                self.tel.metrics.set_gauge(
-                    f"group_clients/{prog.name}", int((self.group_of == g).sum())
-                )
+
+    def _maybe_repair(self, b: int) -> None:
+        """Re-repair the assignment when channel drift invalidated memberships."""
+        if not self.faults.spec.reassign:
+            return
+        new_lam, changed = self.faults.repair(b, self.assignment)
+        if len(changed):
+            self._build_pair_structure(new_lam)
+            if self.tel.enabled:
+                self.tel.metrics.inc("faults_reassigned", int(len(changed)))
 
     def _mean(self, rows: List[jnp.ndarray], weights) -> jnp.ndarray:
         return flat_mean(
             jnp.stack(rows), np.asarray(weights, np.float32), backend=self.backend
         )
 
-    def _edge_account(self, participating: np.ndarray) -> None:
+    def _edge_account(self, participating: np.ndarray, failed=None) -> None:
         """Charge one edge round: per architecture group, each group's
         clients pay that group's uplink/downlink payload (one masked
-        ``on_edge_sync`` per group; the round itself counts once)."""
+        ``on_edge_sync`` per group; the round itself counts once).  A
+        ``failed`` mask (fault-injected runs) removes mid-round-lost
+        uploads from the useful totals and charges them as wasted bits;
+        the straggler clock and the energy debit still see every ATTEMPTED
+        client — a lost upload was transmitted and waited for."""
+        success = participating if failed is None else participating & ~failed
         for g in range(len(self.groups)):
-            mask = (self.group_of == g) & participating
+            mask = (self.group_of == g) & success
             self.accountant.on_edge_sync(
                 self.assignment * mask[:, None],
                 uplink_bits=self._uplink_bits[g],
                 downlink_bits=None if len(self.groups) == 1 else self._group_bits[g],
                 count_round=(g == 0),
             )
+        if failed is not None:
+            mc = self.accountant.dca_multicast_overhead
+            for i in np.nonzero(failed)[0]:
+                k = int(np.count_nonzero(self.assignment[i]))
+                if k == 0:
+                    continue
+                self.accountant.on_wasted_upload(
+                    int(i),
+                    self._uplink_bits[self.group_of[i]]
+                    * (1.0 + (mc if k > 1 else 0.0)),
+                    kind="dropped",
+                )
+        if self.faults is not None:
+            self.faults.debit_round(self._round, participating, self.assignment)
+            self.faults.record_gauges(self.tel)
         if self.clock is not None:
             self.clock.on_edge_sync(self.assignment, participating)
 
@@ -304,6 +348,19 @@ class BatchedSyncEngine:
             participating = self.rng.random(m) < self.upp
             if not participating.any():
                 participating[self.rng.integers(0, m)] = True
+            failed = None
+            if self.faults is not None:
+                # churned-out / battery-dead EUs sit the round out; mid-round
+                # losses train but are masked from aggregation.  Keyed fault
+                # streams only — the engine RNG above is untouched.
+                participating &= self.faults.participation(self._round)
+                failed = (
+                    self.faults.failed_uploads(self._round, self._er)
+                    & participating
+                    & self._has_edge
+                )
+                if tel.enabled:
+                    tel.metrics.inc("faults_dropped", int(failed.sum()))
             active = self._has_edge & participating
             # the plan's draw consumes the RNG in client order, mirroring the
             # reference; grouping itself was precomputed at construction
@@ -396,12 +453,18 @@ class BatchedSyncEngine:
                 else:
                     rows = []
                     for k, i in enumerate(job_cids):
-                        rows.append(
-                            compress_flat_upload(
-                                self.compression, self._errors, int(i),
-                                start_rows[k], trained_rows[k],
+                        if failed is not None and failed[i]:
+                            # lost upload: weight-0 row below, and no
+                            # error-feedback update (mirrors the reference,
+                            # which never compresses a lost upload)
+                            rows.append(trained_rows[k])
+                        else:
+                            rows.append(
+                                compress_flat_upload(
+                                    self.compression, self._errors, int(i),
+                                    start_rows[k], trained_rows[k],
+                                )
                             )
-                        )
                         row_of[i] = k
                     upd_matrix = jnp.stack(rows)
             # every edge's FedAvg in ONE segment call over the group's pairs
@@ -410,7 +473,10 @@ class BatchedSyncEngine:
                 clients=len(job_cids), edges=n,
             ) as sp:
                 pc_g, pe_g, pe_g_dev = self._gpairs[gi]
-                part_pairs = participating[pc_g]
+                agg_mask = (
+                    participating if failed is None else participating & ~failed
+                )
+                part_pairs = agg_mask[pc_g]
                 take = row_of[pc_g]
                 if len(take) == upd_matrix.shape[0] and np.array_equal(
                     take, np.arange(len(take))
@@ -432,7 +498,9 @@ class BatchedSyncEngine:
                 edge_mats[gi] = _segment_agg_keep(
                     upd, pe_g_dev, w_dev, has_dev, edge_mats[gi], n, self.backend
                 )
-        self._edge_account(participating)
+                if self._edge_got is not None:
+                    self._edge_got[gi] |= has
+        self._edge_account(participating, failed)
         return edge_mats, loss_chunks
 
     # -- one edge round, host pipeline --------------------------------------
@@ -446,6 +514,16 @@ class BatchedSyncEngine:
             participating = self.rng.random(m) < self.upp
             if not participating.any():
                 participating[self.rng.integers(0, m)] = True
+            failed = None
+            if self.faults is not None:
+                participating &= self.faults.participation(self._round)
+                failed = (
+                    self.faults.failed_uploads(self._round, self._er)
+                    & participating
+                    & self._has_edge
+                )
+                if self.tel.enabled:
+                    self.tel.metrics.inc("faults_dropped", int(failed.sum()))
             # job prep consumes the RNG in client order, mirroring the reference
             jobs, job_edges = [], []
             for i, cl in enumerate(self.clients):
@@ -471,6 +549,8 @@ class BatchedSyncEngine:
             cid = job.client.cid
             gi = self.group_of[cid]
             losses.append(trained.loss[cid])
+            if failed is not None and failed[cid]:
+                continue  # trained, transmitted, lost: masked out of FedAvg
             quantizing = not compressing and job.client.program.quantizes_upload
             transforming = compressing or quantizing
             if compressing:
@@ -498,7 +578,9 @@ class BatchedSyncEngine:
                 edge_rows[gi][j] = flat_mean(
                     mat, np.asarray(new_sizes[(j, gi)], np.float32), backend=self.backend
                 )
-        self._edge_account(participating)
+                if self._edge_got is not None:
+                    self._edge_got[gi][j] = True
+        self._edge_account(participating, failed)
         return losses
 
     # -- distillation fuse ----------------------------------------------------
@@ -545,11 +627,24 @@ class BatchedSyncEngine:
             acc = None
             losses: List = []
             with self.tel.span("cloud_round", round=b, engine=engine_name):
+                if self.faults is not None:
+                    self._maybe_repair(b)
+                    if self.faults.spec.reassign:
+                        edge_sizes = group_edge_sizes(
+                            self.clients, self.assignment, self.group_of
+                        )
+                    self._edge_got = [
+                        np.zeros(n, bool) for _ in range(n_groups)
+                    ]
+                    if self.clock is not None:
+                        # the straggler model reads the round's faded channel
+                        self.clock.latency = self.faults.latency(b)
                 if self.pipeline == "device":
                     edge_mats = [
                         jnp.broadcast_to(row, (n, row.shape[0])) for row in global_rows
                     ]
-                    for _ in range(self.schedule.edge_per_cloud):
+                    for k in range(self.schedule.edge_per_cloud):
+                        self._er = k + 1
                         edge_mats, chunks = self._edge_round_device(edge_mats)
                         losses += chunks  # per-cohort (C,) arrays, still on device
                     if self.distill is not None:
@@ -566,10 +661,28 @@ class BatchedSyncEngine:
                         )
                         if cost:
                             sp.set(**cost)
-                        global_rows = [
-                            flat_mean(edge_mats[g], edge_sizes[g], backend=self.backend)
-                            for g in range(n_groups)
-                        ]
+                        if self.faults is not None:
+                            # degraded-mode reduction: starved edges (no
+                            # upload all cloud round) weigh zero; a fully
+                            # starved group keeps its global row
+                            gw = [
+                                np.asarray(edge_sizes[g], np.float32)
+                                * self._edge_got[g]
+                                for g in range(n_groups)
+                            ]
+                            global_rows = [
+                                flat_mean(edge_mats[g], gw[g], backend=self.backend)
+                                if gw[g].any()
+                                else global_rows[g]
+                                for g in range(n_groups)
+                            ]
+                        else:
+                            global_rows = [
+                                flat_mean(
+                                    edge_mats[g], edge_sizes[g], backend=self.backend
+                                )
+                                for g in range(n_groups)
+                            ]
                     losses = (
                         list(np.concatenate([np.asarray(c) for c in losses]))
                         if losses
@@ -577,15 +690,29 @@ class BatchedSyncEngine:
                     )
                 else:
                     edge_rows = [[row] * n for row in global_rows]
-                    for _ in range(self.schedule.edge_per_cloud):
+                    for k in range(self.schedule.edge_per_cloud):
+                        self._er = k + 1
                         losses += self._edge_round(edge_rows)
                     if self.distill is not None:
                         edge_rows = self._kd_fuse_host(edge_rows)
                     with self.tel.span("cloud_reduce", round=b, groups=n_groups, edges=n):
-                        global_rows = [
-                            self._mean(edge_rows[g], edge_sizes[g])
-                            for g in range(n_groups)
-                        ]
+                        if self.faults is not None:
+                            gw = [
+                                np.asarray(edge_sizes[g], np.float32)
+                                * self._edge_got[g]
+                                for g in range(n_groups)
+                            ]
+                            global_rows = [
+                                self._mean(edge_rows[g], gw[g])
+                                if gw[g].any()
+                                else global_rows[g]
+                                for g in range(n_groups)
+                            ]
+                        else:
+                            global_rows = [
+                                self._mean(edge_rows[g], edge_sizes[g])
+                                for g in range(n_groups)
+                            ]
                 self.accountant.on_cloud_sync(n, bits=cloud_bits)
                 if self.clock is not None:
                     self.clock.on_cloud_sync()

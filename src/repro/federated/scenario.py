@@ -82,6 +82,10 @@ class Scenario:
     # knobs; both None for homogeneous populations
     public: Optional[List[Dataset]] = None
     distill: object = None
+    # default fault model (repro.faults.FaultSpec); None = fault-free.  A
+    # fresh FaultState is built per simulate() call so runs never share
+    # energy balances or dispatch counters
+    faults: object = None
 
     @property
     def is_hetero(self) -> bool:
@@ -137,6 +141,7 @@ class Scenario:
         quorum: float = 0.75,
         pipeline: str = "device",
         distill=None,
+        faults=None,
         telemetry=None,
     ) -> SimResult:
         """Run the scenario through one of the simulation engines.
@@ -161,6 +166,12 @@ class Scenario:
                   heterogeneous-model fuse; None uses the scenario's
                   default (``model_mix=`` scenarios carry one).  Ignored
                   for homogeneous populations.
+        faults:   ``repro.faults.FaultSpec`` override for the fault layer
+                  (client churn, energy budgets, time-varying channels,
+                  retry/timeout policy); ``None`` uses the scenario's
+                  default (``build_scenario(faults=...)``), ``False``
+                  forces the fault-free path.  A fresh ``FaultState`` is
+                  built per call — runs never share energy balances.
         telemetry: the observability knob (``docs/OBSERVABILITY.md``).
                   ``None``/``False`` — off, zero overhead; ``True`` — record
                   in memory (``SimResult.telemetry``); a path — record AND
@@ -170,12 +181,25 @@ class Scenario:
         from repro.telemetry import coerce_telemetry
 
         distill = distill if distill is not None else self.distill
+        spec = self.faults if faults is None else (faults or None)
+        fault_state = None
+        if spec is not None:
+            from repro.faults import FaultSpec, FaultState
+
+            if not isinstance(spec, FaultSpec):
+                raise TypeError(
+                    f"faults must be a repro.faults.FaultSpec, got {type(spec).__name__}"
+                )
+            fault_state = FaultState(
+                spec, self.topo, self.wp, self.model_bits,
+                class_counts=self.class_counts,
+            )
         tel = coerce_telemetry(telemetry)
         try:
             return self._simulate(
                 assignment, cloud_rounds, schedule, seed, upp, track_divergence,
                 eval_every, wall_clock, engine, backend, compression,
-                staleness_decay, quorum, pipeline, distill, tel,
+                staleness_decay, quorum, pipeline, distill, fault_state, tel,
             )
         finally:
             if tel is not None and tel.out_dir is not None:
@@ -198,6 +222,7 @@ class Scenario:
         quorum,
         pipeline,
         distill,
+        faults,
         telemetry,
     ) -> SimResult:
         if engine == "reference":
@@ -206,6 +231,12 @@ class Scenario:
                     raise ValueError(
                         "track_divergence/wall_clock are not defined for "
                         "heterogeneous-model populations"
+                    )
+                if faults is not None:
+                    raise ValueError(
+                        "the hetero reference simulator does not support "
+                        "fault injection; use engine='sync' or 'async' for "
+                        "heterogeneous-model populations under faults"
                     )
                 sim = HeteroHFLSimulation(
                     self.clients,
@@ -231,6 +262,7 @@ class Scenario:
                 track_divergence=track_divergence,
                 cost_latency=self.cost.latency if wall_clock else None,
                 compression=compression,
+                faults=faults,
                 telemetry=telemetry,
             )
             res = sim.run(cloud_rounds, eval_every=eval_every)
@@ -255,6 +287,7 @@ class Scenario:
                 pipeline=pipeline,
                 public_shards=self.public,
                 distill=distill,
+                faults=faults,
                 telemetry=telemetry,
             )
             return sim.run(cloud_rounds, eval_every=eval_every)
@@ -281,6 +314,7 @@ class Scenario:
                 compression=compression,
                 public_shards=self.public,
                 distill=distill,
+                faults=faults,
                 telemetry=telemetry,
             )
             return sim.run(cloud_rounds, eval_every=eval_every)
@@ -371,6 +405,7 @@ def build_scenario(
     fedsgd: bool = False,
     grad_bits: int = 32,
     hparams: Optional[Sequence[Optional[Mapping]]] = None,
+    faults=None,
     seed: int = 0,
     scale: float = 1.0,
     mean_dist: float = 300.0,
@@ -412,6 +447,11 @@ def build_scenario(
     ``max_steps`` — building heterogeneous-hyperparameter populations; the
     engines cohort clients by the resulting tuples.
 
+    ``faults`` (optional) is a ``repro.faults.FaultSpec`` the scenario
+    carries as its default fault model: every ``simulate()`` call then
+    runs under client churn / energy budgets / time-varying channels
+    unless overridden (``simulate(faults=False)`` forces fault-free).
+
     The ``lm_*`` knobs size the sequence-model population; ``scale``
     scales sequences-per-EU there just as it scales samples in the health
     setups.
@@ -448,6 +488,7 @@ def build_scenario(
             fedsgd=fedsgd,
             grad_bits=grad_bits,
             hparams=hparams,
+            faults=faults,
             seed=seed,
             scale=scale,
             mean_dist=mean_dist,
@@ -537,6 +578,7 @@ def build_scenario(
         init_edge=init_edge,
         public=public,
         distill=distill,
+        faults=faults,
     )
 
 
@@ -548,6 +590,7 @@ def _build_lm_scenario(
     fedsgd: bool,
     grad_bits: int,
     hparams: Optional[Sequence[Optional[Mapping]]],
+    faults=None,
     seed: int,
     scale: float,
     mean_dist: float,
@@ -668,4 +711,5 @@ def _build_lm_scenario(
         init_edge=np.asarray(topo.dist).argmin(axis=1),
         public=public,
         distill=distill,
+        faults=faults,
     )

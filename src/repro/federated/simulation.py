@@ -105,6 +105,7 @@ class HFLSimulation:
         central_batch: int = 50,
         cost_latency=None,
         compression: Optional[CompressionSpec] = None,
+        faults=None,
         telemetry=None,
     ):
         self.clients = clients
@@ -116,6 +117,11 @@ class HFLSimulation:
         self.upp = upp
         self.tel = coerce_telemetry(telemetry) or NULL_TELEMETRY
         self._round = 0
+        # fault injection (repro.faults.FaultState); None = the historical
+        # fault-free path, bit-identical to the golden trajectories
+        self.faults = faults
+        self._er = 0  # edge round within the current cloud round
+        self._edge_got = None  # (N,) edges that received >= 1 upload this cloud round
         self.params = self.program.init(jax.random.PRNGKey(seed))
         self.track_divergence = track_divergence
         if track_divergence:
@@ -161,6 +167,20 @@ class HFLSimulation:
             participating = self.rng.random(m) < self.upp
             if not participating.any():
                 participating[self.rng.integers(0, m)] = True
+        failed = None
+        if self.faults is not None:
+            # churned-out / battery-dead EUs sit the round out; among the
+            # rest, a mid-round loss mask marks EUs that train but whose
+            # (single, no-retry) upload dies in the air.  Both masks come
+            # from keyed fault streams — the engine RNG above is untouched.
+            participating &= self.faults.participation(self._round)
+            failed = (
+                self.faults.failed_uploads(self._round, self._er)
+                & participating
+                & np.asarray(self.assignment).any(axis=1)
+            )
+            if self.tel.enabled:
+                self.tel.metrics.inc("faults_dropped", int(failed.sum()))
         new_models: List[List[dict]] = [[] for _ in range(n)]
         new_sizes: List[List[float]] = [[] for _ in range(n)]
         with self.tel.span(
@@ -176,6 +196,8 @@ class HFLSimulation:
                 )
                 upd, loss = cl.local_update(start, self.rng, epochs=self.schedule.local_steps)
                 losses.append(loss)
+                if failed is not None and failed[i]:
+                    continue  # trained, transmitted, lost: masked out below
                 upd = self._compress_upload(cl.cid, start, upd)
                 for j in edges:
                     new_models[j].append(upd)
@@ -184,9 +206,25 @@ class HFLSimulation:
             for j in range(n):
                 if new_models[j]:
                     edge_params[j] = edge_aggregate(new_models[j], new_sizes[j])
+                    if self._edge_got is not None:
+                        self._edge_got[j] = True
+        success = participating if failed is None else participating & ~failed
         self.accountant.on_edge_sync(
-            self.assignment * participating[:, None], uplink_bits=self._uplink_bits
+            self.assignment * success[:, None], uplink_bits=self._uplink_bits
         )
+        if self.faults is not None:
+            mc = self.accountant.dca_multicast_overhead
+            for i in np.nonzero(failed)[0]:
+                k = int(np.count_nonzero(self.assignment[i]))
+                if k == 0:
+                    continue
+                self.accountant.on_wasted_upload(
+                    int(i),
+                    self._uplink_bits * (1.0 + (mc if k > 1 else 0.0)),
+                    kind="dropped",
+                )
+            self.faults.debit_round(self._round, participating, self.assignment)
+            self.faults.record_gauges(self.tel)
         if self.clock is not None:
             self.clock.on_edge_sync(self.assignment, participating)
         return losses
@@ -197,14 +235,27 @@ class HFLSimulation:
             self.program,
         )
 
+    def _maybe_repair(self, b: int) -> None:
+        """Re-repair the assignment when channel drift invalidated memberships."""
+        if not self.faults.spec.reassign:
+            return
+        new_lam, changed = self.faults.repair(b, self.assignment)
+        if len(changed):
+            self.assignment = new_lam
+            if self.tel.enabled:
+                self.tel.metrics.inc("faults_reassigned", int(len(changed)))
+
+    def _edge_data_sizes(self) -> List[float]:
+        return [
+            sum(c.data_size for i, c in enumerate(self.clients) if self.assignment[i, j])
+            for j in range(self.assignment.shape[1])
+        ]
+
     def run(self, cloud_rounds: int, eval_every: int = 1) -> SimResult:
         n = self.assignment.shape[1]
         history: List[RoundMetrics] = []
         global_params = self.params
-        edge_sizes = [
-            sum(c.data_size for i, c in enumerate(self.clients) if self.assignment[i, j])
-            for j in range(n)
-        ]
+        edge_sizes = self._edge_data_sizes()
         comm = CommDelta(self.accountant) if self.tel.enabled else None
         wall_accum = sim_accum = 0.0
         for b in range(1, cloud_rounds + 1):
@@ -213,14 +264,36 @@ class HFLSimulation:
             self._round = b
             acc = None
             with self.tel.span("cloud_round", round=b, engine="reference"):
+                if self.faults is not None:
+                    self._maybe_repair(b)
+                    if self.faults.spec.reassign:
+                        edge_sizes = self._edge_data_sizes()
+                    self._edge_got = np.zeros(n, bool)
+                    if self.clock is not None:
+                        # the straggler model reads the round's faded channel
+                        self.clock.latency = self.faults.latency(b)
                 edge_params = [global_params] * n
                 losses: List[float] = []
-                for _ in range(self.schedule.edge_per_cloud):
+                for k in range(self.schedule.edge_per_cloud):
+                    self._er = k + 1
                     losses += self._edge_round(edge_params)
                 with self.tel.span("cloud_reduce", round=b, edges=n):
-                    global_params = cloud_aggregate(
-                        edge_params, [max(s, 1) for s in edge_sizes]
-                    )
+                    if self.faults is not None:
+                        # degraded-mode reduction: edges that received no
+                        # upload all cloud round still hold the stale global
+                        # model — skip their contribution (weight 0) rather
+                        # than dilute the mean with it; if EVERY edge
+                        # starved, the global model simply stands
+                        w = [
+                            s if self._edge_got[j] else 0.0
+                            for j, s in enumerate(edge_sizes)
+                        ]
+                        if any(w):
+                            global_params = cloud_aggregate(edge_params, w)
+                    else:
+                        global_params = cloud_aggregate(
+                            edge_params, [max(s, 1) for s in edge_sizes]
+                        )
                 self.accountant.on_cloud_sync(n)
                 if self.clock is not None:
                     self.clock.on_cloud_sync()

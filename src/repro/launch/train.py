@@ -11,17 +11,34 @@ Two modes:
 
 ``--telemetry DIR`` records the run's telemetry spans/metrics and writes
 trace.json / rounds.jsonl / summary.txt there (``docs/OBSERVABILITY.md``);
-``--engine`` picks the simulation engine for the paper experiment.
+``--engine`` picks the simulation engine for the paper experiment;
+``--faults chaos`` runs it under the fault-injection preset (client churn,
+mid-round upload losses with async retries, finite energy budgets,
+time-varying channels — ``repro.faults``).
 """
 from __future__ import annotations
 
 import argparse
+
+# fault-injection presets for --faults (FaultSpec kwargs; "chaos" is the CI
+# chaos smoke: >=20% churn, lossy uplinks, finite batteries, fading drift)
+FAULT_PRESETS = {
+    "chaos": dict(
+        p_drop=0.25, p_rejoin=0.5, p_fail=0.2, max_retries=2, backoff_s=0.1,
+        energy_uploads=6.0, refade_rounds=1, drift_rate=0.05,
+    ),
+}
 
 
 def run_paper(args) -> None:
     from repro.core.hfl import HFLSchedule
     from repro.federated import build_scenario
 
+    faults = None
+    if args.faults:
+        from repro.faults import FaultSpec
+
+        faults = FaultSpec(seed=args.seed, **FAULT_PRESETS[args.faults])
     sc = build_scenario(args.dataset, scale=args.scale, seed=args.seed)
     a = sc.assign(args.strategy)
     print(f"strategy={args.strategy} KLD={a.kld_total:.3f}")
@@ -31,6 +48,7 @@ def run_paper(args) -> None:
         schedule=HFLSchedule(args.local_steps, args.edge_per_cloud),
         seed=args.seed,
         engine=args.engine,
+        faults=faults,
         telemetry=args.telemetry or None,
     )
     for m in res.history:
@@ -38,6 +56,14 @@ def run_paper(args) -> None:
         if m.sim_seconds:
             extra += f" sim={m.sim_seconds:.2f}s"
         print(f"round {m.cloud_round}: acc={m.test_acc:.3f}{extra}")
+    if faults is not None:
+        t = res.accountant.totals()
+        print(
+            f"faults: wasted={t['wasted_bits'] / 1e6:.2f}Mb "
+            f"dropped={t['dropped_uploads']:.0f} "
+            f"retried={t['retried_uploads']:.0f} "
+            f"abandoned={t['abandoned_uploads']:.0f}"
+        )
     if res.telemetry is not None:
         print(res.telemetry.summary())
         if args.telemetry:
@@ -95,6 +121,8 @@ def main() -> None:
     ap.add_argument("--local-steps", type=int, default=1)
     ap.add_argument("--edge-per-cloud", type=int, default=1)
     ap.add_argument("--scale", type=float, default=0.05)
+    ap.add_argument("--faults", default="", choices=("", *FAULT_PRESETS),
+                    help="fault-injection preset for the paper experiment")
     ap.add_argument("--arch", default="")
     ap.add_argument("--full-config", action="store_true")
     ap.add_argument("--steps", type=int, default=20)

@@ -4,8 +4,32 @@ import jax
 import jax.numpy as jnp
 import pytest
 
-hypothesis = pytest.importorskip("hypothesis")
-from hypothesis import given, settings, strategies as st  # noqa: E402
+try:  # property tests use hypothesis when present; closed-form checks never do
+    from hypothesis import given, settings, strategies as st
+
+    HAVE_HYPOTHESIS = True
+except ImportError:  # pragma: no cover - depends on environment
+    HAVE_HYPOTHESIS = False
+
+    def settings(**_kw):  # fall back to a few fixed examples
+        return lambda fn: fn
+
+    def given(*strats):
+        def deco(fn):
+            def run():
+                for pick in (lambda s: s.lo, lambda s: s.mid, lambda s: s.hi):
+                    fn(*(pick(s) for s in strats))
+
+            return run
+
+        return deco
+
+    class _Range:
+        def __init__(self, lo, hi):
+            self.lo, self.hi, self.mid = lo, hi, 0.5 * (lo + hi)
+
+    class st:  # noqa: N801 - mimic hypothesis.strategies namespace
+        floats = staticmethod(lambda lo, hi: _Range(lo, hi))
 
 from repro.wireless import (
     WirelessParams,
@@ -77,3 +101,102 @@ def test_cost_matrices_shapes_and_fallback():
     assert cost.energy.shape == (9, 4)
     # even at extreme distance every EU keeps >= 1 feasible edge (fallback)
     assert cost.feasible.any(axis=1).all()
+
+
+# -- eq. 10-16 closed-form spot checks ----------------------------------------
+# Every identity below re-derives the paper's formula with plain python
+# floats and checks the jnp implementation against it at one concrete
+# operating point (d = 300 m, |h|^2 = 0.5, B = 1 MHz, P^t = 0.2 W).
+
+D, H2, BW, PTX, BITS = 300.0, 0.5, 1e6, 0.2, 1e6
+
+
+def test_eq15_channel_gain_closed_form():
+    want = P.theta * P.omega * D ** (-P.path_loss_exp) * H2
+    got = float(channel_gain(jnp.asarray(D), jnp.asarray(H2), P))
+    assert got == pytest.approx(want, rel=1e-6)
+    # theta itself: -1.5 / ln(5 BER)
+    assert P.theta == pytest.approx(-1.5 / np.log(5.0 * P.ber), rel=1e-12)
+
+
+def test_eq13_shannon_rate_closed_form():
+    g = P.theta * P.omega * D ** (-P.path_loss_exp) * H2
+    want = BW * np.log2(1.0 + PTX * g / (P.noise_density * BW))
+    got = float(shannon_rate(PTX, jnp.asarray(g), jnp.asarray(BW), P))
+    assert got == pytest.approx(want, rel=1e-6)
+
+
+def test_eq14_tx_power_closed_form():
+    g = P.theta * P.omega * D ** (-P.path_loss_exp) * H2
+    r = 2e6  # target rate, bit/s
+    want = P.noise_density * BW / g * (2.0 ** (r / BW) - 1.0)
+    got = float(tx_power(jnp.asarray(r), jnp.asarray(g), jnp.asarray(BW), P))
+    assert got == pytest.approx(want, rel=1e-6)
+
+
+def test_eq16_tx_energy_closed_form():
+    g = P.theta * P.omega * D ** (-P.path_loss_exp) * H2
+    r = 2e6
+    want = P.noise_density * BW / g * (2.0 ** (r / BW) - 1.0) * BITS / r
+    got = float(tx_energy(BITS, jnp.asarray(r), jnp.asarray(g), jnp.asarray(BW), P))
+    assert got == pytest.approx(want, rel=1e-6)
+
+
+def test_eq10_latency_closed_form():
+    r = 2.5e6
+    want = BITS / r + P.xi_access_delay
+    got = float(uplink_latency(BITS, jnp.asarray(r), P))
+    assert got == pytest.approx(want, rel=1e-6)
+
+
+def test_compute_time_closed_form():
+    want = P.v_constant * np.log(1.0 / P.local_accuracy) * P.cpu_cycles_per_sample * 500.0 / 1e9
+    got = float(computation_time(jnp.asarray(500.0), jnp.asarray(1e9), P))
+    assert got == pytest.approx(want, rel=1e-6)
+
+
+# -- zero-feasible-edge fallback structure ------------------------------------
+
+
+def test_zero_feasible_fallback_is_one_hot_argmin():
+    """At absurd distances NOTHING satisfies (20)-(21); every row must fall
+    back to a one-hot at argmin(total_latency + 1e3 * energy)."""
+    topo = sample_topology(jax.random.PRNGKey(3), 6, 3, mean_dist=50000.0)
+    cost = build_cost_matrices(topo, model_bits=1e7, p=P)
+    raw_feasible = (cost.latency <= P.max_latency) & (cost.energy <= P.max_energy)
+    assert not raw_feasible.any(), "scenario not extreme enough to trigger fallback"
+    assert (cost.feasible.sum(axis=1) == 1).all()
+    best = np.argmin(cost.latency + 1e3 * cost.energy, axis=1)
+    assert (cost.feasible.argmax(axis=1) == best).all()
+
+
+def test_fallback_untouched_when_feasible_exists():
+    """EUs with feasible edges keep their full feasible SET (the fallback
+    must not collapse them to one-hot)."""
+    topo = sample_topology(jax.random.PRNGKey(0), 12, 4, mean_dist=200.0)
+    cost = build_cost_matrices(topo, model_bits=1e5, p=P)
+    raw = (cost.latency <= P.max_latency) & (cost.energy <= P.max_energy)
+    has = raw.any(axis=1)
+    assert has.any()
+    assert (cost.feasible[has] == raw[has]).all()
+
+
+# -- energy / latency monotonicity in distance --------------------------------
+
+
+def _point_costs(d: float):
+    g = channel_gain(jnp.asarray(d), jnp.asarray(H2), P)
+    r = shannon_rate(PTX, g, jnp.asarray(BW), P)
+    return (
+        float(uplink_latency(BITS, r, P)),
+        float(tx_energy(BITS, r, g, jnp.asarray(BW), P)),
+    )
+
+
+@settings(max_examples=30, deadline=None)
+@given(st.floats(50, 3000))
+def test_latency_and_energy_increase_with_distance(d):
+    lat1, en1 = _point_costs(d)
+    lat2, en2 = _point_costs(d * 1.5)
+    assert lat2 > lat1
+    assert en2 > en1
