@@ -26,6 +26,27 @@ from repro.telemetry.trace import Tracer
 
 QUICK = os.environ.get("BENCH_FULL", "") == ""
 
+
+def peak_rss_bytes() -> int:
+    """Process high-water RSS in bytes (``ru_maxrss``; KB on Linux).
+
+    Monotonic: it never goes down, so per-scale-point memory curves need a
+    fresh subprocess per point (see ``benchmarks/streaming_point.py``)."""
+    import resource
+
+    ru = resource.getrusage(resource.RUSAGE_SELF).ru_maxrss
+    return int(ru) * (1024 if sys.platform.startswith("linux") else 1)
+
+
+def device_buffer_bytes() -> int:
+    """Total bytes of live jax device buffers (0 if jax is unavailable)."""
+    try:
+        import jax
+
+        return int(sum(a.nbytes for a in jax.live_arrays()))
+    except Exception:
+        return 0
+
 # JSON results default to the repo root (committed alongside the code);
 # BENCH_OUT redirects them (e.g. to a scratch dir in CI artifacts).
 OUT_DIR = Path(os.environ.get("BENCH_OUT", Path(__file__).resolve().parent.parent))
@@ -68,6 +89,10 @@ def emit(
     if repeats is not None:
         row["repeats"] = repeats
     row.update(extra)  # bench-specific fields (e.g. wasted_frac)
+    # memory stamp: RSS high-water + live device buffers at emit time, so
+    # every BENCH_*.json row carries the footprint alongside the timing
+    row.setdefault("peak_rss_bytes", peak_rss_bytes())
+    row.setdefault("device_bytes", device_buffer_bytes())
     _rows.append(row)
     print(f"{name},{us_per_call:.1f},{derived}", flush=True)
 

@@ -286,6 +286,48 @@ def bench_faults(m: int, n_edges: int) -> Dict[str, float]:
     return out
 
 
+def bench_streaming() -> None:
+    """Streaming-population scale sweep: M = 100k and 1M, fresh process per
+    point (``ru_maxrss`` is a process-lifetime high-water mark — see
+    ``benchmarks/streaming_point.py``).  The acceptance shape: peak RSS flat
+    in M (the engine holds O(cohort) data + ~8 bytes/client of int32
+    metadata) and clients/sec a function of cohort size, not M."""
+    import json as _json
+    import subprocess
+    import sys as _sys
+
+    sizes = [100_000, 1_000_000]
+    cohort, rounds = (64, 2) if QUICK else (256, 5)
+    points = []
+    for m in sizes:
+        cmd = [
+            _sys.executable, "-m", "benchmarks.streaming_point",
+            "--m", str(m), "--cohort", str(cohort), "--rounds", str(rounds),
+        ]
+        out = subprocess.run(cmd, capture_output=True, text=True, check=True)
+        p = _json.loads(out.stdout.strip().splitlines()[-1])
+        points.append(p)
+        emit(
+            f"engine_stream_m{m}",
+            p["wall_s"] / rounds * 1e6,
+            f"{p['clients_per_sec']:.1f} clients/sec cohort={cohort} "
+            f"rss={p['peak_rss_bytes'] / 1e6:.0f}MB program=cnn-micro",
+            peak_rss_bytes=p["peak_rss_bytes"],
+            device_bytes=p["device_bytes"],
+            page_misses=p["page_misses"],
+            page_evictions=p["page_evictions"],
+            cohort=cohort,
+            m=m,
+        )
+    rss = [x["peak_rss_bytes"] for x in points]
+    ratio = max(rss) / min(rss)
+    emit(
+        "engine_stream_mem_flatness", 0.0,
+        f"peak-RSS max/min {ratio:.3f} across M=100k..1M (target <= 1.10)",
+        mem_ratio=round(ratio, 4),
+    )
+
+
 def main(model: Optional[str] = None) -> None:
     start = mark()
     if model is None:
@@ -330,11 +372,19 @@ if __name__ == "__main__":
     ap.add_argument("--faults", action="store_true",
                     help="bench ONLY the fault-injected scale point (20% "
                          "churn, lossy retried uplinks, finite batteries)")
+    ap.add_argument("--streaming", action="store_true",
+                    help="bench ONLY the streaming-population scale sweep "
+                         "(M=100k and 1M, lazy shards, cohort sampling, "
+                         "paged store; one subprocess per point)")
     args = ap.parse_args()
     print("name,us_per_call,derived")
     if args.faults:
         start = mark()
         bench_faults(128, 8)
         dump_json("BENCH_engine_faults.json", start)
+    elif args.streaming:
+        start = mark()
+        bench_streaming()
+        dump_json("BENCH_engine_streaming.json", start)
     else:
         main(model=args.model)

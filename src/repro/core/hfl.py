@@ -89,6 +89,7 @@ class CommAccountant:
         uplink_bits: "float | None" = None,
         downlink_bits: "float | None" = None,
         count_round: bool = True,
+        row_ids: "np.ndarray | None" = None,
     ) -> None:
         """One synchronous edge round.  ``uplink_bits`` overrides the per-EU
         upload payload (e.g. a ``CompressionSpec.bits`` figure); the downlink
@@ -97,7 +98,10 @@ class CommAccountant:
         architecture's model, so the hetero layers charge each program group
         with its own payload via one masked call per group —
         ``count_round=False`` on all but the first so the round is still
-        counted once)."""
+        counted once).  ``row_ids`` maps matrix rows to true client ids —
+        the streaming engine charges a compact (cohort, N) matrix instead
+        of the (M, N) population matrix, so per-EU attribution needs the
+        explicit id column."""
         if count_round:
             self.edge_rounds += 1
         payload = self.model_bits if uplink_bits is None else uplink_bits
@@ -110,8 +114,9 @@ class CommAccountant:
                 1.0 + (self.dca_multicast_overhead if len(edges) > 1 else 0.0)
             )
             down = down_payload * len(edges)
-            self.eu_bits_up[i] = self.eu_bits_up.get(i, 0.0) + up
-            self.eu_bits_down[i] = self.eu_bits_down.get(i, 0.0) + down
+            key = i if row_ids is None else int(row_ids[i])
+            self.eu_bits_up[key] = self.eu_bits_up.get(key, 0.0) + up
+            self.eu_bits_down[key] = self.eu_bits_down.get(key, 0.0) + down
 
     # -- fine-grained events for the asynchronous engine ---------------------
     def on_eu_exchange(self, i: int, up_bits: float = 0.0, down_bits: float = 0.0) -> None:

@@ -17,10 +17,18 @@ module                role
                       plain-XLA contractions (``backend="reference"``)
 ``store``             ``DeviceShardStore`` — all client shards padded into
                       one (M, n_max, L, Ch) device array; cohort batches
-                      gathered on device from int32 sample indices
+                      gathered on device from int32 sample indices.
+                      ``PagedShardStore`` — the streaming variant: a
+                      bounded LRU working set paged from a lazy
+                      ``ShardSource``, O(cohort) device memory
 ``cohort``            same-shape client cohorts trained by one
                       ``vmap(_local_epoch)`` call instead of M sequential
-                      jitted calls
+                      jitted calls; ``StreamCohortPlan`` derives the
+                      grouping vectorized from an (M,) sizes array
+``stream_sim``        ``StreamSyncEngine`` — population M as a streaming
+                      axis: lazy shards, per-round cohort sampling
+                      (``CohortSpec``), paged device store; memory and
+                      round time scale with cohort size, not M
 ``events``            deterministic (time, seq) heap for discrete events
 ``sync_sim``          ``BatchedSyncEngine`` — reference semantics, batched
                       speed; ``pipeline="device"`` (default) runs a cloud
@@ -42,7 +50,14 @@ Select via ``Scenario.simulate(..., engine="sync"|"async")``; mixed-model
 populations come from ``build_scenario(model_mix={...})``.
 """
 from repro.engine.async_sim import AsyncHFLEngine
-from repro.engine.cohort import LocalJob, draw_batch_indices, make_job, pack_for, run_cohorts
+from repro.engine.cohort import (
+    LocalJob,
+    StreamCohortPlan,
+    draw_batch_indices,
+    make_job,
+    pack_for,
+    run_cohorts,
+)
 from repro.engine.distill import (
     DistillSpec,
     distill_edge,
@@ -53,7 +68,8 @@ from repro.engine.distill import (
 )
 from repro.engine.events import Event, EventQueue
 from repro.engine.flatten import BACKENDS, FlatPack, flat_mean, flat_segment_mean
-from repro.engine.store import DeviceShardStore
+from repro.engine.store import DeviceShardStore, PagedShardStore
+from repro.engine.stream_sim import StreamSyncEngine
 from repro.engine.sync_sim import PIPELINES, BatchedSyncEngine
 
 __all__ = [
@@ -67,6 +83,9 @@ __all__ = [
     "FlatPack",
     "LocalJob",
     "PIPELINES",
+    "PagedShardStore",
+    "StreamCohortPlan",
+    "StreamSyncEngine",
     "distill_edge",
     "distill_fuse_flat",
     "draw_batch_indices",

@@ -142,6 +142,8 @@ class AsyncHFLEngine:
         distill: Optional[DistillSpec] = None,
         faults=None,
         telemetry=None,
+        cohort=None,
+        server_momentum: float = 0.0,
     ):
         if not (0.0 < quorum <= 1.0):
             raise ValueError(f"quorum must be in (0, 1], got {quorum}")
@@ -155,6 +157,19 @@ class AsyncHFLEngine:
         self.schedule = schedule
         self.rng = np.random.default_rng(seed)
         self.upp = upp
+        # per-round cohort sampling (keyed side-channel draws, engine RNG
+        # untouched).  The async engine dispatches once per CLOUD round, so
+        # the cohort is drawn at edge-round key 1 — the same members the
+        # sync engines would draw for their first edge round.
+        self.cohort = cohort
+        if cohort is not None and upp != 1.0:
+            raise ValueError(
+                "cohort sampling and UPP are both participation models; "
+                "use upp=1.0 with a CohortSpec"
+            )
+        # cloud-side momentum on the aggregated delta (0.0 = plain FedAvg)
+        self.server_momentum = float(server_momentum)
+        self._srv_vel = None
         self.staleness_decay = staleness_decay
         self.quorum = quorum
         self.backhaul_s = backhaul_s
@@ -206,6 +221,27 @@ class AsyncHFLEngine:
         return flat_mean(
             jnp.stack(rows), np.asarray(weights, np.float32), backend=self.backend
         )
+
+    def _apply_server_momentum(
+        self, old_rows: List[jnp.ndarray], new_rows: List[jnp.ndarray]
+    ) -> List[jnp.ndarray]:
+        """Cloud momentum in delta form per group row (see the sync engine's
+        counterpart); a row that stood under faults skips the velocity
+        update instead of decaying it."""
+        if not self.server_momentum:
+            return new_rows
+        if self._srv_vel is None:
+            self._srv_vel = [jnp.zeros_like(r) for r in new_rows]
+        mu = self.server_momentum
+        out = []
+        for g, (old, new) in enumerate(zip(old_rows, new_rows)):
+            if new is old:
+                out.append(old)
+                continue
+            v = mu * self._srv_vel[g] + (new - old)
+            self._srv_vel[g] = v
+            out.append(old + v)
+        return out
 
 
     def _dispatch(self, client_ids: List[int], edges: Dict[int, _EdgeState]):
@@ -475,9 +511,14 @@ class AsyncHFLEngine:
                     # faded channel
                     self._lat = self.faults.latency(b)
                 with tel.span("assignment", round=b) as sp:
-                    participating = self.rng.random(m) < self.upp
-                    if not participating.any():
-                        participating[self.rng.integers(0, m)] = True
+                    if self.cohort is not None:
+                        participating = self.cohort.mask(
+                            b, 1, assignment=self.assignment
+                        )
+                    else:
+                        participating = self.rng.random(m) < self.upp
+                        if not participating.any():
+                            participating[self.rng.integers(0, m)] = True
                     if self.faults is not None:
                         participating &= self.faults.participation(b)
                     # every edge starts the cloud round from its group's
@@ -587,14 +628,14 @@ class AsyncHFLEngine:
                             np.asarray(edge_sizes[g], np.float32) * got
                             for g in range(n_groups)
                         ]
-                        global_rows = [
+                        new_rows = [
                             flat_mean(self._edge_mats[g], gw[g], backend=self.backend)
                             if gw[g].any()
                             else global_rows[g]
                             for g in range(n_groups)
                         ]
                     else:
-                        global_rows = [
+                        new_rows = [
                             flat_mean(
                                 self._edge_mats[g],
                                 np.asarray(edge_sizes[g], np.float32),
@@ -602,6 +643,7 @@ class AsyncHFLEngine:
                             )
                             for g in range(n_groups)
                         ]
+                    global_rows = self._apply_server_momentum(global_rows, new_rows)
                 self.accountant.on_cloud_sync(n, bits=cloud_bits)
                 if b % eval_every == 0 or b == cloud_rounds:
                     with tel.span("eval", round=b) as sp:

@@ -546,3 +546,93 @@ class CohortPlan:
                     idx = np.concatenate([idx, rng.integers(0, n, need - n)])
                 g.idx[c, e] = idx[:need].reshape(g.steps, g.batch)
         return groups, np.asarray(passthrough, np.int64)
+
+
+class StreamCohortPlan:
+    """``CohortPlan`` over an analytic population: no per-client objects.
+
+    ``CohortPlan`` loops over M ``FLClient`` objects at construction — an
+    O(M) python pass that alone breaks the streaming budget at M=1M.  The
+    stream plan takes the source's (M,) ``sizes`` array plus homogeneous
+    hyperparameters and derives every client's padded step count in one
+    vectorized ``searchsorted`` over the step buckets.  :meth:`draw` then
+    works on the round's *member id list* (the cohort) instead of an (M,)
+    active mask: RNG consumption replicates ``draw_batch_indices`` per
+    member, in ascending client order — draw-for-draw what ``CohortPlan``
+    consumes for the same member set, so stream and sync cohort runs share
+    one trajectory.
+    """
+
+    def __init__(
+        self,
+        sizes: np.ndarray,
+        program: ClientProgram,
+        *,
+        batch_size: int = 10,
+        lr: float = 1e-3,
+        max_steps: int = 128,
+    ):
+        from repro.federated.client import _BUCKETS
+
+        self.program = program
+        self.batch = int(batch_size)
+        self.lr = float(lr)
+        self.max_steps = int(max_steps)
+        # shares the source's (M,) sizes array — the plan holds no O(M)
+        # state of its own; step buckets are derived per cohort on demand
+        self.sizes = np.asarray(sizes)
+        self._buckets = np.asarray(_BUCKETS, np.int64)
+
+    def steps_for(self, members: np.ndarray) -> np.ndarray:
+        """Padded step count per member (FLClient._bucket, vectorized)."""
+        s = self.sizes[members].astype(np.int64)
+        if self.program.single_step:
+            return (s > 0).astype(np.int64)
+        raw = np.clip((s + self.batch - 1) // self.batch, 1, self.max_steps)
+        pos = np.minimum(
+            np.searchsorted(self._buckets, raw, side="left"),
+            len(self._buckets) - 1,
+        )
+        return np.where(s > 0, self._buckets[pos], 0)
+
+    def draw(
+        self, rng: np.random.Generator, members: np.ndarray, epochs: int
+    ) -> Tuple[List[_PlanGroup], np.ndarray]:
+        """(groups, passthrough) for the cohort ``members`` (sorted ids)."""
+        epochs = 1 if self.program.single_step else int(epochs)
+        members = np.asarray(members, np.int64)
+        steps_of = dict(zip(members.tolist(), self.steps_for(members).tolist()))
+        grouped: Dict[int, List[int]] = {}
+        passthrough: List[int] = []
+        for i in members:
+            if self.sizes[i] == 0:
+                passthrough.append(int(i))
+            else:
+                grouped.setdefault(steps_of[int(i)], []).append(int(i))
+        groups = [
+            _PlanGroup(
+                members=np.asarray(ids, np.int64),
+                idx=np.zeros((len(ids), epochs, steps, self.batch), np.int32),
+                steps=steps,
+                batch=self.batch,
+                lr=self.lr,
+                program=self.program,
+            )
+            for steps, ids in grouped.items()
+        ]
+        slot = {}
+        for g in groups:
+            for c, i in enumerate(g.members):
+                slot[int(i)] = (g, c)
+        for i in np.asarray(members, np.int64):  # draws in global client order
+            if self.sizes[i] == 0:
+                continue
+            g, c = slot[int(i)]
+            n = int(self.sizes[i])
+            need = g.steps * g.batch
+            for e in range(epochs):
+                idx = rng.permutation(n)
+                if need > n:
+                    idx = np.concatenate([idx, rng.integers(0, n, need - n)])
+                g.idx[c, e] = idx[:need].reshape(g.steps, g.batch)
+        return groups, np.asarray(passthrough, np.int64)

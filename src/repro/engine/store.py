@@ -27,6 +27,7 @@ avoids the store entirely.
 """
 from __future__ import annotations
 
+from collections import OrderedDict
 from typing import List, Sequence, Tuple
 
 import jax
@@ -136,6 +137,153 @@ class DeviceShardStore:
         return _store_gather(
             self.x, self.y, jnp.asarray(cids, jnp.int32), jnp.asarray(idx, jnp.int32)
         )
+
+
+class PagedShardStore:
+    """Bounded device working set over a lazy :class:`ShardSource`.
+
+    ``DeviceShardStore`` is O(M) device memory — at M=1M the padded
+    ``(M, n_max, *feat)`` array alone dwarfs any host.  The paged store
+    keeps a fixed ``(capacity, n_max, *feat)`` slab plus an LRU slot map:
+    :meth:`gather` first *ensures* the round's cohort is resident (one
+    batched host->device scatter for the misses, shards synthesized on
+    demand from the source), then runs the same jitted ``_store_gather``
+    over slot ids instead of client ids.  Memory is O(cohort), not O(M),
+    and because ``source.shard(cid)`` is pure in ``(seed, cid)``, an
+    evicted client rehydrates bit-identically later.
+
+    ``capacity`` should comfortably exceed the cohort size (a cohort larger
+    than the slab cannot be resident at once and raises).  Hit/miss/eviction
+    counters expose paging behaviour to benchmarks and tests.  Client ids
+    within one ``ensure`` call must be unique (cohorts are).
+    """
+
+    def __init__(self, source, capacity: int, n_max: "int | None" = None):
+        sizes = np.asarray(source.sizes)
+        if len(sizes) == 0:
+            raise ValueError("PagedShardStore needs a non-empty source")
+        self.source = source
+        self.sizes = sizes
+        self.capacity = int(min(capacity, len(sizes)))
+        if self.capacity < 1:
+            raise ValueError("PagedShardStore needs capacity >= 1")
+        self.n_max = int(n_max if n_max is not None else max(1, sizes.max()))
+        feat = tuple(source.feat_shape)
+        self._feat = feat
+        self._np_dtype = np.dtype(source.feat_dtype)
+        self.x = jnp.zeros((self.capacity, self.n_max) + feat, self._np_dtype)
+        self.y = jnp.zeros((self.capacity, self.n_max), jnp.int32)
+        self._slot_of: dict = {}  # cid -> slot
+        self._lru: OrderedDict = OrderedDict()  # cid -> None, order = recency
+        self._free = list(range(self.capacity - 1, -1, -1))
+        self.hits = 0
+        self.misses = 0
+        self.evictions = 0
+
+    @classmethod
+    def from_shards(cls, shards: Sequence, capacity: int):
+        """Paged store over already-materialized shards (parity tests)."""
+        return cls(_ShardListSource(list(shards)), capacity)
+
+    @property
+    def device_bytes(self) -> int:
+        return int(self.x.nbytes) + int(self.y.nbytes)
+
+    @property
+    def n_clients(self) -> int:
+        return len(self.sizes)
+
+    def _take_slot(self) -> int:
+        if self._free:
+            return self._free.pop()
+        victim, _ = self._lru.popitem(last=False)
+        self.evictions += 1
+        return self._slot_of.pop(victim)
+
+    def ensure(self, cids) -> np.ndarray:
+        """Page the given clients in; return their (C,) slot ids.
+
+        Residents are touched (moved to MRU) *before* any eviction, so a
+        miss can never evict a slot this same call needs.
+        """
+        cids = np.asarray(cids, np.int64)
+        if len(cids) > self.capacity:
+            raise ValueError(
+                f"cohort of {len(cids)} exceeds paged-store capacity {self.capacity}"
+            )
+        slots = np.empty(len(cids), np.int64)
+        missing: List[int] = []
+        for p, c in enumerate(cids.tolist()):
+            s = self._slot_of.get(c)
+            if s is None:
+                missing.append(p)
+            else:
+                slots[p] = s
+                self.hits += 1
+                self._lru.move_to_end(c)
+        if missing:
+            bx = np.zeros((len(missing), self.n_max) + self._feat, self._np_dtype)
+            by = np.zeros((len(missing), self.n_max), np.int32)
+            for k, p in enumerate(missing):
+                c = int(cids[p])
+                shard = self.source.shard(c)
+                n = len(shard)
+                if n > self.n_max:
+                    raise ValueError(f"shard {c} ({n} samples) exceeds n_max {self.n_max}")
+                bx[k, :n] = shard.x
+                by[k, :n] = shard.y
+                s = self._take_slot()
+                self._slot_of[c] = s
+                self._lru[c] = None
+                slots[p] = s
+                self.misses += 1
+            # one batched scatter per ensure(): host->device traffic is the
+            # round's misses only, never the population.  The miss batch is
+            # padded to a power of two (floor 16, capped at capacity) by
+            # repeating row 0 — same slot, same data, so the duplicate
+            # writes are idempotent — because a scatter compiles per
+            # distinct row count and miss counts vary every round.
+            k = len(missing)
+            kp = min(16 if k <= 16 else 1 << (k - 1).bit_length(), self.capacity)
+            ms = slots[missing]
+            if kp > k:
+                pad = kp - k
+                ms = np.concatenate([ms, np.repeat(ms[:1], pad)])
+                bx = np.concatenate([bx, np.repeat(bx[:1], pad, axis=0)])
+                by = np.concatenate([by, np.repeat(by[:1], pad, axis=0)])
+            sl = jnp.asarray(ms, jnp.int32)
+            self.x = self.x.at[sl].set(jnp.asarray(bx))
+            self.y = self.y.at[sl].set(jnp.asarray(by))
+        return slots
+
+    def gather(self, cids, idx) -> Tuple[jnp.ndarray, jnp.ndarray]:
+        """cids: (C,) client ids; idx: (C, steps, batch) in-shard indices."""
+        slots = self.ensure(cids)
+        return _store_gather(
+            self.x, self.y, jnp.asarray(slots, jnp.int32), jnp.asarray(idx, jnp.int32)
+        )
+
+
+class _ShardListSource:
+    """Minimal ShardSource adapter over an in-memory shard list."""
+
+    def __init__(self, shards: List):
+        self._shards = shards
+        self.n_clients = len(shards)
+        self.sizes = np.array([len(s) for s in shards], np.int64)
+        feat = None
+        for s in shards:
+            if len(s):
+                feat = s.x.shape[1:]
+                dtype = s.x.dtype
+                break
+        if feat is None:
+            feat, dtype = shards[0].x.shape[1:], shards[0].x.dtype
+        self.feat_shape = tuple(feat)
+        self.feat_dtype = dtype
+
+    def shard(self, cid: int):
+        return self._shards[cid]
 
 
 register_jit("store_gather", _store_gather)

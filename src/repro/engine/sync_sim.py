@@ -167,6 +167,8 @@ class BatchedSyncEngine:
         distill: Optional[DistillSpec] = None,
         faults=None,
         telemetry=None,
+        cohort=None,
+        server_momentum: float = 0.0,
     ):
         if pipeline not in PIPELINES:
             raise ValueError(f"pipeline must be one of {PIPELINES}, got {pipeline!r}")
@@ -181,6 +183,18 @@ class BatchedSyncEngine:
         self.schedule = schedule
         self.rng = np.random.default_rng(seed)
         self.upp = upp
+        # per-round cohort sampling: keyed side-channel draws (the engine
+        # RNG stream stays untouched — cohort=None is bit-identical to the
+        # pre-sampling trajectories)
+        self.cohort = cohort
+        if cohort is not None and upp != 1.0:
+            raise ValueError(
+                "cohort sampling and UPP are both participation models; "
+                "use upp=1.0 with a CohortSpec"
+            )
+        # cloud-side momentum on the aggregated delta (0.0 = plain FedAvg)
+        self.server_momentum = float(server_momentum)
+        self._srv_vel = None
         self.params = self.program.init(jax.random.PRNGKey(seed))
         self.backend = backend
         self.compression = compression
@@ -345,9 +359,14 @@ class BatchedSyncEngine:
         tel = self.tel
         m, n = self.assignment.shape
         with tel.span("assignment", round=self._round, engine="sync-device"):
-            participating = self.rng.random(m) < self.upp
-            if not participating.any():
-                participating[self.rng.integers(0, m)] = True
+            if self.cohort is not None:
+                participating = self.cohort.mask(
+                    self._round, self._er, assignment=self.assignment
+                )
+            else:
+                participating = self.rng.random(m) < self.upp
+                if not participating.any():
+                    participating[self.rng.integers(0, m)] = True
             failed = None
             if self.faults is not None:
                 # churned-out / battery-dead EUs sit the round out; mid-round
@@ -511,9 +530,14 @@ class BatchedSyncEngine:
         edge j's model for architecture group g."""
         m, n = self.assignment.shape
         with self.tel.span("assignment", round=self._round, engine="sync-host"):
-            participating = self.rng.random(m) < self.upp
-            if not participating.any():
-                participating[self.rng.integers(0, m)] = True
+            if self.cohort is not None:
+                participating = self.cohort.mask(
+                    self._round, self._er, assignment=self.assignment
+                )
+            else:
+                participating = self.rng.random(m) < self.upp
+                if not participating.any():
+                    participating[self.rng.integers(0, m)] = True
             failed = None
             if self.faults is not None:
                 participating &= self.faults.participation(self._round)
@@ -608,6 +632,29 @@ class BatchedSyncEngine:
             self.program,
         )
 
+    def _apply_server_momentum(
+        self, old_rows: List[jnp.ndarray], new_rows: List[jnp.ndarray]
+    ) -> List[jnp.ndarray]:
+        """Cloud momentum in delta form per group row:
+        ``v <- mu*v + (new - old); out = old + v``.  A group whose global
+        row stood (fully starved under faults — ``new is old``) skips the
+        velocity update rather than decaying it with a zero delta, matching
+        the reference's degraded-mode 'global model stands' semantics."""
+        if not self.server_momentum:
+            return new_rows
+        if self._srv_vel is None:
+            self._srv_vel = [jnp.zeros_like(r) for r in new_rows]
+        mu = self.server_momentum
+        out = []
+        for g, (old, new) in enumerate(zip(old_rows, new_rows)):
+            if new is old:
+                out.append(old)
+                continue
+            v = mu * self._srv_vel[g] + (new - old)
+            self._srv_vel[g] = v
+            out.append(old + v)
+        return out
+
     def run(self, cloud_rounds: int, eval_every: int = 1) -> SimResult:
         n = self.assignment.shape[1]
         n_groups = len(self.groups)
@@ -670,19 +717,22 @@ class BatchedSyncEngine:
                                 * self._edge_got[g]
                                 for g in range(n_groups)
                             ]
-                            global_rows = [
+                            new_rows = [
                                 flat_mean(edge_mats[g], gw[g], backend=self.backend)
                                 if gw[g].any()
                                 else global_rows[g]
                                 for g in range(n_groups)
                             ]
                         else:
-                            global_rows = [
+                            new_rows = [
                                 flat_mean(
                                     edge_mats[g], edge_sizes[g], backend=self.backend
                                 )
                                 for g in range(n_groups)
                             ]
+                        global_rows = self._apply_server_momentum(
+                            global_rows, new_rows
+                        )
                     losses = (
                         list(np.concatenate([np.asarray(c) for c in losses]))
                         if losses
@@ -702,17 +752,20 @@ class BatchedSyncEngine:
                                 * self._edge_got[g]
                                 for g in range(n_groups)
                             ]
-                            global_rows = [
+                            new_rows = [
                                 self._mean(edge_rows[g], gw[g])
                                 if gw[g].any()
                                 else global_rows[g]
                                 for g in range(n_groups)
                             ]
                         else:
-                            global_rows = [
+                            new_rows = [
                                 self._mean(edge_rows[g], edge_sizes[g])
                                 for g in range(n_groups)
                             ]
+                        global_rows = self._apply_server_momentum(
+                            global_rows, new_rows
+                        )
                 self.accountant.on_cloud_sync(n, bits=cloud_bits)
                 if self.clock is not None:
                     self.clock.on_cloud_sync()

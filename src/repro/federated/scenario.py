@@ -143,6 +143,8 @@ class Scenario:
         distill=None,
         faults=None,
         telemetry=None,
+        cohort=None,
+        server_momentum: float = 0.0,
     ) -> SimResult:
         """Run the scenario through one of the simulation engines.
 
@@ -177,10 +179,21 @@ class Scenario:
                   in memory (``SimResult.telemetry``); a path — record AND
                   flush trace/rounds/metrics artifacts there after the run;
                   a ``repro.telemetry.Telemetry`` — record into it.
+        cohort:   None (full participation / UPP) or a
+                  ``repro.federated.sampling.CohortSpec`` — every engine
+                  then trains only the spec's per-round cohort, drawn from
+                  a keyed side-channel generator (requires ``upp=1.0``).
+        server_momentum: cloud-side momentum coefficient on the aggregated
+                  model delta (0.0 = plain FedAvg, the pinned default).
         """
         from repro.telemetry import coerce_telemetry
 
         distill = distill if distill is not None else self.distill
+        if self.is_hetero and (cohort is not None or server_momentum):
+            raise ValueError(
+                "cohort sampling / server momentum are not supported for "
+                "heterogeneous-model populations"
+            )
         spec = self.faults if faults is None else (faults or None)
         fault_state = None
         if spec is not None:
@@ -200,6 +213,7 @@ class Scenario:
                 assignment, cloud_rounds, schedule, seed, upp, track_divergence,
                 eval_every, wall_clock, engine, backend, compression,
                 staleness_decay, quorum, pipeline, distill, fault_state, tel,
+                cohort, server_momentum,
             )
         finally:
             if tel is not None and tel.out_dir is not None:
@@ -224,6 +238,8 @@ class Scenario:
         distill,
         faults,
         telemetry,
+        cohort=None,
+        server_momentum=0.0,
     ) -> SimResult:
         if engine == "reference":
             if self.is_hetero:
@@ -264,6 +280,8 @@ class Scenario:
                 compression=compression,
                 faults=faults,
                 telemetry=telemetry,
+                cohort=cohort,
+                server_momentum=server_momentum,
             )
             res = sim.run(cloud_rounds, eval_every=eval_every)
             if wall_clock:
@@ -289,6 +307,8 @@ class Scenario:
                 distill=distill,
                 faults=faults,
                 telemetry=telemetry,
+                cohort=cohort,
+                server_momentum=server_momentum,
             )
             return sim.run(cloud_rounds, eval_every=eval_every)
         if engine == "async":
@@ -316,6 +336,8 @@ class Scenario:
                 distill=distill,
                 faults=faults,
                 telemetry=telemetry,
+                cohort=cohort,
+                server_momentum=server_momentum,
             )
             return sim.run(cloud_rounds, eval_every=eval_every)
         raise ValueError(f"unknown engine {engine!r} (reference | sync | async)")
@@ -416,6 +438,9 @@ def build_scenario(
     lm_topics: int = 4,
     lm_seq_len: int = 32,
     lm_vocab: int = 128,
+    lazy: bool = False,
+    n_eus: Optional[int] = None,
+    n_edges: Optional[int] = None,
 ) -> Scenario:
     """Construct an experimental setup with synthetic data.
 
@@ -456,6 +481,35 @@ def build_scenario(
     scales sequences-per-EU there just as it scales samples in the health
     setups.
     """
+    if lazy:
+        # streaming mode: a ShardSource population with analytic (no-data)
+        # class histograms and a compact striped assignment.  A NEW
+        # population family — eager scenarios (and their golden pins) are
+        # untouched; the lazy guarantee is shard(cid) purity in (seed, cid).
+        if model_mix is not None or hparams is not None or faults is not None:
+            raise ValueError(
+                "lazy mode supports homogeneous fault-free populations "
+                "(model_mix/hparams/faults are per-client state, O(M))"
+            )
+        if n_eus is None:
+            raise ValueError("lazy mode requires n_eus= (population size)")
+        from repro.federated.stream import build_stream_scenario
+
+        return build_stream_scenario(
+            dataset,
+            n_eus=n_eus,
+            n_edges=n_edges if n_edges is not None else 8,
+            model=model,
+            fedsgd=fedsgd,
+            grad_bits=grad_bits,
+            seed=seed,
+            n_test_per_class=n_test_per_class,
+            lm_topics=lm_topics,
+            lm_seq_len=lm_seq_len,
+            lm_vocab=lm_vocab,
+        )
+    if n_eus is not None or n_edges is not None:
+        raise ValueError("n_eus/n_edges are lazy-mode knobs (pass lazy=True)")
     if model_mix is not None and fedsgd:
         raise ValueError("model_mix and fedsgd cannot combine (pick one)")
     if model_mix is not None and model != "cnn":  # "cnn" is the unset default

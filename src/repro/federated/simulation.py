@@ -107,6 +107,8 @@ class HFLSimulation:
         compression: Optional[CompressionSpec] = None,
         faults=None,
         telemetry=None,
+        cohort=None,
+        server_momentum: float = 0.0,
     ):
         self.clients = clients
         self.assignment = assignment
@@ -115,6 +117,20 @@ class HFLSimulation:
         self.schedule = schedule
         self.rng = np.random.default_rng(seed)
         self.upp = upp
+        # per-round cohort sampling (repro.federated.sampling.CohortSpec):
+        # draws come from the spec's keyed side-channel generator, so the
+        # engine RNG stream below is untouched — cohort=None stays
+        # bit-identical to the pre-sampling trajectories
+        self.cohort = cohort
+        if cohort is not None and upp != 1.0:
+            raise ValueError(
+                "cohort sampling and UPP are both participation models; "
+                "use upp=1.0 with a CohortSpec"
+            )
+        # optional cloud-side momentum on the aggregated model delta
+        # (FedSGD server momentum; 0.0 = plain averaging, the pinned default)
+        self.server_momentum = float(server_momentum)
+        self._srv_vel = None
         self.tel = coerce_telemetry(telemetry) or NULL_TELEMETRY
         self._round = 0
         # fault injection (repro.faults.FaultState); None = the historical
@@ -162,11 +178,17 @@ class HFLSimulation:
     def _edge_round(self, edge_params: List[dict]) -> List[float]:
         m, n = self.assignment.shape
         losses = []
-        # sample participating clients (UPP)
+        # sample participating clients: cohort draw (keyed side-channel
+        # generator — the engine RNG is not consumed) or the UPP Bernoulli
         with self.tel.span("assignment", round=self._round, engine="reference"):
-            participating = self.rng.random(m) < self.upp
-            if not participating.any():
-                participating[self.rng.integers(0, m)] = True
+            if self.cohort is not None:
+                participating = self.cohort.mask(
+                    self._round, self._er, assignment=self.assignment
+                )
+            else:
+                participating = self.rng.random(m) < self.upp
+                if not participating.any():
+                    participating[self.rng.integers(0, m)] = True
         failed = None
         if self.faults is not None:
             # churned-out / battery-dead EUs sit the round out; among the
@@ -245,6 +267,27 @@ class HFLSimulation:
             if self.tel.enabled:
                 self.tel.metrics.inc("faults_reassigned", int(len(changed)))
 
+    def _cloud_update(self, old, agg):
+        """Apply the cloud aggregate, optionally through server momentum.
+
+        Delta form: ``v <- mu * v + (agg - old); new = old + v`` — with
+        FedSGD single-step clients this is exactly centralized SGD+momentum
+        on the aggregated gradient (velocity scaled by -lr), pinned by
+        tests/test_stream.py against that oracle.  ``mu = 0`` reduces to
+        plain averaging without touching the update path.
+        """
+        if not self.server_momentum:
+            return agg
+        delta = tree_sub(agg, old)
+        if self._srv_vel is None:
+            self._srv_vel = delta
+        else:
+            mu = self.server_momentum
+            self._srv_vel = jax.tree.map(
+                lambda v, d: mu * v + d, self._srv_vel, delta
+            )
+        return tree_add(old, self._srv_vel)
+
     def _edge_data_sizes(self) -> List[float]:
         return [
             sum(c.data_size for i, c in enumerate(self.clients) if self.assignment[i, j])
@@ -289,10 +332,13 @@ class HFLSimulation:
                             for j, s in enumerate(edge_sizes)
                         ]
                         if any(w):
-                            global_params = cloud_aggregate(edge_params, w)
+                            global_params = self._cloud_update(
+                                global_params, cloud_aggregate(edge_params, w)
+                            )
                     else:
-                        global_params = cloud_aggregate(
-                            edge_params, [max(s, 1) for s in edge_sizes]
+                        global_params = self._cloud_update(
+                            global_params,
+                            cloud_aggregate(edge_params, [max(s, 1) for s in edge_sizes]),
                         )
                 self.accountant.on_cloud_sync(n)
                 if self.clock is not None:

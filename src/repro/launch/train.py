@@ -34,6 +34,37 @@ def run_paper(args) -> None:
     from repro.core.hfl import HFLSchedule
     from repro.federated import build_scenario
 
+    cohort = None
+    if args.cohort:
+        from repro.federated import CohortSpec
+
+        cohort = CohortSpec(
+            size=args.cohort, strategy=args.cohort_strategy, seed=args.seed
+        )
+    if args.lazy_eus:
+        # streaming mode: lazy shard synthesis + striped assignment +
+        # cohort-sampled StreamSyncEngine; nothing O(M) is materialized
+        if cohort is None:
+            raise SystemExit("--lazy-eus requires --cohort N")
+        sc = build_scenario(
+            args.dataset, lazy=True, n_eus=args.lazy_eus,
+            n_edges=args.lazy_edges, seed=args.seed,
+        )
+        print(f"streaming M={sc.n_clients} N={sc.n_edges} KLD={sc.kld_total():.3f}")
+        res = sc.simulate(
+            cohort,
+            cloud_rounds=args.rounds,
+            schedule=HFLSchedule(args.local_steps, args.edge_per_cloud),
+            seed=args.seed,
+            server_momentum=args.server_momentum,
+            telemetry=args.telemetry or None,
+        )
+        for m in res.history:
+            print(f"round {m.cloud_round}: acc={m.test_acc:.3f} "
+                  f"wall={m.wall_seconds:.2f}s")
+        if res.telemetry is not None:
+            print(res.telemetry.summary())
+        return
     faults = None
     if args.faults:
         from repro.faults import FaultSpec
@@ -49,6 +80,8 @@ def run_paper(args) -> None:
         seed=args.seed,
         engine=args.engine,
         faults=faults,
+        cohort=cohort,
+        server_momentum=args.server_momentum,
         telemetry=args.telemetry or None,
     )
     for m in res.history:
@@ -123,6 +156,17 @@ def main() -> None:
     ap.add_argument("--scale", type=float, default=0.05)
     ap.add_argument("--faults", default="", choices=("", *FAULT_PRESETS),
                     help="fault-injection preset for the paper experiment")
+    ap.add_argument("--cohort", type=int, default=0, metavar="N",
+                    help="sample an N-client cohort per edge round instead "
+                         "of full participation (requires upp=1)")
+    ap.add_argument("--cohort-strategy", default="uniform",
+                    choices=("uniform", "prate", "per_edge"))
+    ap.add_argument("--server-momentum", type=float, default=0.0,
+                    help="cloud-side momentum on the aggregated update")
+    ap.add_argument("--lazy-eus", type=int, default=0, metavar="M",
+                    help="streaming mode: lazy M-client population "
+                         "(no per-client materialization; needs --cohort)")
+    ap.add_argument("--lazy-edges", type=int, default=8)
     ap.add_argument("--arch", default="")
     ap.add_argument("--full-config", action="store_true")
     ap.add_argument("--steps", type=int, default=20)
