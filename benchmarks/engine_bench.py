@@ -235,6 +235,37 @@ def bench_scale(m: int, n_edges: int, model: str = "cnn") -> Dict[str, Optional[
     return {"loop": t_ref, "host": t_host, "device": t_dev, "async": t_async}
 
 
+def bench_mesh(m: int, n_edges: int) -> Dict[str, float]:
+    """Mesh-engine scale point: the device pipeline vs its shard_map
+    counterpart over the visible devices.  With one visible device (the
+    default process) this measures shard_map/ledger overhead, not a speedup
+    — virtual CPU devices never run concurrently; the multi-device
+    correctness + comm-accounting run lives in
+    ``benchmarks/distributed_bench.py``."""
+    from repro.engine.mesh_sim import MeshSyncEngine
+
+    clients, assignment, test, _latency, program, _ = _make_population(m, n_edges)
+    mk = dict(program=program, test=test, schedule=HFLSchedule(1, 1), seed=0)
+    makers = {
+        "device": lambda: BatchedSyncEngine(
+            clients, assignment, pipeline="device", **mk
+        ),
+        "mesh": lambda: MeshSyncEngine(clients, assignment, **mk),
+    }
+    t = _time_interleaved(makers)
+    t_dev = t["device"]["best_us"] * 1e-6
+    t_mesh = t["mesh"]["best_us"] * 1e-6
+    eng = MeshSyncEngine(clients, assignment, **mk)
+    eng.run(1, eval_every=1)
+    rep = eng.comm_report()
+    emit(f"engine_mesh_m{m}", t_mesh * 1e6,
+         f"{m / t_mesh:.1f} clients/sec ({t_dev / t_mesh:.2f}x vs device) "
+         f"k={rep['devices']} xe/cloud={rep['cross_edge_bytes_per_cloud_round']:.3e} B",
+         mean_us=t["mesh"]["mean_us"], std_us=t["mesh"]["std_us"],
+         repeats=t["mesh"]["repeats"])
+    return {"device": t_dev, "mesh": t_mesh}
+
+
 def bench_faults(m: int, n_edges: int) -> Dict[str, float]:
     """Fault-injected scale point: clients/sec plus the wasted-bits fraction
     (bits that died in the air / all uplink airtime) under ~20% availability
@@ -376,12 +407,19 @@ if __name__ == "__main__":
                     help="bench ONLY the streaming-population scale sweep "
                          "(M=100k and 1M, lazy shards, cohort sampling, "
                          "paged store; one subprocess per point)")
+    ap.add_argument("--mesh", action="store_true",
+                    help="bench ONLY the mesh-engine scale point (shard_map "
+                         "over the visible devices vs the device pipeline)")
     args = ap.parse_args()
     print("name,us_per_call,derived")
     if args.faults:
         start = mark()
         bench_faults(128, 8)
         dump_json("BENCH_engine_faults.json", start)
+    elif args.mesh:
+        start = mark()
+        bench_mesh(128, 8)
+        dump_json("BENCH_engine_mesh.json", start)
     elif args.streaming:
         start = mark()
         bench_streaming()

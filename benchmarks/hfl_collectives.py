@@ -29,7 +29,7 @@ from repro.distributed.axes import sharding_hints
 from repro.distributed.hfl_mesh import (
     hfl_batch_spec, hfl_param_specs, make_hfl_train_step, init_hfl_state,
 )
-from repro.distributed.hlo_stats import analyze
+from repro.distributed.hlo_stats import analyze, cross_edge_bytes
 from repro.models.config import InputShape
 from repro.training.train_step import TrainState, make_train_step
 from repro.training.optimizers import adam
@@ -37,30 +37,6 @@ from repro.training.optimizers import adam
 cfg = dataclasses.replace(get_smoke_config("phi3-mini-3.8b"), remat=True)
 opt = adam(1e-3)
 E, B_e, S = 4, 8, 64
-
-def cross_edge_bytes(st, devs_per_edge):
-    # bytes of collectives whose replica groups span >1 edge block
-    import re as _re
-    total = 0.0
-    for kind, shp_rg, mult, tot in st.coll_top:
-        rg = shp_rg.split("|", 1)[1] if "|" in shp_rg else ""
-        crosses = True  # conservative default
-        m = _re.findall(r"\{([\d,]+)\}", rg)
-        if m:
-            crosses = any(
-                len({int(x) // devs_per_edge for x in grp.split(",") if x}) > 1
-                for grp in m
-            )
-        elif rg.startswith("["):
-            dims = _re.match(r"\[(\d+),(\d+)\]<=\[(\d+)\]", rg)
-            if dims:
-                ngroups, gsize, ntot = (int(x) for x in dims.groups())
-                # iota groups: contiguous gsize blocks — cross edge iff block
-                # spans an edge boundary
-                crosses = gsize > devs_per_edge or (devs_per_edge % gsize != 0)
-        if crosses:
-            total += tot
-    return total
 
 
 def coll_of(lowered, devs_per_edge=None):

@@ -10,6 +10,7 @@ manageable.
   fig6  — per-EU traffic at iso-accuracy                   (paper Fig. 6)
   roofline — dry-run roofline table                        (EXPERIMENTS §Roofline)
   hfl_collectives — cross-edge collective-byte claim on mesh
+  distributed — MeshSyncEngine cross-mesh parity + HLO 1/T comm accounting
   kernels — Pallas kernel micro-bench (interpret mode)
   engine — clients/sec: sync-loop vs batched-sync vs async at M up to 512
 """
@@ -23,6 +24,7 @@ def main() -> None:
     print("name,us_per_call,derived")
     from benchmarks import (
         ablation_time_compression,
+        distributed_bench,
         fig3_upp_dropping,
         fig4_kld_distance,
         fig5_acc_rounds,
@@ -41,6 +43,7 @@ def main() -> None:
         ("ablation", ablation_time_compression),
         ("roofline", roofline),
         ("hfl_collectives", hfl_collectives),
+        ("distributed", distributed_bench),
         ("kernels", kernels_bench),
         ("engine", engine_bench),
     ]

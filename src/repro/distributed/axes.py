@@ -39,6 +39,34 @@ def current_hints() -> ShardingHints:
     return _HINTS
 
 
+EDGE_AXIS = "edge"
+
+
+def edge_mesh(n_devices: Optional[int] = None, *, devices=None):
+    """1-D device mesh over the hierarchical-FL ``"edge"`` axis.
+
+    The federation's topology maps edges onto mesh devices: edge ``j``
+    lives on device ``j // (n_edges / n_devices)``, its EUs' cohort rows
+    are co-located with it, and the only cross-device traffic is the cloud
+    reduction (``MeshSyncEngine``).  ``n_devices=None`` takes every visible
+    device; pass a smaller count to build a sub-mesh (the cross-mesh parity
+    harness runs {1, 2, 4, 8} out of one 8-device process).  On CPU the
+    devices come from ``XLA_FLAGS=--xla_force_host_platform_device_count=N``
+    — virtual devices that share one thread pool, so the mesh path is a
+    topology/accounting tool there, not a speedup.
+    """
+    import numpy as np
+    from jax.sharding import Mesh
+
+    devs = list(devices) if devices is not None else jax.devices()
+    k = len(devs) if n_devices is None else int(n_devices)
+    if k < 1 or k > len(devs):
+        raise ValueError(
+            f"edge_mesh needs 1 <= n_devices <= {len(devs)} visible devices, got {k}"
+        )
+    return Mesh(np.asarray(devs[:k]), (EDGE_AXIS,))
+
+
 @contextlib.contextmanager
 def sharding_hints(mesh=None, *, batch_axes=None, model_axis="model"):
     """Derive hints from a mesh: batch axes = all non-model axes."""

@@ -276,3 +276,49 @@ def analyze(text: str) -> HloStats:
 
     walk(entry, 1.0)
     return stats
+
+
+def replica_groups_cross_block(rg: str, devs_per_block: int) -> bool:
+    """Whether a collective's ``replica_groups`` annotation spans more than
+    one contiguous device block of size ``devs_per_block``.
+
+    Hierarchical-FL meshes place each edge on a contiguous block of devices
+    (``devs_per_block=1`` for the 1-D ``edge`` mesh), so a collective whose
+    groups stay inside one block is edge-local while one that crosses blocks
+    is cloud traffic.  Handles both annotation forms the SPMD partitioner
+    emits: explicit group lists ``{{0,1},{2,3}}`` and iota groups
+    ``[n,g]<=[t]`` (contiguous blocks of g devices).  An unparseable or
+    missing annotation is conservatively counted as crossing.
+    """
+    groups = re.findall(r"\{([\d,]+)\}", rg)
+    if groups:
+        return any(
+            len({int(x) // devs_per_block for x in grp.split(",") if x}) > 1
+            for grp in groups
+        )
+    if rg.startswith("["):
+        dims = re.match(r"\[(\d+),(\d+)\]<=\[(\d+)\]", rg)
+        if dims:
+            _, gsize, _ = (int(x) for x in dims.groups())
+            # iota groups are contiguous gsize blocks — cross-edge iff a
+            # group spans an edge boundary
+            return gsize > devs_per_block or devs_per_block % gsize != 0
+    return True  # conservative default
+
+
+def cross_edge_bytes(st: HloStats, devs_per_edge: int = 1) -> float:
+    """Total bytes of collectives whose replica groups span >1 edge block.
+
+    ``st`` comes from :func:`analyze` over *compiled* (post-SPMD) HLO —
+    ``jit(fn).lower(*args).compile().as_text()`` — since collectives only
+    carry their final replica groups after partitioning.  This is the HLO
+    counterpart of ``CommAccountant``'s simulated cloud bits: on the
+    ``MeshSyncEngine`` mesh the edge rounds must contribute zero here and
+    the cloud ``psum`` everything (the paper's 1/T claim, structurally).
+    """
+    total = 0.0
+    for _kind, shp_rg, _mult, tot in st.coll_top:
+        rg = shp_rg.split("|", 1)[1] if "|" in shp_rg else ""
+        if replica_groups_cross_block(rg, devs_per_edge):
+            total += tot
+    return total

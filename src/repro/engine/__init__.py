@@ -36,6 +36,11 @@ module                role
                       (edge state as one (E, D) matrix, segment-kernel
                       aggregation), ``pipeline="host"`` keeps the PR 1
                       host-major loop as the comparison baseline
+``mesh_sim``          ``MeshSyncEngine`` — the device pipeline sharded over
+                      a 1-D ``edge_mesh``: edges and their EUs' cohort rows
+                      live on devices, edge FedAvg is device-local, and the
+                      cloud reduce is the only cross-edge collective —
+                      measured in compiled HLO by ``MeshCommLedger``
 ``async_sim``         ``AsyncHFLEngine`` — event-driven uploads, quorum
                       edge aggregation, staleness-decayed weighting; edge
                       models also live in one (E, D) matrix
@@ -68,6 +73,7 @@ from repro.engine.distill import (
 )
 from repro.engine.events import Event, EventQueue
 from repro.engine.flatten import BACKENDS, FlatPack, flat_mean, flat_segment_mean
+from repro.engine.mesh_sim import MeshCommLedger, MeshSyncEngine, mesh_segment_mean
 from repro.engine.store import DeviceShardStore, PagedShardStore
 from repro.engine.stream_sim import StreamSyncEngine
 from repro.engine.sync_sim import PIPELINES, BatchedSyncEngine
@@ -82,6 +88,8 @@ __all__ = [
     "EventQueue",
     "FlatPack",
     "LocalJob",
+    "MeshCommLedger",
+    "MeshSyncEngine",
     "PIPELINES",
     "PagedShardStore",
     "StreamCohortPlan",
@@ -94,6 +102,7 @@ __all__ = [
     "flat_segment_mean",
     "kd_loss",
     "make_job",
+    "mesh_segment_mean",
     "pack_for",
     "run_cohorts",
     "soft_targets",

@@ -334,6 +334,32 @@ class BatchedSyncEngine:
         if self.clock is not None:
             self.clock.on_edge_sync(self.assignment, participating)
 
+    def _draw_participation(self, m: int) -> np.ndarray:
+        """This round's (M,) participation mask.  Cohort sampling reads the
+        keyed side channel (engine RNG untouched); the UPP path consumes the
+        engine RNG draw-for-draw like the reference simulator.  Shared by
+        every sync pipeline (host / device / mesh) so they stay on one RNG
+        stream."""
+        if self.cohort is not None:
+            return self.cohort.mask(self._round, self._er, assignment=self.assignment)
+        participating = self.rng.random(m) < self.upp
+        if not participating.any():
+            participating[self.rng.integers(0, m)] = True
+        return participating
+
+    def _broadcast_rows(self, global_rows: List[jnp.ndarray], n: int) -> List[jnp.ndarray]:
+        """Per-group (E, D) edge matrices seeded from the global rows at the
+        top of a cloud round (the mesh engine overrides this to lay the
+        matrix out over the device mesh)."""
+        return [jnp.broadcast_to(row, (n, row.shape[0])) for row in global_rows]
+
+    def _cloud_mean(self, edge_mat: jnp.ndarray, weights) -> jnp.ndarray:
+        """Cloud FedAvg of one group's (E, D) edge matrix (paper eq. 9).
+        Traceable (``tel.jit_cost`` lowers it); the mesh engine overrides
+        this with the two-stage partial-sum + ``psum`` reduction — the only
+        cross-edge collective on the mesh."""
+        return flat_mean(edge_mat, weights, backend=self.backend)
+
     # -- one edge round, device pipeline --------------------------------------
     def _client_starts(self, edge_mat: jnp.ndarray) -> jnp.ndarray:
         """(M, D) per-client DCA start rows from the (E, D) edge matrix.
@@ -359,14 +385,7 @@ class BatchedSyncEngine:
         tel = self.tel
         m, n = self.assignment.shape
         with tel.span("assignment", round=self._round, engine="sync-device"):
-            if self.cohort is not None:
-                participating = self.cohort.mask(
-                    self._round, self._er, assignment=self.assignment
-                )
-            else:
-                participating = self.rng.random(m) < self.upp
-                if not participating.any():
-                    participating[self.rng.integers(0, m)] = True
+            participating = self._draw_participation(m)
             failed = None
             if self.faults is not None:
                 # churned-out / battery-dead EUs sit the round out; mid-round
@@ -530,14 +549,7 @@ class BatchedSyncEngine:
         edge j's model for architecture group g."""
         m, n = self.assignment.shape
         with self.tel.span("assignment", round=self._round, engine="sync-host"):
-            if self.cohort is not None:
-                participating = self.cohort.mask(
-                    self._round, self._er, assignment=self.assignment
-                )
-            else:
-                participating = self.rng.random(m) < self.upp
-                if not participating.any():
-                    participating[self.rng.integers(0, m)] = True
+            participating = self._draw_participation(m)
             failed = None
             if self.faults is not None:
                 participating &= self.faults.participation(self._round)
@@ -687,9 +699,7 @@ class BatchedSyncEngine:
                         # the straggler model reads the round's faded channel
                         self.clock.latency = self.faults.latency(b)
                 if self.pipeline == "device":
-                    edge_mats = [
-                        jnp.broadcast_to(row, (n, row.shape[0])) for row in global_rows
-                    ]
+                    edge_mats = self._broadcast_rows(global_rows, n)
                     for k in range(self.schedule.edge_per_cloud):
                         self._er = k + 1
                         edge_mats, chunks = self._edge_round_device(edge_mats)
@@ -703,7 +713,7 @@ class BatchedSyncEngine:
                     ) as sp:
                         cost = self.tel.jit_cost(
                             "cloud_reduce",
-                            lambda u, w: flat_mean(u, w, backend=self.backend),
+                            self._cloud_mean,
                             edge_mats[0], np.asarray(edge_sizes[0], np.float32),
                         )
                         if cost:
@@ -718,16 +728,14 @@ class BatchedSyncEngine:
                                 for g in range(n_groups)
                             ]
                             new_rows = [
-                                flat_mean(edge_mats[g], gw[g], backend=self.backend)
+                                self._cloud_mean(edge_mats[g], gw[g])
                                 if gw[g].any()
                                 else global_rows[g]
                                 for g in range(n_groups)
                             ]
                         else:
                             new_rows = [
-                                flat_mean(
-                                    edge_mats[g], edge_sizes[g], backend=self.backend
-                                )
+                                self._cloud_mean(edge_mats[g], edge_sizes[g])
                                 for g in range(n_groups)
                             ]
                         global_rows = self._apply_server_momentum(

@@ -145,6 +145,7 @@ class Scenario:
         telemetry=None,
         cohort=None,
         server_momentum: float = 0.0,
+        mesh=None,
     ) -> SimResult:
         """Run the scenario through one of the simulation engines.
 
@@ -157,7 +158,13 @@ class Scenario:
         backend:  aggregation path for the engines ("pallas" | "reference").
         pipeline: sync-engine round pipeline ("device" — fixed-shape
                   segment-kernel programs, shard store; "host" — the PR 1
-                  host-major loop).
+                  host-major loop; "mesh" — the device pipeline sharded
+                  over an ``edge_mesh`` via ``MeshSyncEngine``).
+        mesh:     None | device count | ``jax.sharding.Mesh`` with an
+                  ``"edge"`` axis — selects the mesh engine (implies
+                  ``pipeline="mesh"``); the edge count must divide by the
+                  mesh size.  The returned ``SimResult`` then carries the
+                  engine's HLO collective accounting as ``.comm_report``.
         compression: None | ``core.compression.CompressionSpec`` (kinds
                   "topk" | "ternary" | "none") applied to uplinks with
                   error feedback; the accountant then counts compressed
@@ -213,7 +220,7 @@ class Scenario:
                 assignment, cloud_rounds, schedule, seed, upp, track_divergence,
                 eval_every, wall_clock, engine, backend, compression,
                 staleness_decay, quorum, pipeline, distill, fault_state, tel,
-                cohort, server_momentum,
+                cohort, server_momentum, mesh,
             )
         finally:
             if tel is not None and tel.out_dir is not None:
@@ -240,6 +247,7 @@ class Scenario:
         telemetry,
         cohort=None,
         server_momentum=0.0,
+        mesh=None,
     ) -> SimResult:
         if engine == "reference":
             if self.is_hetero:
@@ -286,6 +294,30 @@ class Scenario:
             res = sim.run(cloud_rounds, eval_every=eval_every)
             if wall_clock:
                 res.wall_seconds = sim.clock.seconds
+            return res
+        if engine == "sync" and (pipeline == "mesh" or mesh is not None):
+            from repro.engine import MeshSyncEngine
+
+            sim = MeshSyncEngine(
+                self.clients,
+                assignment,
+                self.program,
+                self.test,
+                schedule=schedule,
+                seed=seed,
+                upp=upp,
+                track_divergence=track_divergence,
+                cost_latency=self.cost.latency if wall_clock else None,
+                backend=backend,
+                compression=compression,
+                faults=faults,
+                telemetry=telemetry,
+                cohort=cohort,
+                server_momentum=server_momentum,
+                mesh=mesh,
+            )
+            res = sim.run(cloud_rounds, eval_every=eval_every)
+            res.comm_report = sim.comm_report()
             return res
         if engine == "sync":
             from repro.engine import BatchedSyncEngine

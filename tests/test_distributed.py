@@ -17,7 +17,12 @@ from jax.sharding import PartitionSpec as P
 
 from repro.configs import get_smoke_config
 from repro.distributed.analysis import Roofline, collective_bytes
-from repro.distributed.hlo_stats import analyze, parse_computations
+from repro.distributed.hlo_stats import (
+    analyze,
+    cross_edge_bytes,
+    parse_computations,
+    replica_groups_cross_block,
+)
 
 SRC = os.path.join(os.path.dirname(__file__), "..", "src")
 
@@ -98,6 +103,40 @@ ENTRY %main (x: f32[8,8]) -> f32[8,8] {
     # one dot of 2*8*8*8 flops, executed 5 times
     assert st.flops == pytest.approx(5 * 2 * 8 * 8 * 8)
     assert st.whiles == [("body", 5)]
+
+
+def test_replica_groups_cross_block():
+    """The cross-edge classifier: a collective crosses edge blocks iff any
+    replica group spans devices from more than one devs_per_block block."""
+    # explicit groups
+    assert not replica_groups_cross_block("{0,1},{2,3}", 2)
+    assert replica_groups_cross_block("{0,2},{1,3}", 2)
+    assert replica_groups_cross_block("{0,1,2,3}", 2)
+    assert not replica_groups_cross_block("{0},{1},{2},{3}", 1)
+    assert replica_groups_cross_block("{0,1}", 1)
+    # iota form [n_groups,group_size]<=[n_devices]: contiguous blocks
+    assert not replica_groups_cross_block("[4,2]<=[8]", 2)
+    assert replica_groups_cross_block("[2,4]<=[8]", 2)
+    assert not replica_groups_cross_block("[2,2]<=[4]", 4)  # sub-block groups
+    # unknown format: conservative (counts as crossing)
+    assert replica_groups_cross_block("", 2)
+
+
+def test_cross_edge_bytes_classifier():
+    """End-to-end on parsed HLO: only collectives whose groups span edge
+    blocks count toward the cross-edge total."""
+    text = """
+ENTRY %main (x: f32[64]) -> f32[64] {
+  %x = f32[64]{0} parameter(0)
+  %a = f32[64]{0} all-reduce(%x), replica_groups={{0,1},{2,3}}, to_apply=%add
+  ROOT %b = f32[64]{0} all-reduce(%a), replica_groups={{0,1,2,3}}, to_apply=%add
+}
+"""
+    st = analyze(text)
+    # both collectives move 64*4 B; only the second crosses 2-device blocks
+    assert cross_edge_bytes(st, 2) == pytest.approx(64 * 4)
+    assert cross_edge_bytes(st, 1) == pytest.approx(2 * 64 * 4)
+    assert cross_edge_bytes(st, 4) == pytest.approx(0.0)
 
 
 def test_roofline_terms():

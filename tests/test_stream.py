@@ -304,6 +304,35 @@ def test_stream_paging_invisible_to_results(stream_sc, spec, stream_result):
     )
 
 
+def test_lazy_lm_stream_matches_sync_engine():
+    """End-to-end lazy LM (ISSUE 9 satellite): ``build_scenario(lazy=True,
+    model="lm")`` — the ``TokenShardSource`` path, previously only
+    health-tested — runs 2 rounds through ``StreamSyncEngine`` and tracks
+    the materialized sync engine on the same cohort draws."""
+    sc = build_scenario(
+        "lm", lazy=True, model="lm", n_eus=24, n_edges=4, seed=1,
+        n_test_per_class=20,
+    )
+    spec = CohortSpec(size=8, seed=7)
+    res_stream = sc.simulate(spec, cloud_rounds=2, schedule=SCHEDULE, seed=0)
+    assert len(res_stream.history) == 2
+    assert all(np.isfinite(m.test_acc) for m in res_stream.history)
+    clients, lam = list(sc.clients()), sc.assignment_matrix()
+    eng = BatchedSyncEngine(
+        clients, lam, sc.program, sc.test, schedule=SCHEDULE, seed=0,
+        cohort=spec,
+    )
+    res_sync = eng.run(2)
+    np.testing.assert_allclose(
+        [m.test_acc for m in res_stream.history],
+        [m.test_acc for m in res_sync.history],
+        atol=1e-6,
+    )
+    np.testing.assert_allclose(
+        _flat(res_stream.final_params), _flat(res_sync.final_params), atol=1e-4
+    )
+
+
 # -- server-side momentum --------------------------------------------------
 def test_server_momentum_matches_centralized_sgd_oracle():
     """FedSGD + cloud momentum == centralized SGD with momentum.

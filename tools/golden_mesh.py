@@ -1,0 +1,73 @@
+"""Regenerate the mesh-trajectory pins (tests/golden/mesh_trajectory.json).
+
+Runs the mesh-harness population (``benchmarks.engine_bench``'s micro-CNN,
+M=24 over 8 edges, T=2, 2 cloud rounds) through ``MeshSyncEngine`` on every
+harness mesh size {1, 2, 4, 8} and records the accuracy history plus a
+sha256 over the final parameter bytes per size.  ``tests/test_hfl_mesh.py``
+asserts future code reproduces these exactly on the same jax version —
+cross-mesh parity keeps accuracies identical across sizes, but the cloud
+psum's float association makes each size's parameter BYTES its own pin.
+
+Must run before jax is imported elsewhere (it forces 8 virtual devices):
+
+    PYTHONPATH=src:. python tools/golden_mesh.py
+"""
+from __future__ import annotations
+
+import os
+
+os.environ["XLA_FLAGS"] = (
+    "--xla_force_host_platform_device_count=8 " + os.environ.get("XLA_FLAGS", "")
+)
+
+import json  # noqa: E402
+import sys  # noqa: E402
+
+import jax  # noqa: E402
+
+
+def mesh_runs(ks=(1, 2, 4, 8)):
+    from benchmarks.engine_bench import _make_population
+    from repro.core.hfl import HFLSchedule
+    from repro.engine.mesh_sim import MeshSyncEngine
+
+    clients, assignment, test, _latency, program, _ = _make_population(24, 8)
+    out = {}
+    for k in ks:
+        if k > jax.device_count():
+            continue
+        eng = MeshSyncEngine(
+            clients, assignment, program, test,
+            schedule=HFLSchedule(2, 2), seed=0, mesh=k,
+        )
+        out[f"k{k}"] = eng.run(2, eval_every=1)
+    return out
+
+
+def main() -> None:
+    from tools.golden_trajectory import params_hash
+
+    out = {
+        "jax": jax.__version__,
+        "backend": jax.default_backend(),
+        "scenario": "engine_bench micro-CNN m=24 e=8 T=2 seed=0, 2 cloud rounds",
+        "runs": {},
+    }
+    for name, res in mesh_runs().items():
+        out["runs"][name] = {
+            "params_sha256": params_hash(res.final_params),
+            "accs": [round(m.test_acc, 10) for m in res.history],
+        }
+        print(f"{name}: {out['runs'][name]['params_sha256'][:16]}...  "
+              f"accs={out['runs'][name]['accs']}")
+    path = os.path.join(
+        os.path.dirname(__file__), "..", "tests", "golden", "mesh_trajectory.json"
+    )
+    with open(path, "w") as f:
+        json.dump(out, f, indent=2, sort_keys=True)
+        f.write("\n")
+    print(f"wrote {os.path.normpath(path)}")
+
+
+if __name__ == "__main__":
+    sys.exit(main())

@@ -40,6 +40,18 @@ def golden_runs():
             asn, engine="async", quorum=0.75, staleness_decay=0.5, **kw
         ),
     }
+    # streaming engine (ISSUE 9 satellite): the lazy heartbeat population
+    # under cohort sampling — the same spec tests/test_stream.py checks for
+    # stream==sync parity, pinned here so streaming refactors can't drift
+    from repro.federated import CohortSpec
+
+    ssc = build_scenario(
+        "heartbeat", lazy=True, n_eus=120, n_edges=4, seed=3,
+        n_test_per_class=20,
+    )
+    runs["stream"] = ssc.simulate(
+        CohortSpec(size=24, seed=9), cloud_rounds=2, seed=0
+    )
     return runs
 
 
