@@ -13,6 +13,7 @@ manageable.
   distributed — MeshSyncEngine cross-mesh parity + HLO 1/T comm accounting
   kernels — Pallas kernel micro-bench (interpret mode)
   engine — clients/sec: sync-loop vs batched-sync vs async at M up to 512
+  serving — prefill/decode tok/s, ragged overhead, hot-swap, serve round
 """
 from __future__ import annotations
 
@@ -33,6 +34,7 @@ def main() -> None:
         hfl_collectives,
         kernels_bench,
         roofline,
+        serving_bench,
     )
 
     mods = [
@@ -46,6 +48,7 @@ def main() -> None:
         ("distributed", distributed_bench),
         ("kernels", kernels_bench),
         ("engine", engine_bench),
+        ("serving", serving_bench),
     ]
     failures = 0
     for name, mod in mods:

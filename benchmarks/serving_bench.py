@@ -1,0 +1,104 @@
+"""Serving-path benchmark: prefill/decode tok/s, ragged-batch overhead,
+hot-swap latency, and one serve-under-traffic federation round.
+
+Rows (BENCH_serving.json):
+
+  * ``serve-uniform``  — batched greedy decode, equal-length prompts (the
+                         legacy fast path): µs/token, derived tok/s;
+  * ``serve-ragged``   — mixed-length batch through the left-padded
+                         masked prefill + per-row-slot decode (the ISSUE 10
+                         correctness fix): µs/token, so the cost of
+                         exactness is a first-class tracked number;
+  * ``serve-swap``     — :meth:`ServeEngine.swap` latency (repointing the
+                         param tree between rounds; no recompilation);
+  * ``serve-round``    — ``Scenario.simulate(serve=TrafficSpec(...))`` for
+                         one cloud round on the paper's heartbeat CNN:
+                         µs/query with the measured ``serve_qps`` derived.
+
+Timing comes from the engine's own telemetry spans (prefill + decode
+token counts over span durations) — the same numbers ``launch.serve``
+prints — not a separate stopwatch.
+"""
+from __future__ import annotations
+
+import numpy as np
+
+from benchmarks.common import QUICK, dump_json, emit, mark
+from repro.configs import get_smoke_config
+from repro.serving import Request, ServeEngine, TrafficSpec
+from repro.telemetry import Telemetry
+
+
+def _last_tok_rate(tel):
+    """(tokens, seconds) of the most recent prefill+decode span pair."""
+    prefill = [s for s in tel.tracer.spans if s.name == "prefill"][-1]
+    decode = [s for s in tel.tracer.spans if s.name == "decode"][-1]
+    toks = prefill.attrs.get("tokens", 0) + decode.attrs.get("tokens", 0)
+    return toks, prefill.duration + decode.duration
+
+
+def _engine_rows():
+    import jax
+
+    cfg = get_smoke_config("qwen1.5-4b")
+    tel = Telemetry()
+    eng = ServeEngine(cfg, max_seq=64, telemetry=tel)
+    b = 4 if QUICK else 16
+    new_tokens = 8 if QUICK else 32
+    rng = np.random.default_rng(0)
+
+    def reqs(lens):
+        return [
+            Request(rng.integers(0, cfg.vocab_size, n).astype(np.int32),
+                    max_new_tokens=new_tokens)
+            for n in lens
+        ]
+
+    rates = {}
+    for name, lens in (
+        ("serve-uniform", [16] * b),
+        ("serve-ragged", [16, 5, 11, 16] * (b // 4)),
+    ):
+        eng.run(reqs(lens))  # compile
+        eng.run(reqs(lens))  # timed
+        toks, secs = _last_tok_rate(tel)
+        rates[name] = toks / secs
+        emit(name, secs * 1e6 / toks, f"{toks / secs:.0f} tok/s",
+             batch=b, new_tokens=new_tokens, tokens=toks)
+    emit("serve-ragged-overhead", 0.0,
+         f"{rates['serve-uniform'] / rates['serve-ragged']:.2f}x vs uniform")
+
+    other = ServeEngine(cfg, max_seq=64, seed=1).params
+    n_swaps = 5
+    for i in range(n_swaps):
+        eng.swap(other if i % 2 == 0 else eng.params, version=i)
+    durs = [s.duration for s in tel.tracer.spans if s.name == "swap"]
+    emit("serve-swap", float(np.mean(durs)) * 1e6, "per hot-swap",
+         repeats=n_swaps)
+
+
+def _round_row():
+    from repro.core.hfl import HFLSchedule
+    from repro.federated import build_scenario
+
+    sc = build_scenario("heartbeat", scale=0.02 if QUICK else 0.1, seed=0)
+    a = sc.assign("random", seed=0)
+    spec = TrafficSpec(queries=32 if QUICK else 256, batch=32, seed=0)
+    res = sc.simulate(
+        a.lam, 1, schedule=HFLSchedule(1, 1), seed=0, engine="sync", serve=spec
+    )
+    rec = res.serve_history[0]
+    qps = rec["serve_qps"]
+    emit("serve-round", 1e6 / qps, f"{qps:.0f} qps",
+         queries=rec["queries"], serve_acc=round(rec["serve_acc"], 4))
+
+
+def main() -> None:
+    start = mark()
+    _engine_rows()
+    _round_row()
+    print("wrote", dump_json("BENCH_serving.json", start))
+
+
+if __name__ == "__main__":
+    main()

@@ -144,6 +144,7 @@ class AsyncHFLEngine:
         telemetry=None,
         cohort=None,
         server_momentum: float = 0.0,
+        serve=None,
     ):
         if not (0.0 < quorum <= 1.0):
             raise ValueError(f"quorum must be in (0, 1], got {quorum}")
@@ -185,6 +186,15 @@ class AsyncHFLEngine:
         self.groups, self.group_of = gs.programs, gs.group_of
         self.group_params, self.packs = gs.params, gs.packs
         self._group_bits, self._uplink_bits = gs.bits, gs.uplink_bits
+        # evaluation-under-traffic hook (serving.traffic.ServeTraffic): reads
+        # the post-barrier global tree; side-channel draws keep serve=None
+        # trajectories bit-identical to serve-on runs
+        self.serve = serve
+        if serve is not None and len(self.groups) > 1:
+            raise ValueError(
+                "serve traffic targets THE global model; heterogeneous-model "
+                "populations have one per architecture group"
+            )
         self.distill = distill if len(self.groups) > 1 else None
         self.public_store = None
         if self.distill is not None:
@@ -645,6 +655,13 @@ class AsyncHFLEngine:
                         ]
                     global_rows = self._apply_server_momentum(global_rows, new_rows)
                 self.accountant.on_cloud_sync(n, bits=cloud_bits)
+                serve_rec = (
+                    self.serve.on_round(
+                        b, lambda rows=global_rows: self.packs[0].unravel(rows[0])
+                    )
+                    if self.serve is not None
+                    else None
+                )
                 if b % eval_every == 0 or b == cloud_rounds:
                     with tel.span("eval", round=b) as sp:
                         acc = float(
@@ -686,6 +703,7 @@ class AsyncHFLEngine:
                     loss=float(np.mean(self._losses)) if self._losses else None,
                     wall_s=round_wall,
                     sim_s=round_sim,
+                    **(serve_rec or {}),
                     **comm.take(),
                 )
         trees = [pk.unravel(row) for pk, row in zip(self.packs, global_rows)]
@@ -698,4 +716,5 @@ class AsyncHFLEngine:
             self.params,
             wall_seconds=self.queue.now,
             telemetry=tel if tel.enabled else None,
+            serve_history=self.serve.history if self.serve is not None else None,
         )

@@ -161,6 +161,7 @@ class MeshSyncEngine(BatchedSyncEngine):
         mesh: "Optional[int | Mesh]" = None,
         faults=None,
         compression=None,
+        serve=None,
     ):
         if faults is not None:
             raise ValueError("MeshSyncEngine does not support fault injection")
@@ -171,6 +172,7 @@ class MeshSyncEngine(BatchedSyncEngine):
             upp=upp, track_divergence=track_divergence, central_batch=central_batch,
             cost_latency=cost_latency, backend=backend, pipeline="device",
             telemetry=telemetry, cohort=cohort, server_momentum=server_momentum,
+            serve=serve,
         )
         if len(self.groups) > 1:
             raise ValueError(

@@ -169,6 +169,7 @@ class BatchedSyncEngine:
         telemetry=None,
         cohort=None,
         server_momentum: float = 0.0,
+        serve=None,
     ):
         if pipeline not in PIPELINES:
             raise ValueError(f"pipeline must be one of {PIPELINES}, got {pipeline!r}")
@@ -208,6 +209,15 @@ class BatchedSyncEngine:
         self.group_params, self.packs = gs.params, gs.packs
         self._group_bits, self._uplink_bits = gs.bits, gs.uplink_bits
         n_groups = len(self.groups)
+        # evaluation-under-traffic hook (serving.traffic.ServeTraffic): reads
+        # the post-reduce global tree via the group FlatPack; side-channel
+        # draws keep serve=None trajectories bit-identical to serve-on runs
+        self.serve = serve
+        if serve is not None and n_groups > 1:
+            raise ValueError(
+                "serve traffic targets THE global model; heterogeneous-model "
+                "populations have one per architecture group"
+            )
         self.distill = distill if n_groups > 1 else None
         self.public_store = None
         if self.distill is not None:
@@ -777,6 +787,13 @@ class BatchedSyncEngine:
                 self.accountant.on_cloud_sync(n, bits=cloud_bits)
                 if self.clock is not None:
                     self.clock.on_cloud_sync()
+                serve_rec = (
+                    self.serve.on_round(
+                        b, lambda rows=global_rows: self.pack.unravel(rows[0])
+                    )
+                    if self.serve is not None
+                    else None
+                )
                 div = 0.0
                 if self.track_divergence:
                     for _ in range(self.schedule.cloud_period):
@@ -819,6 +836,7 @@ class BatchedSyncEngine:
                     loss=float(np.mean(losses)) if losses else None,
                     wall_s=round_wall,
                     sim_s=round_sim if self.clock is not None else None,
+                    **(serve_rec or {}),
                     **comm.take(),
                 )
         trees = [pk.unravel(row) for pk, row in zip(self.packs, global_rows)]
@@ -828,6 +846,7 @@ class BatchedSyncEngine:
         result = SimResult(
             history, self.accountant, self.params,
             telemetry=self.tel if self.tel.enabled else None,
+            serve_history=self.serve.history if self.serve is not None else None,
         )
         if self.clock is not None:
             result.wall_seconds = self.clock.seconds

@@ -146,6 +146,7 @@ class Scenario:
         cohort=None,
         server_momentum: float = 0.0,
         mesh=None,
+        serve=None,
     ) -> SimResult:
         """Run the scenario through one of the simulation engines.
 
@@ -192,6 +193,16 @@ class Scenario:
                   a keyed side-channel generator (requires ``upp=1.0``).
         server_momentum: cloud-side momentum coefficient on the aggregated
                   model delta (0.0 = plain FedAvg, the pinned default).
+        serve:    None (training only) or a
+                  ``repro.serving.TrafficSpec`` — the engines then hot-swap
+                  each cloud round's global model behind a deterministic
+                  query stream drawn from the scenario's own shards and
+                  report ``serve_qps`` / ``serve_staleness_rounds`` /
+                  ``serve_acc`` per round (``SimResult.serve_history`` and,
+                  under telemetry, ``rounds.jsonl`` + metric gauges).
+                  Traffic draws come from a keyed side-channel generator,
+                  so training trajectories are bit-identical serve-on vs
+                  serve-off.  Homogeneous populations only.
         """
         from repro.telemetry import coerce_telemetry
 
@@ -215,12 +226,27 @@ class Scenario:
                 class_counts=self.class_counts,
             )
         tel = coerce_telemetry(telemetry)
+        serve_state = None
+        if serve is not None:
+            from repro.serving.traffic import ServeTraffic, TrafficSpec
+
+            if not isinstance(serve, TrafficSpec):
+                raise TypeError(
+                    f"serve must be a repro.serving.TrafficSpec, got "
+                    f"{type(serve).__name__}"
+                )
+            if self.is_hetero:
+                raise ValueError(
+                    "serve traffic targets THE global model; "
+                    "heterogeneous-model populations have one per group"
+                )
+            serve_state = ServeTraffic(serve, self.clients, self.program, tel)
         try:
             return self._simulate(
                 assignment, cloud_rounds, schedule, seed, upp, track_divergence,
                 eval_every, wall_clock, engine, backend, compression,
                 staleness_decay, quorum, pipeline, distill, fault_state, tel,
-                cohort, server_momentum, mesh,
+                cohort, server_momentum, mesh, serve_state,
             )
         finally:
             if tel is not None and tel.out_dir is not None:
@@ -248,6 +274,7 @@ class Scenario:
         cohort=None,
         server_momentum=0.0,
         mesh=None,
+        serve=None,
     ) -> SimResult:
         if engine == "reference":
             if self.is_hetero:
@@ -290,6 +317,7 @@ class Scenario:
                 telemetry=telemetry,
                 cohort=cohort,
                 server_momentum=server_momentum,
+                serve=serve,
             )
             res = sim.run(cloud_rounds, eval_every=eval_every)
             if wall_clock:
@@ -315,6 +343,7 @@ class Scenario:
                 cohort=cohort,
                 server_momentum=server_momentum,
                 mesh=mesh,
+                serve=serve,
             )
             res = sim.run(cloud_rounds, eval_every=eval_every)
             res.comm_report = sim.comm_report()
@@ -341,6 +370,7 @@ class Scenario:
                 telemetry=telemetry,
                 cohort=cohort,
                 server_momentum=server_momentum,
+                serve=serve,
             )
             return sim.run(cloud_rounds, eval_every=eval_every)
         if engine == "async":
@@ -370,6 +400,7 @@ class Scenario:
                 telemetry=telemetry,
                 cohort=cohort,
                 server_momentum=server_momentum,
+                serve=serve,
             )
             return sim.run(cloud_rounds, eval_every=eval_every)
         raise ValueError(f"unknown engine {engine!r} (reference | sync | async)")

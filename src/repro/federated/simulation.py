@@ -48,6 +48,10 @@ class SimResult:
     # the run's Telemetry object (None when telemetry was disabled):
     # `.summary()` is the end-of-run table, `.rounds` the per-round records
     telemetry: object = None
+    # per-round serve records when the run carried query traffic
+    # (Scenario.simulate(serve=TrafficSpec(...))): one dict per cloud round
+    # with round / queries / serve_qps / serve_staleness_rounds / serve_acc
+    serve_history: Optional[List[dict]] = None
 
     def rounds_to_accuracy(self, target: float) -> Optional[int]:
         for m in self.history:
@@ -109,6 +113,7 @@ class HFLSimulation:
         telemetry=None,
         cohort=None,
         server_momentum: float = 0.0,
+        serve=None,
     ):
         self.clients = clients
         self.assignment = assignment
@@ -117,6 +122,11 @@ class HFLSimulation:
         self.schedule = schedule
         self.rng = np.random.default_rng(seed)
         self.upp = upp
+        # evaluation-under-traffic hook (repro.serving.traffic.ServeTraffic):
+        # called with the post-reduce global model each cloud round; its
+        # draws come from a keyed side-channel generator and it only READS
+        # params, so serve=None runs are bit-identical to serve-on runs
+        self.serve = serve
         # per-round cohort sampling (repro.federated.sampling.CohortSpec):
         # draws come from the spec's keyed side-channel generator, so the
         # engine RNG stream below is untouched — cohort=None stays
@@ -343,6 +353,11 @@ class HFLSimulation:
                 self.accountant.on_cloud_sync(n)
                 if self.clock is not None:
                     self.clock.on_cloud_sync()
+                serve_rec = (
+                    self.serve.on_round(b, lambda gp=global_params: gp)
+                    if self.serve is not None
+                    else None
+                )
                 div = 0.0
                 if self.track_divergence:
                     for _ in range(self.schedule.cloud_period):
@@ -373,12 +388,14 @@ class HFLSimulation:
                     loss=float(np.mean(losses)) if losses else 0.0,
                     wall_s=round_wall,
                     sim_s=round_sim if self.clock is not None else None,
+                    **(serve_rec or {}),
                     **comm.take(),
                 )
         self.params = global_params
         return SimResult(
             history, self.accountant, global_params,
             telemetry=self.tel if self.tel.enabled else None,
+            serve_history=self.serve.history if self.serve is not None else None,
         )
 
 

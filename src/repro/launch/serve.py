@@ -4,9 +4,11 @@
 
 Runs through :class:`repro.serving.engine.ServeEngine`, so the timing
 printed here comes from the same telemetry spans every other entry point
-records (``docs/OBSERVABILITY.md``): tok/s is the ``decode`` span's token
-count over its duration, not an ad-hoc stopwatch.  ``--telemetry DIR``
-additionally writes the trace artifacts there.
+records (``docs/OBSERVABILITY.md``): tok/s is every emitted token — the
+``prefill`` span's (each prompt's first output token falls out of the
+prefill logits) plus the ``decode`` span's — over the combined span
+duration, not an ad-hoc stopwatch.  ``--telemetry DIR`` additionally
+writes the trace artifacts there.
 """
 from __future__ import annotations
 
@@ -51,9 +53,13 @@ def main() -> None:
     engine.run(reqs, **kw)
     decode = [s for s in tel.tracer.spans if s.name == "decode"][-1]
     prefill = [s for s in tel.tracer.spans if s.name == "prefill"][-1]
-    toks = decode.attrs.get("tokens", 0)
+    # every emitted token counts: the prefill span holds the first output
+    # token per prompt, the decode span the rest — summing both makes the
+    # rate exact (and non-zero) even at --tokens 1, where decode is empty
+    toks = prefill.attrs.get("tokens", 0) + decode.attrs.get("tokens", 0)
+    dur = prefill.duration + decode.duration
     print(f"{cfg.name}: prefill {prefill.duration*1e3:.1f} ms, "
-          f"{toks/max(decode.duration, 1e-9):.1f} tok/s (CPU)")
+          f"tokens={toks}, {toks/max(dur, 1e-9):.1f} tok/s (CPU)")
     if "flops" in decode.attrs:
         print(f"decode step: {decode.attrs['flops']:.3g} flops, "
               f"{decode.attrs['bytes_moved']:.3g} bytes moved (analytic)")

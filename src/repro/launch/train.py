@@ -14,7 +14,11 @@ trace.json / rounds.jsonl / summary.txt there (``docs/OBSERVABILITY.md``);
 ``--engine`` picks the simulation engine for the paper experiment;
 ``--faults chaos`` runs it under the fault-injection preset (client churn,
 mid-round upload losses with async retries, finite energy budgets,
-time-varying channels — ``repro.faults``).
+time-varying channels — ``repro.faults``); ``--serve Q`` hot-swaps the
+global model into serving after each cloud round and drives it with Q
+deterministic queries drawn from the scenario's own shards
+(``repro.serving.traffic``), reporting serve_qps / serve_acc /
+serve_staleness_rounds per round.
 """
 from __future__ import annotations
 
@@ -70,6 +74,14 @@ def run_paper(args) -> None:
         from repro.faults import FaultSpec
 
         faults = FaultSpec(seed=args.seed, **FAULT_PRESETS[args.faults])
+    serve = None
+    if args.serve:
+        from repro.serving import TrafficSpec
+
+        serve = TrafficSpec(
+            queries=args.serve, batch=args.serve_batch,
+            swap_every=args.swap_every, seed=args.seed,
+        )
     sc = build_scenario(args.dataset, scale=args.scale, seed=args.seed)
     a = sc.assign(args.strategy)
     print(f"strategy={args.strategy} KLD={a.kld_total:.3f}")
@@ -83,11 +95,18 @@ def run_paper(args) -> None:
         cohort=cohort,
         server_momentum=args.server_momentum,
         telemetry=args.telemetry or None,
+        serve=serve,
     )
+    serve_by_round = {r["round"]: r for r in (res.serve_history or [])}
     for m in res.history:
         extra = f" wall={m.wall_seconds:.2f}s"
         if m.sim_seconds:
             extra += f" sim={m.sim_seconds:.2f}s"
+        s = serve_by_round.get(m.cloud_round)
+        if s is not None:
+            extra += (f" serve_acc={s['serve_acc']:.3f}"
+                      f" qps={s['serve_qps']:.0f}"
+                      f" stale={s['serve_staleness_rounds']:.0f}")
         print(f"round {m.cloud_round}: acc={m.test_acc:.3f}{extra}")
     if faults is not None:
         t = res.accountant.totals()
@@ -163,6 +182,15 @@ def main() -> None:
                     choices=("uniform", "prate", "per_edge"))
     ap.add_argument("--server-momentum", type=float, default=0.0,
                     help="cloud-side momentum on the aggregated update")
+    ap.add_argument("--serve", type=int, default=0, metavar="Q",
+                    help="evaluation-under-traffic: serve Q queries per "
+                         "cloud round against the hot-swapped global model "
+                         "(deterministic draw from the scenario's shards)")
+    ap.add_argument("--serve-batch", type=int, default=32,
+                    help="serving batch size for --serve")
+    ap.add_argument("--swap-every", type=int, default=1,
+                    help="hot-swap the served model every K cloud rounds "
+                         "(staleness shows up in serve_staleness_rounds)")
     ap.add_argument("--lazy-eus", type=int, default=0, metavar="M",
                     help="streaming mode: lazy M-client population "
                          "(no per-client materialization; needs --cohort)")

@@ -160,10 +160,26 @@ def causal_mask(sq: int, sk: int, window: Optional[int] = None):
     return m[None, None]
 
 
-def full_attention(p, cfg: ModelConfig, x, positions, *, window=None, return_kv=False):
-    """Train / prefill self-attention over a full sequence."""
+def full_attention(
+    p, cfg: ModelConfig, x, positions, *, window=None, return_kv=False, pad_mask=None
+):
+    """Train / prefill self-attention over a full sequence.
+
+    ``pad_mask`` (B, S) bool — True at real tokens — excludes left-pad slots
+    from the key set (ragged-batch prefill).  The padded slots' own outputs
+    are garbage but nothing downstream reads them: decode masks them out of
+    the KV cache via the same offsets, and prefill logits come from the last
+    slot, which left-padding keeps real for every row.
+    """
     q, k, v = qkv_project(p, cfg, x, positions)
-    if cfg.use_flash:
+    if pad_mask is not None:
+        # masked path: serving prompts are short, so the dense sdpa mask is
+        # fine; flash/blockwise don't carry a key-validity mask
+        kr = _repeat_kv(k, cfg.q_per_kv)
+        vr = _repeat_kv(v, cfg.q_per_kv)
+        mask = causal_mask(x.shape[1], x.shape[1], window) & pad_mask[:, None, None, :]
+        out = sdpa(q, kr, vr, mask)
+    elif cfg.use_flash:
         from repro.kernels.ops import flash_attention as _flash
 
         out = _flash(q, k, v, causal=True, window=window)
@@ -204,18 +220,27 @@ def project_decode_kv(p, cfg: ModelConfig, x, position):
     return k_new, v_new
 
 
-def decode_attention(p, cfg: ModelConfig, x, cache_k, cache_v, position, *, window=None):
+def decode_attention(
+    p, cfg: ModelConfig, x, cache_k, cache_v, position, *, window=None, slot=None
+):
     """Single-token decode: x (B, 1, d); cache_k/v (B, S, Hkv, D) — the cache
-    ALREADY contains this token's k/v at slot ``position`` (caller scatters
-    first).  Attends over the valid prefix [0, position], optionally limited
-    to the last ``window`` positions.
+    ALREADY contains this token's k/v at buffer slot ``slot`` (caller
+    scatters first).  ``position`` (B,) is the token's LOGICAL position
+    (drives RoPE); ``slot`` (B,) its cache-buffer slot, defaulting to
+    ``position`` (the aligned layout, where the two coincide).  Left-padded
+    batches pass ``slot > position``: row i's real tokens occupy buffer
+    slots [slot - position, slot], and the pad slots below are masked out.
+    Attends over that prefix, optionally limited to the last ``window``
+    positions.
     """
+    if slot is None:
+        slot = position
     q, _, _ = qkv_project(p, cfg, x, positions=position[..., None])
     s = cache_k.shape[1]
     kv_pos = jnp.arange(s)[None, :]  # (1, S)
-    valid = kv_pos <= position[:, None]
+    valid = (kv_pos <= slot[:, None]) & (kv_pos >= (slot - position)[:, None])
     if window is not None:
-        valid = valid & (kv_pos > position[:, None] - window)
+        valid = valid & (kv_pos > slot[:, None] - window)
     k = _repeat_kv(cache_k, cfg.q_per_kv)
     v = _repeat_kv(cache_v, cfg.q_per_kv)
     mask = valid[:, None, None, :]  # (B, 1, 1, S)

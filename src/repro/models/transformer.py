@@ -137,19 +137,29 @@ def layer_apply_full(
     return grad_cast(constrain(x + h, "tokens")), aux, z
 
 
-def layer_apply_decode(p, cfg: ModelConfig, spec: LayerSpec, x, cache, position, *, window=None):
-    """One-token decode. cache is this layer's cache dict; returns (x, cache)."""
+def layer_apply_decode(
+    p, cfg: ModelConfig, spec: LayerSpec, x, cache, position, *, window=None, slot=None
+):
+    """One-token decode. cache is this layer's cache dict; returns (x, cache).
+
+    ``position`` (B,) is each row's logical token position (RoPE + validity);
+    ``slot`` (B,) its cache-buffer slot — they differ for left-padded ragged
+    batches, where every row writes the shared slot ``max_len + step`` but
+    row i's token logically sits at ``len_i + step``.  Defaults to
+    ``position`` (aligned layout).
+    """
+    if slot is None:
+        slot = position
     h = apply_norm(p["norm1"], x, cfg.norm_eps)
     if spec.kind == "attn":
         k_new, v_new = attn.project_decode_kv(p["mixer"], cfg, h, position)
-        # scatter this token's kv at slot `position` (same position per batch row)
-        ck = jax.lax.dynamic_update_slice(
-            cache["k"], k_new.astype(cache["k"].dtype), (0, position[0], 0, 0)
+        # per-row scatter of this token's kv at buffer slot `slot[i]`
+        bidx = jnp.arange(x.shape[0])
+        ck = cache["k"].at[bidx, slot].set(k_new[:, 0].astype(cache["k"].dtype))
+        cv = cache["v"].at[bidx, slot].set(v_new[:, 0].astype(cache["v"].dtype))
+        h = attn.decode_attention(
+            p["mixer"], cfg, h, ck, cv, position, window=window, slot=slot
         )
-        cv = jax.lax.dynamic_update_slice(
-            cache["v"], v_new.astype(cache["v"].dtype), (0, position[0], 0, 0)
-        )
-        h = attn.decode_attention(p["mixer"], cfg, h, ck, cv, position, window=window)
         cache = dict(cache, k=ck, v=cv)
     elif spec.kind == "mamba":
         h, new_state = mam.mamba_decode_step(p["mixer"], cfg, h, cache)
@@ -319,12 +329,16 @@ def _scan_blocks_with_cross(params, cfg, specs, x, positions, *, enc_out):
 # ---------------------------------------------------------------------------
 # prefill: full-sequence forward that also fills the decode caches
 # ---------------------------------------------------------------------------
-def layer_apply_prefill(p, cfg: ModelConfig, spec: LayerSpec, x, positions, max_seq, *, enc_kv=None):
+def layer_apply_prefill(
+    p, cfg: ModelConfig, spec: LayerSpec, x, positions, max_seq, *, enc_kv=None,
+    pad_mask=None,
+):
     """Full-sequence layer that returns (x, cache) for decode handoff."""
     h = apply_norm(p["norm1"], x, cfg.norm_eps)
     if spec.kind == "attn":
         h, k, v = attn.full_attention(
-            p["mixer"], cfg, h, positions, window=cfg.sliding_window, return_kv=True
+            p["mixer"], cfg, h, positions, window=cfg.sliding_window,
+            return_kv=True, pad_mask=pad_mask,
         )
         s = x.shape[1]
         pad = max_seq - s
@@ -351,15 +365,32 @@ def layer_apply_prefill(p, cfg: ModelConfig, spec: LayerSpec, x, positions, max_
     return x + hh, cache
 
 
-def prefill(params, cfg: ModelConfig, tokens, *, max_seq=None, enc_embeds=None):
+def prefill(
+    params, cfg: ModelConfig, tokens, *, max_seq=None, enc_embeds=None,
+    positions=None, pad_mask=None,
+):
     """Process the prompt, returning (last-position logits, decode cache).
 
     max_seq: cache capacity (>= prompt length); defaults to prompt length.
+    positions: (B, S) per-slot LOGICAL positions (defaults to ``arange``);
+        left-padded ragged batches pass ``max(slot - n_pads_row, 0)`` so RoPE
+        sees each row's true token positions.
+    pad_mask: (B, S) bool, True at real tokens — excludes left-pad slots
+        from the attention key set.  Only attention-only stacks support it:
+        mamba/rwkv recurrences are data-dependent, so pad tokens would
+        contaminate the handed-off state no matter the mask (serve such
+        families with exact-length buckets instead; see ``ServeEngine``).
     """
     specs, _ = block_spec(cfg)
+    if pad_mask is not None and any(s.kind != "attn" for s in specs):
+        raise ValueError(
+            "pad-masked prefill requires an attention-only stack; "
+            f"{cfg.name} has recurrent layers — use exact-length batches"
+        )
     max_seq = max_seq or tokens.shape[1]
     x = embed(params["embed"], tokens)
-    positions = jnp.arange(tokens.shape[1])[None, :]
+    if positions is None:
+        positions = jnp.arange(tokens.shape[1])[None, :]
     enc_out = None
     if cfg.family == "encdec":
         assert enc_embeds is not None
@@ -374,7 +405,8 @@ def prefill(params, cfg: ModelConfig, tokens, *, max_seq=None, enc_embeds=None):
                 else None
             )
             x, c = layer_apply_prefill(
-                block_p[pos], cfg, spec, x, positions, max_seq, enc_kv=kv
+                block_p[pos], cfg, spec, x, positions, max_seq, enc_kv=kv,
+                pad_mask=pad_mask,
             )
             caches.append(c)
         return x, tuple(caches)
@@ -428,8 +460,12 @@ def init_cache(cfg: ModelConfig, batch: int, max_seq: int, *, enc_embeds=None, p
     return tuple(caches)
 
 
-def decode_step(params, cfg: ModelConfig, token, cache, position):
-    """token: (B, 1) int32; position: (B,) int32 current slot.
+def decode_step(params, cfg: ModelConfig, token, cache, position, *, slot=None):
+    """token: (B, 1) int32; position: (B,) int32 logical token position.
+
+    ``slot`` (B,) int32 — the cache-buffer slot each row's k/v lands in —
+    defaults to ``position`` (aligned layout).  Left-padded ragged batches
+    pass the shared buffer slot while ``position`` stays per-row.
 
     Returns (logits (B, 1, V), new_cache).
     """
@@ -441,7 +477,8 @@ def decode_step(params, cfg: ModelConfig, token, cache, position):
         new_c = []
         for pos, spec in enumerate(specs):
             x, c = layer_apply_decode(
-                block_p[pos], cfg, spec, x, block_c[pos], position, window=cfg.sliding_window
+                block_p[pos], cfg, spec, x, block_c[pos], position,
+                window=cfg.sliding_window, slot=slot,
             )
             new_c.append(c)
         return x, tuple(new_c)

@@ -1,3 +1,4 @@
 from repro.serving.engine import Request, ServeEngine
+from repro.serving.traffic import ServeTraffic, TrafficSpec
 
-__all__ = ["Request", "ServeEngine"]
+__all__ = ["Request", "ServeEngine", "ServeTraffic", "TrafficSpec"]

@@ -2,9 +2,27 @@
 
 A deliberately simple production shape: fixed-capacity batch slots, greedy
 sampling, per-slot stop lengths.  Prefill fills the KV/state caches for a
-batch of prompts (padded to a common length); decode steps all active slots
-in lock-step (the decode_32k / long_500k dry-run shapes).  Works for every
-family (attention KV, mamba/rwkv state, whisper cross-attention).
+batch of prompts; decode steps all active slots in lock-step (the
+decode_32k / long_500k dry-run shapes).  Works for every family (attention
+KV, mamba/rwkv state, whisper cross-attention).
+
+Ragged batches (mixed prompt lengths) are exact — batched output is
+token-identical to serving each request alone (pinned by
+tests/test_serving.py):
+
+* attention-only stacks (dense / moe / encdec) run ONE left-padded prefill
+  with a pad mask + per-slot position offsets, then decode with a shared
+  buffer slot but per-row logical positions;
+* stacks with recurrent layers (hybrid mamba, rwkv) cannot mask pads out of
+  a data-dependent recurrence, so prompts are bucketed by exact length —
+  one prefill per distinct length (a compile per bucket shape; a fleet
+  server would quantize lengths) — and the per-bucket caches are
+  concatenated; decode then scatters at per-row slots.
+
+The engine also hot-swaps models under traffic: :meth:`swap` repoints the
+parameter tree between ``run`` calls without recompiling (the jitted
+prefill/decode are closed over the config, not the params), which is how
+``Scenario.simulate(serve=...)`` serves each cloud round's global model.
 """
 from __future__ import annotations
 
@@ -17,7 +35,7 @@ import numpy as np
 
 from repro.models import init_params
 from repro.models.config import ModelConfig
-from repro.models.transformer import decode_step, prefill
+from repro.models.transformer import block_spec, decode_step, prefill
 from repro.telemetry import NULL_TELEMETRY, coerce_telemetry
 
 
@@ -26,9 +44,24 @@ class Request:
     prompt: np.ndarray  # (L,) int32 token ids
     max_new_tokens: int = 16
     out: Optional[np.ndarray] = None
+    # set when the engine clamped max_new_tokens to the cache capacity
+    # (on_overflow="truncate"); with the default on_overflow="error" an
+    # over-capacity request raises instead of silently shortening `out`
+    truncated: bool = False
 
 
 class ServeEngine:
+    """Greedy batched decoding for one ``ModelConfig``.
+
+    on_overflow: what to do when a request cannot fit its prompt plus
+        ``max_new_tokens`` generated tokens into ``max_seq`` cache slots —
+        ``"error"`` (default) raises up front; ``"truncate"`` clamps the
+        budget and sets ``Request.truncated``.  Note the left-padded ragged
+        layout shares buffer slots across rows, so its capacity bound is
+        ``max(prompt_len) + max(max_new_tokens) <= max_seq``; exact-length
+        (uniform or bucketed-recurrent) batches bound per row.
+    """
+
     def __init__(
         self,
         cfg: ModelConfig,
@@ -37,60 +70,175 @@ class ServeEngine:
         max_seq: int = 256,
         seed: int = 0,
         telemetry=None,
+        on_overflow: str = "error",
     ):
+        if on_overflow not in ("error", "truncate"):
+            raise ValueError(f"on_overflow must be 'error'|'truncate', got {on_overflow!r}")
         self.cfg = cfg
         self.params = params if params is not None else init_params(
             jax.random.PRNGKey(seed), cfg
         )
         self.max_seq = max_seq
+        self.on_overflow = on_overflow
+        specs, _ = block_spec(cfg)
+        self._recurrent = any(s.kind != "attn" for s in specs)
         self._prefill = jax.jit(
             lambda p, t, **kw: prefill(p, cfg, t, max_seq=max_seq, **kw)
         )
-        self._step = jax.jit(lambda p, t, c, pos: decode_step(p, cfg, t, c, pos))
+        self._step = jax.jit(
+            lambda p, t, c, pos, slot: decode_step(p, cfg, t, c, pos, slot=slot)
+        )
         self.tel = coerce_telemetry(telemetry) or NULL_TELEMETRY
+        self.version = None  # opaque tag of the currently served model
 
+    def swap(self, params, *, version=None) -> None:
+        """Hot-swap the served parameter tree (same config/shapes).
+
+        No recompilation: the jitted prefill/decode close over the config
+        only, so the next ``run`` simply traces against the new tree's
+        (identical) avals.  ``version`` is an opaque tag (e.g. the cloud
+        round the tree came from) used for staleness accounting.
+        """
+        with self.tel.span("swap", model=self.cfg.name):
+            self.params = params
+            self.version = version
+
+    # -- prefill layouts ------------------------------------------------
+    def _prefill_ragged_attn(self, requests, lens, plen, kw):
+        """One left-padded prefill with pad mask + per-slot position offsets."""
+        b = len(requests)
+        offs = plen - lens  # (B,) left-pad count per row
+        toks = np.zeros((b, plen), np.int32)
+        for i, r in enumerate(requests):
+            toks[i, offs[i]:] = r.prompt
+        slots = np.arange(plen)[None, :]
+        positions = np.maximum(slots - offs[:, None], 0).astype(np.int32)
+        pad_mask = slots >= offs[:, None]
+        return self._prefill(
+            self.params, jnp.asarray(toks), positions=jnp.asarray(positions),
+            pad_mask=jnp.asarray(pad_mask), **kw
+        )
+
+    def _prefill_bucketed(self, requests, lens, kw):
+        """Exact-length prefill per distinct prompt length (recurrent stacks).
+
+        Pads never enter the recurrence; per-bucket caches are concatenated
+        along the batch axis (every cache leaf is (n_blocks, B, ...)) and
+        restored to request order.
+        """
+        order = []
+        logits_parts, cache_parts = [], []
+        for length in sorted(set(lens.tolist())):
+            idx = [i for i, l in enumerate(lens) if l == length]
+            order += idx
+            toks = np.stack([requests[i].prompt for i in idx]).astype(np.int32)
+            bkw = {
+                k: (v[np.asarray(idx)] if k == "enc_embeds" else v)
+                for k, v in kw.items()
+            }
+            lg, ch = self._prefill(self.params, jnp.asarray(toks), **bkw)
+            logits_parts.append(lg)
+            cache_parts.append(ch)
+        inv = np.argsort(np.asarray(order))
+        logits = jnp.concatenate(logits_parts, axis=0)[inv]
+        cache = jax.tree.map(
+            lambda *ls: jnp.concatenate(ls, axis=1)[:, inv], *cache_parts
+        )
+        return logits, cache
+
+    # -- serving --------------------------------------------------------
     def run(self, requests: List[Request], *, enc_embeds=None) -> List[Request]:
         if not requests:
             return requests
         tel = self.tel
         b = len(requests)
-        plen = max(len(r.prompt) for r in requests)
-        toks = np.zeros((b, plen), np.int32)
+        lens = np.asarray([len(r.prompt) for r in requests], np.int32)
+        if (lens < 1).any():
+            raise ValueError("empty prompt")
+        plen = int(lens.max())
+        if plen > self.max_seq:
+            raise ValueError(f"prompt length {plen} exceeds max_seq={self.max_seq}")
+        ragged = bool((lens != plen).any())
+        # buffer layout: exact-length rows start decoding at their own
+        # length; a left-padded ragged batch shares the buffer high-water
+        # slot, so every row starts at max(lens)
+        aligned = (not ragged) or self._recurrent
+        starts = lens if aligned else np.full(b, plen, np.int32)
+        # capacity (the early-break silent-truncation bug, fixed): each row
+        # stores its prompt plus budget-1 generated tokens (the last token
+        # is emitted, never cached), so `start + budget <= max_seq` is a
+        # safe uniform bound, tight at `plen + max_new_tokens == max_seq`
+        want = np.asarray([r.max_new_tokens for r in requests], np.int32)
+        if (want < 1).any():
+            raise ValueError("max_new_tokens must be >= 1")
+        cap = self.max_seq - starts
+        if (want > cap).any():
+            if self.on_overflow == "error":
+                i = int(np.argmax(want - cap))
+                raise ValueError(
+                    f"request {i}: prompt ({lens[i]}) + max_new_tokens "
+                    f"({want[i]}) exceeds max_seq={self.max_seq}"
+                    + ("" if aligned else
+                       " (left-padded ragged batches share buffer slots: "
+                       "the bound is max(prompt_len) + max_new_tokens)")
+                )
+            budgets = np.minimum(want, np.maximum(cap, 1))
+        else:
+            budgets = want
         for i, r in enumerate(requests):
-            toks[i, plen - len(r.prompt):] = r.prompt  # left-pad
+            r.truncated = bool(budgets[i] < want[i])
+        if (budgets < 1).any() or (starts >= self.max_seq).any():
+            raise ValueError(
+                f"no cache room to generate any token (max_seq={self.max_seq})"
+            )
         kw = {}
         if self.cfg.family == "encdec":
             assert enc_embeds is not None
             kw["enc_embeds"] = enc_embeds
         with tel.span("prefill", model=self.cfg.name, batch=b, prompt_len=plen) as sp:
-            cost = tel.jit_cost(
-                "serve_prefill", self._prefill, self.params, jnp.asarray(toks), **kw
-            )
-            if cost:
-                sp.set(**cost)
-            logits, cache = self._prefill(self.params, jnp.asarray(toks), **kw)
+            if not ragged:
+                toks = np.stack([r.prompt for r in requests]).astype(np.int32)
+                cost = tel.jit_cost(
+                    "serve_prefill", self._prefill, self.params,
+                    jnp.asarray(toks), **kw
+                )
+                if cost:
+                    sp.set(**cost)
+                logits, cache = self._prefill(self.params, jnp.asarray(toks), **kw)
+            elif self._recurrent:
+                logits, cache = self._prefill_bucketed(requests, lens, kw)
+            else:
+                logits, cache = self._prefill_ragged_attn(requests, lens, plen, kw)
             tok = jnp.argmax(logits[:, -1], -1)[:, None].astype(jnp.int32)
             np.asarray(tok)  # host sync: the span covers real prefill work
-        budget = max(r.max_new_tokens for r in requests)
+            sp.set(tokens=b)  # prefill emits one token per slot
+        budget = int(budgets.max())
         outs = [np.asarray(tok)[:, 0]]
+        starts_j = jnp.asarray(starts)
+        lens_j = jnp.asarray(lens)
         with tel.span("decode", model=self.cfg.name, batch=b) as sp:
             steps = 0
+            emitted = 0  # decode-emitted tokens actually kept in some `out`
             for i in range(budget - 1):
-                pos = jnp.full((b,), plen + i, jnp.int32)
-                if plen + i >= self.max_seq:
-                    break
+                pos = lens_j + i      # per-row logical position of the new token
+                # per-row buffer slot; rows already past their own budget
+                # keep stepping (lock-step batch) — clamp them in-bounds,
+                # their outputs are sliced away below
+                slot = jnp.minimum(starts_j + i, self.max_seq - 1)
                 if steps == 0:
                     cost = tel.jit_cost(
-                        "serve_decode_step", self._step, self.params, tok, cache, pos
+                        "serve_decode_step", self._step, self.params, tok,
+                        cache, pos, slot,
                     )
                     if cost:
                         sp.set(**cost)
-                logits, cache = self._step(self.params, tok, cache, pos)
+                logits, cache = self._step(self.params, tok, cache, pos, slot)
                 tok = jnp.argmax(logits[:, -1], -1)[:, None].astype(jnp.int32)
                 outs.append(np.asarray(tok)[:, 0])
                 steps += 1
-            sp.set(steps=steps, tokens=b * steps)
+                emitted += int((budgets > i + 1).sum())
+            sp.set(steps=steps, tokens=emitted)
         gen = np.stack(outs, axis=1)  # (b, T)
         for i, r in enumerate(requests):
-            r.out = gen[i, : r.max_new_tokens]
+            r.out = gen[i, : budgets[i]]
         return requests

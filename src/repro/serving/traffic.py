@@ -1,0 +1,147 @@
+"""Evaluation-under-traffic: deterministic query streams over the federation.
+
+The FLaaS back half (ROADMAP "Serve the federation"): after each cloud
+round the engines hand the CURRENT global model to a :class:`ServeTraffic`
+hook, which hot-swaps it behind a simulated query stream drawn from the
+scenario's own client shards and reports queries/sec, served-model
+staleness (rounds behind the trainer), and serve-side accuracy next to the
+training metrics — the first-class serving costs the resource-constrained
+FL surveys ask for (PAPERS.md 2308.13157, 2407.20573).
+
+Determinism contract (the ``CohortSpec`` pattern, ``federated.sampling``):
+:class:`TrafficSpec` draws every round's queries from a **keyed
+side-channel generator** — ``default_rng((seed, _S_TRAFFIC, round))`` —
+never from the engines' training RNG stream, and the hook only *reads*
+the global model.  Enabling ``Scenario.simulate(serve=...)`` therefore
+cannot perturb a training trajectory: serve-on vs serve-off runs are
+bit-identical (pinned by tests/test_serve_traffic.py).
+"""
+from __future__ import annotations
+
+import dataclasses
+import time
+from typing import Callable, List, Optional
+
+import jax
+import numpy as np
+
+from repro.telemetry import NULL_TELEMETRY, coerce_telemetry
+
+_S_TRAFFIC = 0xC0_4083  # side-channel RNG key tag (cf. sampling._S_COHORT)
+
+
+@dataclasses.dataclass(frozen=True)
+class TrafficSpec:
+    """Per-cloud-round query traffic against the served global model.
+
+    queries:    queries per cloud round (rounded UP to whole ``batch``es so
+                the jitted serve path sees one static batch shape).
+    batch:      serve batch size.
+    swap_every: hot-swap cadence in cloud rounds — 1 (default) swaps every
+                round (staleness 0); k > 1 serves a model up to k-1 rounds
+                stale, the staleness knob the FLaaS framing prices.
+    seed:       side-channel seed; draws are pure in ``(seed, cloud_round)``.
+    """
+
+    queries: int = 64
+    batch: int = 32
+    swap_every: int = 1
+    seed: int = 0
+
+    def __post_init__(self):
+        if self.queries < 1:
+            raise ValueError(f"queries must be >= 1, got {self.queries}")
+        if self.batch < 1:
+            raise ValueError(f"batch must be >= 1, got {self.batch}")
+        if self.swap_every < 1:
+            raise ValueError(f"swap_every must be >= 1, got {self.swap_every}")
+
+    def n_queries(self) -> int:
+        """Queries actually served per round (rounded up to full batches)."""
+        return -(-self.queries // self.batch) * self.batch
+
+    def draw(self, cloud_round: int, sizes) -> tuple:
+        """(client_ids, sample_idx) for round ``cloud_round``'s queries.
+
+        ``sizes`` — (M,) samples per client shard; queries sample a client
+        uniformly among non-empty shards, then a sample within it.  Pure in
+        ``(self.seed, cloud_round)``: every engine asking for round b's
+        traffic gets the same queries, and the training RNG is untouched.
+        """
+        sizes = np.asarray(sizes, np.int64)
+        elig = np.flatnonzero(sizes > 0)
+        if len(elig) == 0:
+            raise ValueError("no non-empty client shards to draw traffic from")
+        rng = np.random.default_rng((self.seed, _S_TRAFFIC, int(cloud_round)))
+        n = self.n_queries()
+        cids = elig[rng.integers(0, len(elig), size=n)]
+        idx = rng.integers(0, sizes[cids])
+        return cids, idx
+
+
+class ServeTraffic:
+    """Round hook: swap the global model in, drive one round of traffic.
+
+    Built by ``Scenario.simulate(serve=TrafficSpec(...))`` and called by the
+    engines after each cloud reduce with ``(cloud_round, params_fn)`` —
+    ``params_fn`` lazily unravels the flat global row into the program's
+    parameter tree (the ``FlatPack`` machinery), paid only on swap rounds.
+    Returns the round's serve record, which the engines merge into
+    ``Telemetry.on_round`` (→ ``rounds.jsonl``); the full per-round list
+    lands on ``SimResult.serve_history``.
+    """
+
+    def __init__(self, spec: TrafficSpec, clients, program, telemetry=None):
+        from repro.federated.programs import as_program
+
+        self.spec = spec
+        self.program = as_program(program)
+        self.tel = coerce_telemetry(telemetry) or NULL_TELEMETRY
+        self.shards = [c.shard for c in clients]
+        self.sizes = np.asarray([len(s) for s in self.shards], np.int64)
+        self._metric = jax.jit(self.program.metric)
+        self._params = None
+        self._last_swap: Optional[int] = None
+        self.history: List[dict] = []
+
+    def _gather(self, cids, idx) -> tuple:
+        x = np.stack([self.shards[c].x[i] for c, i in zip(cids, idx)])
+        y = np.asarray(
+            [self.shards[c].y[i] for c, i in zip(cids, idx)],
+            self.shards[cids[0]].y.dtype,
+        )
+        return x, y
+
+    def on_round(self, cloud_round: int, params_fn: Callable[[], dict]) -> dict:
+        b = int(cloud_round)
+        tel = self.tel
+        import jax.numpy as jnp
+
+        with tel.span("serve_round", round=b) as sp:
+            if self._params is None or b - self._last_swap >= self.spec.swap_every:
+                with tel.span("swap", round=b):
+                    self._params = params_fn()
+                    self._last_swap = b
+            staleness = b - self._last_swap
+            cids, idx = self.spec.draw(b, self.sizes)
+            n = len(cids)
+            t0 = time.perf_counter()
+            accs = []
+            for s in range(0, n, self.spec.batch):
+                x, y = self._gather(cids[s:s + self.spec.batch],
+                                    idx[s:s + self.spec.batch])
+                accs.append(float(
+                    self._metric(self._params, jnp.asarray(x), jnp.asarray(y))
+                ))
+            dt = max(time.perf_counter() - t0, 1e-9)
+            rec = {
+                "serve_qps": n / dt,
+                "serve_staleness_rounds": float(staleness),
+                "serve_acc": float(np.mean(accs)),
+            }
+            sp.set(queries=n, **rec)
+        if tel.enabled:
+            for k, v in rec.items():
+                tel.metrics.set_gauge(k, v)
+        self.history.append({"round": b, "queries": n, **rec})
+        return rec

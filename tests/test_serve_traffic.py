@@ -1,0 +1,123 @@
+"""Evaluation-under-traffic: TrafficSpec draws + Scenario.simulate(serve=...).
+
+Pins the two contracts the serving hook rides on:
+  * query draws come from a keyed side-channel RNG (the CohortSpec
+    pattern) — pure in (seed, cloud_round), never the engines' stream;
+  * enabling serve= cannot perturb training: serve-on and serve-off runs
+    produce bit-identical parameters and metric histories.
+"""
+import jax
+import numpy as np
+import pytest
+
+from repro.core.hfl import HFLSchedule
+from repro.federated import build_scenario
+from repro.serving import TrafficSpec
+
+
+@pytest.fixture(scope="module")
+def scenario():
+    sc = build_scenario("heartbeat", scale=0.05, seed=0)
+    return sc, sc.assign("random", seed=0)
+
+
+def test_traffic_draw_deterministic():
+    spec = TrafficSpec(queries=10, batch=4, seed=7)
+    assert spec.n_queries() == 12  # rounded UP to whole batches
+    sizes = np.array([0, 5, 9, 3])
+    c1, i1 = spec.draw(3, sizes)
+    c2, i2 = spec.draw(3, sizes)
+    np.testing.assert_array_equal(c1, c2)
+    np.testing.assert_array_equal(i1, i2)
+    c3, i3 = spec.draw(4, sizes)  # a different round draws differently
+    assert not (np.array_equal(c1, c3) and np.array_equal(i1, i3))
+    assert len(c1) == 12
+    assert (sizes[c1] > 0).all(), "empty shards must never be drawn"
+    assert (i1 < sizes[c1]).all() and (i1 >= 0).all()
+
+
+def test_traffic_spec_validation():
+    with pytest.raises(ValueError):
+        TrafficSpec(queries=0)
+    with pytest.raises(ValueError):
+        TrafficSpec(batch=0)
+    with pytest.raises(ValueError):
+        TrafficSpec(swap_every=0)
+
+
+@pytest.mark.parametrize("engine", ["reference", "sync", "async"])
+def test_simulate_serve_reports(engine, scenario, tmp_path):
+    sc, a = scenario
+    res = sc.simulate(
+        a.lam, 2, schedule=HFLSchedule(1, 1), seed=0, engine=engine,
+        serve=TrafficSpec(queries=8, batch=8, seed=3),
+        telemetry=str(tmp_path / engine),
+    )
+    assert res.serve_history is not None and len(res.serve_history) == 2
+    for b, rec in enumerate(res.serve_history, start=1):
+        assert rec["round"] == b and rec["queries"] == 8
+        assert rec["serve_qps"] > 0
+        assert rec["serve_staleness_rounds"] == 0.0  # swap_every=1
+        assert 0.0 <= rec["serve_acc"] <= 1.0
+    # serve gauges land in rounds.jsonl records next to training metrics
+    tel = res.telemetry
+    assert len(tel.rounds) == 2
+    for rec in tel.rounds:
+        assert rec["serve_qps"] > 0
+        assert "serve_staleness_rounds" in rec and "serve_acc" in rec
+    # and in the metrics snapshot (the CI serve smoke asserts on these)
+    gauges = tel.metrics.snapshot()["gauges"]
+    assert gauges["serve_qps"] > 0
+    assert gauges["serve_staleness_rounds"] <= 1.0
+    # span taxonomy: serve_round wraps swap; prefill/decode live in ServeEngine
+    names = {s.name for s in tel.tracer.spans}
+    assert {"serve_round", "swap"} <= names
+
+
+def test_serve_off_trajectory_unchanged(scenario):
+    """serve= must be a pure observer: bit-identical params + history."""
+    sc, a = scenario
+    kw = dict(schedule=HFLSchedule(1, 1), seed=0, engine="sync")
+    on = sc.simulate(a.lam, 2, serve=TrafficSpec(queries=8, batch=8), **kw)
+    off = sc.simulate(a.lam, 2, **kw)
+    for x, y in zip(jax.tree.leaves(on.final_params), jax.tree.leaves(off.final_params)):
+        np.testing.assert_array_equal(np.asarray(x), np.asarray(y))
+    assert [m.test_acc for m in on.history] == [m.test_acc for m in off.history]
+    assert off.serve_history is None
+
+
+def test_swap_cadence_staleness(scenario):
+    """swap_every=2: the served model alternates fresh / one round stale."""
+    sc, a = scenario
+    res = sc.simulate(
+        a.lam, 4, schedule=HFLSchedule(1, 1), seed=0, engine="sync",
+        serve=TrafficSpec(queries=8, batch=8, swap_every=2),
+    )
+    stale = [r["serve_staleness_rounds"] for r in res.serve_history]
+    assert stale == [0.0, 1.0, 0.0, 1.0]
+
+
+def test_serve_draws_match_across_engines(scenario):
+    """Round b's traffic is engine-independent (pure in (seed, round))."""
+    sc, a = scenario
+    spec = TrafficSpec(queries=8, batch=8, seed=5)
+    accs = {}
+    for engine in ("reference", "sync"):
+        res = sc.simulate(
+            a.lam, 2, schedule=HFLSchedule(1, 1), seed=0,
+            engine=engine, serve=spec,
+        )
+        accs[engine] = [r["serve_acc"] for r in res.serve_history]
+    assert accs["reference"] == accs["sync"]
+
+
+def test_serve_rejects_bad_inputs(scenario):
+    sc, a = scenario
+    with pytest.raises(TypeError):
+        sc.simulate(a.lam, 1, serve=32)  # must be a TrafficSpec
+    mix = build_scenario(
+        "heartbeat", model_mix={"cnn": 12, "mlp": 6}, scale=0.02, seed=0
+    )
+    am = mix.assign("random", seed=0)
+    with pytest.raises(ValueError, match="hetero"):
+        mix.simulate(am.lam, 1, serve=TrafficSpec(queries=8, batch=8))
